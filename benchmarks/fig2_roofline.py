@@ -1,0 +1,46 @@
+"""Paper Fig. 2: inter-node roofline for SpMM and SpGEMM.
+
+SpMM: isolates-subgraph2-like matrix (m = k = 17.5M, nnz = 5.2B) on 24 GPUs,
+sweeping the dense-matrix width N.  SpGEMM: isolates-subgraph4-ish at
+different scales with measured-average compression factors.  Reported for
+the paper's Summit constants AND re-parameterized for TPU v5e.
+"""
+from __future__ import annotations
+
+from repro.core.roofline import (SUMMIT_V100, TPU_V5E, spgemm_model,
+                                 spmm_model)
+
+ISOLATES_M = 17_500_000
+ISOLATES_NNZ = 5.2e9
+
+
+def run():
+    rows = []
+    d = ISOLATES_NNZ / (ISOLATES_M ** 2)
+    for mach in (SUMMIT_V100, TPU_V5E):
+        for n in (32, 128, 512, 1024):
+            m = spmm_model(ISOLATES_M, ISOLATES_M, n, 24, d, mach)
+            rows.append((f"fig2,spmm,{mach.name},n={n}",
+                         m["perf"] / 1e9,
+                         f"ai_net={m['ai_net']:.2f};"
+                         f"{'net' if m['net_bound'] else 'local'}-bound"))
+        # SpGEMM at different scales; cf ~ 4 flops/nnz(C) is representative
+        # of the isolates matrices (paper measures experimentally)
+        for p in (24, 96, 384):
+            flops = 2.0 * 4.0 * ISOLATES_NNZ / p   # per-GPU share
+            m = spgemm_model(flops, 4.0, ISOLATES_M, ISOLATES_M, ISOLATES_M,
+                             p, d, mach)
+            rows.append((f"fig2,spgemm,{mach.name},p={p}",
+                         m["perf"] / 1e9,
+                         f"ai_net={m['ai_net']:.2f};"
+                         f"{'net' if m['net_bound'] else 'local'}-bound"))
+    return rows
+
+
+def main():
+    for name, val, extra in run():
+        print(f"{name},{val:.2f},GF/s/chip;{extra}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Paper Figs. 3/4: SpMM strong scaling, all algorithms.
+
+CPU measurement of algorithmic behaviour: wall-time of each distributed
+algorithm on 1/4/9(/16) fake host devices for an R-MAT matrix at dense
+widths N in {128, 512} (the paper's widths), plus model-predicted Summit /
+TPU-v5e times for the same tiling.  Run in a subprocess per device count
+(jax locks the device count at first init); this module is invoked by
+benchmarks.run in-process for the current device count or standalone:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=9 \
+  PYTHONPATH=src python -m benchmarks.fig34_spmm_scaling
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def run(scale: int = 10, widths=(128, 512), repeats: int = 3):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import spmm as dspmm
+    from repro.core.bsr import TiledBSR, rmat_matrix
+    from repro.core.dist import make_grid_mesh
+    from repro.core.grid import ProcessGrid
+    from repro.core.roofline import SUMMIT_V100, TPU_V5E, spmm_model
+
+    n_dev = len(jax.devices())
+    g = int(np.sqrt(n_dev))
+    rows = []
+    a = rmat_matrix(scale, 8, seed=1)
+    m = a.shape[0]
+    density = float(a.mean())
+    for width in widths:
+        b = np.random.default_rng(0).standard_normal(
+            (m, width)).astype(np.float32)
+        grid = ProcessGrid(g, g)
+        mesh = make_grid_mesh(g)
+        a_t = TiledBSR.from_dense(a, grid, block_size=16)
+        b_j = jnp.asarray(b)
+        for alg in dspmm.ALGORITHMS:
+            fn = lambda: dspmm.spmm(a_t, b_j, mesh=mesh, algorithm=alg,
+                                    impl="ref").block_until_ready()
+            fn()  # compile
+            t0 = time.perf_counter()
+            for _ in range(repeats):
+                fn()
+            dt = (time.perf_counter() - t0) / repeats
+            rows.append((f"fig34,spmm,{alg},p={n_dev},n={width}",
+                         dt * 1e6, "us_per_call"))
+        pred = spmm_model(m, m, width, max(n_dev, 1), density, SUMMIT_V100)
+        flops = 2 * density * m * m * width
+        rows.append((f"fig34,model_summit,p={n_dev},n={width}",
+                     flops / max(pred["perf"], 1) / max(n_dev, 1) * 1e6,
+                     "us_predicted"))
+        pred_t = spmm_model(m, m, width, max(n_dev, 1), density, TPU_V5E)
+        rows.append((f"fig34,model_tpuv5e,p={n_dev},n={width}",
+                     flops / max(pred_t["perf"], 1) / max(n_dev, 1) * 1e6,
+                     "us_predicted"))
+    return rows
+
+
+def main():
+    for name, val, unit in run():
+        print(f"{name},{val:.1f},{unit}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Local Pallas kernel micro-bench (interpret mode on CPU) + oracle check.
+
+On real TPU hardware the same harness times the compiled kernels; here
+interpret-mode wall time is only a correctness-path proxy, so we also report
+the jnp-reference time (the number that matters on CPU) and the kernel's
+modelled MXU utilization on v5e.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def run(repeats: int = 3):
+    import jax.numpy as jnp
+
+    from repro.core.bsr import BSR, random_sparse
+    from repro.kernels import ops
+
+    rows = []
+    for m, k, n, bs, dens in ((256, 256, 256, 32, 0.1),
+                              (512, 512, 128, 64, 0.05)):
+        a_d = random_sparse(m, k, dens, seed=0)
+        b = np.random.default_rng(0).standard_normal((k, n)).astype(
+            np.float32)
+        a = BSR.from_dense(a_d, bs)
+        b_j = jnp.asarray(b)
+
+        ref = lambda: ops.bsr_spmm(a, b_j, impl="ref").block_until_ready()
+        ref()
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            ref()
+        t_ref = (time.perf_counter() - t0) / repeats
+        err = float(np.abs(np.asarray(ops.bsr_spmm(a, b_j, impl="interpret",
+                                                   block_n=min(n, 128)))
+                           - a_d @ b).max())
+        flops = a.flops(n)
+        rows.append((f"kernel,bsr_spmm,{m}x{k}x{n},bs={bs},d={dens}",
+                     t_ref * 1e6,
+                     f"us_ref;pallas_err={err:.1e};"
+                     f"mxu_s_v5e={flops / 197e12:.2e}"))
+    return rows
+
+
+def main():
+    for name, val, unit in run():
+        print(f"{name},{val:.1f},{unit}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,value,unit`` CSV.  Figures needing multiple device counts are
+run in subprocesses (jax locks the host device count at first init); the
+rest run in-process.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig1 fig2  # subset
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+SCALING_DEVICE_COUNTS = (1, 4, 9)
+
+
+def _run_subprocess(module: str, devices: int) -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get(
+        "PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-m", module], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    if out.returncode != 0:
+        tail = out.stderr.strip().splitlines()[-1] if out.stderr else "?"
+        print(f"{module},ERROR,{tail}")
+    else:
+        sys.stdout.write(out.stdout)
+
+
+def main() -> None:
+    which = set(sys.argv[1:]) or {"fig1", "fig2", "fig34", "fig5", "table2",
+                                  "kernels"}
+    if "fig1" in which:
+        from benchmarks import fig1_load_imbalance
+        fig1_load_imbalance.main()
+    if "fig2" in which:
+        from benchmarks import fig2_roofline
+        fig2_roofline.main()
+    if "fig34" in which:
+        for p in SCALING_DEVICE_COUNTS:
+            _run_subprocess("benchmarks.fig34_spmm_scaling", p)
+    if "fig5" in which:
+        for p in SCALING_DEVICE_COUNTS:
+            _run_subprocess("benchmarks.fig5_spgemm_scaling", p)
+    if "table2" in which:
+        from benchmarks import table2_breakdown
+        table2_breakdown.main()
+    if "kernels" in which:
+        from benchmarks import kernels_bench
+        kernels_bench.main()
+
+
+if __name__ == "__main__":
+    main()

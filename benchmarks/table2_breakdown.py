@@ -1,0 +1,65 @@
+"""Paper Table 2: component breakdown (Comp / Comm / Acc / Load-imb).
+
+The paper instruments wall-time per component on Summit/DGX-2.  Here the
+breakdown is *modelled* per algorithm from the tile structure and machine
+constants (the same cost decomposition the paper tabulates), for an R-MAT
+matrix on a 10x10-style grid (we use the largest square grid available):
+
+  Comp  = max-device local flops / local peak
+  Comm  = per-iteration tile bytes / net bw (x iterations)
+  Acc   = C-tile routing bytes (stationary-A only)
+  LoadI = end-to-end (async) or per-stage (BSP) imbalance penalty
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def run(scale: int = 12, g: int = 10, width: int = 256):
+    from repro.core.bsr import rmat_edges
+    from repro.core.roofline import SUMMIT_V100, spmm_local_ai, local_peak
+    from repro.core.schedule import stage_imbalance
+    import scipy.sparse as sps
+
+    e = rmat_edges(scale, 8, seed=3)
+    n = 1 << scale
+    a = sps.csr_matrix((np.ones(len(e), np.float32), (e[:, 0], e[:, 1])),
+                       shape=(n, n))
+    a.data[:] = 1.0
+    ts = n // g
+    nnz_tile = np.zeros((g, g))
+    rows_idx = np.repeat(np.arange(n), np.diff(a.indptr))
+    np.add.at(nnz_tile, (np.minimum(rows_idx // ts, g - 1),
+                         np.minimum(a.indices // ts, g - 1)), 1.0)
+    mach = SUMMIT_V100
+    w = mach.word_bytes
+    d = a.nnz / n / n
+    flops_tile = 2.0 * nnz_tile * (width / g)     # per k-stage local flops
+    per_stage, end_to_end = stage_imbalance(nnz_tile)
+    peak = local_peak(spmm_local_ai(n, n, width, g * g, d, w), mach)
+
+    out = []
+    for alg, n_comm_tiles, acc_tiles, imb in (
+            ("summa_bcast", 2 * g, 0, per_stage),
+            ("ring_c", 2 * g, 0, end_to_end),
+            ("ring_a", g, g, end_to_end)):
+        comp = flops_tile.sum() / (g * g) / peak * g  # avg per-device, all k
+        a_bytes = w * (2 * nnz_tile.mean() + ts + 1)
+        b_bytes = w * ts * (width / g)
+        comm = n_comm_tiles * (a_bytes + b_bytes) / mach.net_bw
+        acc = acc_tiles * (w * ts * (width / g)) / mach.net_bw
+        load = comp * (imb - 1.0)
+        out.append((f"table2,{alg},comp", comp * 1e6, "us"))
+        out.append((f"table2,{alg},comm", comm * 1e6, "us"))
+        out.append((f"table2,{alg},acc", acc * 1e6, "us"))
+        out.append((f"table2,{alg},load_imb", load * 1e6, "us"))
+    return out
+
+
+def main():
+    for name, val, unit in run():
+        print(f"{name},{val:.2f},{unit}")
+
+
+if __name__ == "__main__":
+    main()

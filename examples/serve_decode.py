@@ -1,0 +1,57 @@
+"""Serve a small model with batched requests: prefill + greedy decode.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py [--arch recurrentgemma-2b]
+
+Exercises the full serving path (batched prefill, ring-buffer KV caches /
+recurrent states, stepwise decode) and verifies the decoded continuation
+against a full-forward recomputation.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="recurrentgemma-2b")
+    p.add_argument("--requests", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=24)
+    p.add_argument("--gen-len", type=int, default=12)
+    args = p.parse_args()
+
+    import jax.numpy as jnp
+    import jax
+
+    from repro.configs import get_config
+    from repro.launch.serve import serve
+    from repro.models import lm, transformer as tf
+
+    cfg = get_config(args.arch, smoke=True)
+    out = serve(cfg, requests=args.requests, prompt_len=args.prompt_len,
+                gen_len=args.gen_len, seed=0)
+    print(f"[serve] {args.arch}: prefill {out['prefill_s']:.2f}s, "
+          f"decode {out['decode_s']:.2f}s "
+          f"({out['decode_tok_per_s']:.1f} tok/s on CPU)")
+    print(f"[serve] generations:\n{out['generated']}")
+
+    # verify greedy decode against teacher-forced full forward
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (2, args.prompt_len)), jnp.int32)
+    gen = lm.greedy_decode(params, {"tokens": prompts}, cfg, steps=4,
+                           max_len=args.prompt_len + 8)
+    full = jnp.concatenate([prompts, gen[:, :3]], axis=1)
+    logits, _, _ = tf.forward(params, {"tokens": full}, cfg)
+    redo = jnp.argmax(logits[:, args.prompt_len - 1:], axis=-1)
+    assert (np.asarray(redo[:, :4]) == np.asarray(gen)).all(), \
+        "greedy decode disagrees with teacher-forced forward"
+    print("[serve] greedy decode == teacher-forced forward ✓")
+
+
+if __name__ == "__main__":
+    main()

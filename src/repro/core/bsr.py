@@ -1,0 +1,311 @@
+"""Block-sparse (BSR) matrix pytrees and generators.
+
+The paper stores each sparse tile as CSR (three RDMA-visible arrays:
+values / rowptr / colind).  Scalar CSR wastes a TPU's MXU, so the TPU-native
+data structure is *block* CSR: nonzeros are grouped into dense
+``bs x bs`` blocks (bs = 128 in production, smaller in tests), and sparsity
+lives at block granularity.  Blocks multiply on the MXU at full speed; the
+block mask plays the role of the CSR structure arrays.
+
+Two layouts:
+
+* :class:`BSR` — one flat, statically-padded block list (sorted by block row)
+  describing a single local matrix.  This is the layout the Pallas kernel
+  consumes (scalar-prefetch of ``rows``/``cols`` drives the BlockSpec index
+  maps).
+* :class:`TiledBSR` — a ``grid.rows x grid.cols`` array of equally-padded BSR
+  tiles for the distributed algorithms.  Uniform padding gives every device a
+  static shape; the *padding itself* is the TPU manifestation of the paper's
+  load imbalance (zero blocks still burn MXU cycles), which is exactly what
+  the static rebalancing scheduler (``core/schedule.py``) shrinks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .grid import ProcessGrid, ceil_div, pad_to_multiple
+
+__all__ = ["BSR", "TiledBSR", "rmat_edges", "rmat_matrix", "random_sparse"]
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["blocks", "rows", "cols"],
+    meta_fields=["shape", "block_size", "nnzb", "logical_shape"],
+)
+@dataclasses.dataclass
+class BSR:
+    """Flat padded block-sparse matrix.
+
+    blocks : f[capacity, bs, bs]  — dense data per stored block (zeros pad)
+    rows   : i32[capacity]        — block-row of each stored block, sorted
+    cols   : i32[capacity]        — block-col of each stored block
+    shape  : (m, n) logical shape (multiple of bs after construction padding)
+    nnzb   : number of *valid* blocks (static Python int; <= capacity)
+    """
+
+    blocks: jnp.ndarray
+    rows: jnp.ndarray
+    cols: jnp.ndarray
+    shape: Tuple[int, int]
+    block_size: int
+    nnzb: int
+    logical_shape: Optional[Tuple[int, int]] = None
+
+    # ---------------------------------------------------------------- basics
+    @property
+    def capacity(self) -> int:
+        return self.blocks.shape[0]
+
+    @property
+    def n_block_rows(self) -> int:
+        return self.shape[0] // self.block_size
+
+    @property
+    def n_block_cols(self) -> int:
+        return self.shape[1] // self.block_size
+
+    @property
+    def dtype(self):
+        return self.blocks.dtype
+
+    def block_fill_ratio(self) -> float:
+        """Fraction of stored block entries that are nonzero (1.0 = perfect)."""
+        nz = np.count_nonzero(np.asarray(self.blocks[: self.nnzb]))
+        denom = max(self.nnzb, 1) * self.block_size**2
+        return float(nz) / float(denom)
+
+    def flops(self, n_cols_dense: int) -> int:
+        """MXU flops of BSR @ dense-with-n_cols (2*nnzb*bs^2*n)."""
+        return 2 * self.nnzb * self.block_size**2 * n_cols_dense
+
+    # ----------------------------------------------------------- conversions
+    @classmethod
+    def from_dense(
+        cls,
+        dense,
+        block_size: int,
+        capacity: Optional[int] = None,
+        dtype=None,
+    ) -> "BSR":
+        dense = np.asarray(dense)
+        m, n = dense.shape
+        mp, np_ = pad_to_multiple(m, block_size), pad_to_multiple(n, block_size)
+        padded = np.zeros((mp, np_), dtype=dense.dtype)
+        padded[:m, :n] = dense
+        nbr, nbc = mp // block_size, np_ // block_size
+        view = padded.reshape(nbr, block_size, nbc, block_size).transpose(0, 2, 1, 3)
+        mask = np.abs(view).sum(axis=(2, 3)) != 0
+        rr, cc = np.nonzero(mask)  # np.nonzero returns row-major (sorted by row)
+        nnzb = len(rr)
+        cap = capacity if capacity is not None else max(nnzb, 1)
+        if nnzb > cap:
+            raise ValueError(f"capacity {cap} < nnzb {nnzb}")
+        bs = block_size
+        blocks = np.zeros((cap, bs, bs), dtype=dense.dtype)
+        rows = np.zeros((cap,), dtype=np.int32)
+        cols = np.zeros((cap,), dtype=np.int32)
+        blocks[:nnzb] = view[rr, cc]
+        rows[:nnzb] = rr
+        cols[:nnzb] = cc
+        if nnzb > 0:  # keep padding sorted: repeat the last (row, col)
+            rows[nnzb:] = rr[-1]
+            cols[nnzb:] = cc[-1]
+        out_dtype = dtype or dense.dtype
+        return cls(
+            blocks=jnp.asarray(blocks, dtype=out_dtype),
+            rows=jnp.asarray(rows),
+            cols=jnp.asarray(cols),
+            shape=(mp, np_),
+            block_size=bs,
+            nnzb=nnzb,
+            logical_shape=(m, n),
+        )
+
+    @classmethod
+    def from_scipy(cls, sp_mat, block_size: int, capacity: Optional[int] = None,
+                   dtype=None) -> "BSR":
+        import scipy.sparse as sps
+
+        sp_mat = sps.csr_matrix(sp_mat)
+        return cls.from_dense(sp_mat.toarray(), block_size, capacity, dtype)
+
+    def to_dense(self) -> jnp.ndarray:
+        bs = self.block_size
+        nbr, nbc = self.n_block_rows, self.n_block_cols
+        out = jnp.zeros((nbr, nbc, bs, bs), dtype=self.dtype)
+        valid = (jnp.arange(self.capacity) < self.nnzb)[:, None, None]
+        contrib = jnp.where(valid, self.blocks, 0)
+        out = out.at[self.rows, self.cols].add(contrib)
+        return out.transpose(0, 2, 1, 3).reshape(nbr * bs, nbc * bs)
+
+    def with_capacity(self, capacity: int) -> "BSR":
+        """Re-pad to a new (>= nnzb) capacity — used to unify tile shapes."""
+        if capacity < self.nnzb:
+            raise ValueError(f"capacity {capacity} < nnzb {self.nnzb}")
+        pad = capacity - self.capacity
+        if pad == 0:
+            return self
+        if pad < 0:
+            return BSR(self.blocks[:capacity], self.rows[:capacity],
+                       self.cols[:capacity], self.shape, self.block_size,
+                       self.nnzb, self.logical_shape)
+        last_r = self.rows[-1] if self.capacity else jnp.zeros((), jnp.int32)
+        last_c = self.cols[-1] if self.capacity else jnp.zeros((), jnp.int32)
+        blocks = jnp.concatenate(
+            [self.blocks,
+             jnp.zeros((pad, self.block_size, self.block_size), self.dtype)])
+        rows = jnp.concatenate([self.rows, jnp.full((pad,), last_r, jnp.int32)])
+        cols = jnp.concatenate([self.cols, jnp.full((pad,), last_c, jnp.int32)])
+        return BSR(blocks, rows, cols, self.shape, self.block_size, self.nnzb,
+                   self.logical_shape)
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["blocks", "rows", "cols", "counts"],
+    meta_fields=["shape", "block_size", "grid_shape", "capacity",
+                 "logical_shape"],
+)
+@dataclasses.dataclass
+class TiledBSR:
+    """A grid of uniformly-padded BSR tiles (the distributed data structure).
+
+    blocks : f[gr, gc, cap, bs, bs]
+    rows   : i32[gr, gc, cap]   block-row *within the tile*
+    cols   : i32[gr, gc, cap]   block-col *within the tile*
+    counts : i32[gr, gc]        valid blocks per tile (the load-imbalance map)
+    """
+
+    blocks: jnp.ndarray
+    rows: jnp.ndarray
+    cols: jnp.ndarray
+    counts: jnp.ndarray
+    shape: Tuple[int, int]      # padded global shape
+    block_size: int
+    grid_shape: Tuple[int, int]
+    capacity: int
+    logical_shape: Optional[Tuple[int, int]] = None
+
+    @property
+    def tile_shape(self) -> Tuple[int, int]:
+        return (self.shape[0] // self.grid_shape[0],
+                self.shape[1] // self.grid_shape[1])
+
+    @property
+    def dtype(self):
+        return self.blocks.dtype
+
+    @classmethod
+    def from_dense(cls, dense, grid: ProcessGrid, block_size: int,
+                   capacity: Optional[int] = None, dtype=None) -> "TiledBSR":
+        dense = np.asarray(dense)
+        m, n = dense.shape
+        tm = pad_to_multiple(ceil_div(m, grid.rows), block_size)
+        tn = pad_to_multiple(ceil_div(n, grid.cols), block_size)
+        mp, np_ = tm * grid.rows, tn * grid.cols
+        padded = np.zeros((mp, np_), dtype=dense.dtype)
+        padded[:m, :n] = dense
+        tiles = []
+        for i in range(grid.rows):
+            row = []
+            for j in range(grid.cols):
+                row.append(BSR.from_dense(
+                    padded[i * tm:(i + 1) * tm, j * tn:(j + 1) * tn],
+                    block_size, dtype=dtype))
+            tiles.append(row)
+        cap = capacity if capacity is not None else max(
+            max(t.nnzb for t in row) for row in tiles)
+        cap = max(cap, 1)
+        tiles = [[t.with_capacity(cap) for t in row] for row in tiles]
+        blocks = jnp.stack([jnp.stack([t.blocks for t in row]) for row in tiles])
+        rows_ = jnp.stack([jnp.stack([t.rows for t in row]) for row in tiles])
+        cols_ = jnp.stack([jnp.stack([t.cols for t in row]) for row in tiles])
+        counts = jnp.asarray(
+            [[t.nnzb for t in row] for row in tiles], dtype=jnp.int32)
+        return cls(blocks=blocks, rows=rows_, cols=cols_, counts=counts,
+                   shape=(mp, np_), block_size=block_size,
+                   grid_shape=(grid.rows, grid.cols), capacity=cap,
+                   logical_shape=(m, n))
+
+    def to_dense(self) -> jnp.ndarray:
+        gr, gc = self.grid_shape
+        tm, tn = self.tile_shape
+        out = np.zeros(self.shape, dtype=self.blocks.dtype)
+        for i in range(gr):
+            for j in range(gc):
+                t = BSR(self.blocks[i, j], self.rows[i, j], self.cols[i, j],
+                        (tm, tn), self.block_size, int(self.counts[i, j]))
+                out[i * tm:(i + 1) * tm, j * tn:(j + 1) * tn] = np.asarray(
+                    t.to_dense())
+        return jnp.asarray(out)
+
+    def tile(self, i: int, j: int) -> BSR:
+        return BSR(self.blocks[i, j], self.rows[i, j], self.cols[i, j],
+                   self.tile_shape, self.block_size, int(self.counts[i, j]))
+
+    # ------------------------------------------------------ imbalance metrics
+    def load_imbalance(self) -> float:
+        """max/avg valid-block count over tiles — the paper's Table 1 metric."""
+        c = np.asarray(self.counts, dtype=np.float64)
+        avg = c.mean()
+        return float(c.max() / avg) if avg > 0 else 1.0
+
+    def padded_flop_waste(self) -> float:
+        """Fraction of MXU block-matmuls that operate on padding.
+
+        Uniform static padding means every device executes ``capacity`` block
+        products per tile; only ``counts`` of them are real.  This is the
+        paper's per-stage load imbalance made physical on a TPU.
+        """
+        c = np.asarray(self.counts, dtype=np.float64)
+        total = self.capacity * c.size
+        return float(1.0 - c.sum() / total) if total else 0.0
+
+
+# --------------------------------------------------------------------------
+# Generators
+# --------------------------------------------------------------------------
+def rmat_edges(scale: int, edgefactor: int = 8,
+               a: float = 0.6, b: float = 0.4 / 3, c: float = 0.4 / 3,
+               d: float = 0.4 / 3, seed: int = 0) -> np.ndarray:
+    """R-MAT edge list (paper Fig. 1 uses a=0.6, b=c=d=0.4/3, ef=8, scale 17).
+
+    Returns int64[nedges, 2].  Vectorized recursive bit sampling.
+    """
+    rng = np.random.default_rng(seed)
+    n_edges = edgefactor << scale
+    probs = np.array([a, b, c, d], dtype=np.float64)
+    probs = probs / probs.sum()
+    rows = np.zeros(n_edges, dtype=np.int64)
+    cols = np.zeros(n_edges, dtype=np.int64)
+    for bit in range(scale):
+        quad = rng.choice(4, size=n_edges, p=probs)
+        rows |= ((quad >> 1) & 1).astype(np.int64) << bit
+        cols |= (quad & 1).astype(np.int64) << bit
+    return np.stack([rows, cols], axis=1)
+
+
+def rmat_matrix(scale: int, edgefactor: int = 8, seed: int = 0,
+                dtype=np.float32, **kw):
+    """Dense numpy adjacency matrix from R-MAT edges (small scales only)."""
+    n = 1 << scale
+    e = rmat_edges(scale, edgefactor, seed=seed, **kw)
+    m = np.zeros((n, n), dtype=dtype)
+    m[e[:, 0], e[:, 1]] = 1.0
+    return m
+
+
+def random_sparse(m: int, n: int, density: float, seed: int = 0,
+                  dtype=np.float32) -> np.ndarray:
+    """Uniform random sparse dense-array (for tests/benchmarks)."""
+    rng = np.random.default_rng(seed)
+    mat = rng.standard_normal((m, n)).astype(dtype)
+    mask = rng.random((m, n)) < density
+    return mat * mask

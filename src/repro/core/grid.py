@@ -1,0 +1,89 @@
+"""2D process/tile grids and owner maps.
+
+The paper distributes A (m x k), B (k x n) and C (m x n) over a
+sqrt(p) x sqrt(p) grid of tiles, one tile per process, with a *directory of
+global pointers* resolving (tile_row, tile_col) -> remote memory.  On TPU the
+directory becomes compile-time metadata: a ``ProcessGrid`` maps tile
+coordinates to mesh coordinates / ranks, and the actual data movement is
+expressed with shardings + collectives built from these maps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import numpy as np
+
+__all__ = ["ProcessGrid", "ceil_div", "pad_to_multiple"]
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def pad_to_multiple(x: int, mult: int) -> int:
+    return ceil_div(x, mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcessGrid:
+    """A ``rows x cols`` grid of processes, each owning one tile per matrix.
+
+    Ranks are assigned row-major: ``rank = i * cols + j``.  This mirrors the
+    paper's 2D layout (and its balanced-send proof, which assumes tile (i, j)
+    lives on a unique process).
+    """
+
+    rows: int
+    cols: int
+
+    @property
+    def nprocs(self) -> int:
+        return self.rows * self.cols
+
+    @classmethod
+    def square(cls, p: int) -> "ProcessGrid":
+        s = int(math.isqrt(p))
+        if s * s != p:
+            raise ValueError(f"square grid needs a perfect square, got {p}")
+        return cls(s, s)
+
+    # ---- owner maps (the "directory") -------------------------------------
+    def owner(self, i: int, j: int) -> int:
+        if not (0 <= i < self.rows and 0 <= j < self.cols):
+            raise IndexError(f"tile ({i},{j}) outside {self.rows}x{self.cols} grid")
+        return i * self.cols + j
+
+    def coords(self, rank: int) -> Tuple[int, int]:
+        if not 0 <= rank < self.nprocs:
+            raise IndexError(f"rank {rank} outside grid of {self.nprocs}")
+        return divmod(rank, self.cols)
+
+    # ---- tile geometry -----------------------------------------------------
+    def tile_shape(self, m: int, n: int) -> Tuple[int, int]:
+        """Uniform (padded) tile shape for an ``m x n`` matrix on this grid."""
+        return ceil_div(m, self.rows), ceil_div(n, self.cols)
+
+    def padded_shape(self, m: int, n: int) -> Tuple[int, int]:
+        tm, tn = self.tile_shape(m, n)
+        return tm * self.rows, tn * self.cols
+
+    def tile_slice(self, m: int, n: int, i: int, j: int):
+        """Global index slice of tile (i, j); clipped to the true shape."""
+        tm, tn = self.tile_shape(m, n)
+        return (
+            slice(i * tm, min((i + 1) * tm, m)),
+            slice(j * tn, min((j + 1) * tn, n)),
+        )
+
+    # ---- the paper's iteration offset --------------------------------------
+    def k_offset(self, i: int, j: int) -> int:
+        """Iteration offset of the stationary-C inner loop (paper SS3.3).
+
+        Skews process (i, j) to start its k-loop at ``i + j`` so that (a) no
+        two processes in a row/column request the same tile at the same step
+        and (b) the first fetch is (nearly) local.  On the ppermute ring this
+        is realized as a Cannon-style pre-rotation.
+        """
+        return (i + j) % self.cols

@@ -1,0 +1,136 @@
+"""The paper's SS4 inter-node roofline model, plus TPU constants.
+
+The model characterizes one iteration of the distributed multiply by its
+*inter-node arithmetic intensity* — flops per byte moved over the network —
+and caps achievable throughput by the *local* roofline peak of the on-chip
+kernel (not the raw arithmetic peak).
+
+    perf(AI_net) = min(local_peak, AI_net * net_bw)
+    local_peak   = min(arith_peak, AI_local * mem_bw)
+
+Formulas follow the paper exactly (stationary-C, square sqrt(p) grids,
+density d, word size w).  Machine constants cover the paper's systems
+(Summit, DGX-2) and our target (TPU v5e), so the same model drives both the
+paper-reproduction benchmark (Fig. 2) and the §Roofline analysis of the
+compiled dry-runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+__all__ = [
+    "Machine", "SUMMIT_V100", "DGX2_V100", "TPU_V5E",
+    "spmm_local_ai", "spmm_internode_ai", "spgemm_local_ai",
+    "spgemm_internode_ai", "local_peak", "internode_roofline",
+    "spmm_model", "spgemm_model",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Machine:
+    """Per-accelerator constants (SI bytes/s, flop/s)."""
+    name: str
+    arith_peak: float       # flop/s (fp32 for V100 per paper; bf16 for TPU)
+    mem_bw: float           # HBM bytes/s
+    net_bw: float           # per-chip share of injection bandwidth, bytes/s
+    word_bytes: int = 4
+
+
+# Paper SS4/SS6: V100 16 TF fp32; Summit dual-rail EDR = 23 GB/s per node,
+# /6 GPUs = 3.83 GB/s per GPU.  DGX-2: NVLink 3.0, 50 GB/s per GPU link.
+SUMMIT_V100 = Machine("summit-v100", 16e12, 900e9, 3.83e9, 4)
+DGX2_V100 = Machine("dgx2-v100", 16e12, 900e9, 50e9, 4)
+# Harness constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
+TPU_V5E = Machine("tpu-v5e", 197e12, 819e9, 50e9, 2)
+
+
+# ---------------------------------------------------------------------------
+# SpMM (paper SS4) — C (m x n) = A (m x k, density d) @ B (k x n dense)
+# ---------------------------------------------------------------------------
+def _spmm_terms(m: int, k: int, n: int, p: int, d: float, w: int):
+    sp = math.sqrt(p)
+    flops = 2.0 * (d * m * k / p) * (n / sp)
+    a_bytes = w * (2.0 * d * m * k / p + m / sp + 1.0)   # CSR: vals+cols+rowptr
+    b_bytes = w * (k * n / p)
+    c_bytes = w * (m * n / p)
+    return flops, a_bytes, b_bytes, c_bytes
+
+
+def spmm_local_ai(m: int, k: int, n: int, p: int, d: float,
+                  w: int = 4) -> float:
+    """Paper's local SpMM arithmetic intensity (flops / bytes of A,B,C)."""
+    flops, a_b, b_b, c_b = _spmm_terms(m, k, n, p, d, w)
+    return flops / (a_b + b_b + c_b)
+
+
+def spmm_internode_ai(m: int, k: int, n: int, p: int, d: float,
+                      w: int = 4) -> float:
+    """Paper's inter-node SpMM AI (flops / network bytes of A and B tiles)."""
+    flops, a_b, b_b, _ = _spmm_terms(m, k, n, p, d, w)
+    return flops / (a_b + b_b)
+
+
+# ---------------------------------------------------------------------------
+# SpGEMM (paper SS4) — C = A @ B, both sparse with density d
+# ---------------------------------------------------------------------------
+def spgemm_local_ai(cf: float, b: int) -> float:
+    """Gu et al. bound: AI = cf / ((3 + 2 cf) * b).
+
+    cf = compression factor (flops per nonzero of C); b = bytes per nonzero.
+    """
+    return cf / ((3.0 + 2.0 * cf) * b)
+
+
+def spgemm_internode_ai(flops: float, m: int, k: int, n: int, p: int,
+                        d: float, w: int = 4) -> float:
+    """Paper's inter-node SpGEMM AI with measured FLOPS(A, B)."""
+    sp = math.sqrt(p)
+    a_bytes = w * (2.0 * d * m * k / p + m / sp + 1.0)
+    b_bytes = w * (2.0 * d * k * n / p + k / sp + 1.0)
+    return flops / (a_bytes + b_bytes)
+
+
+# ---------------------------------------------------------------------------
+# Rooflines
+# ---------------------------------------------------------------------------
+def local_peak(local_ai: float, mach: Machine) -> float:
+    """Flat 'roof' of the inter-node model = the local kernel's peak."""
+    return min(mach.arith_peak, local_ai * mach.mem_bw)
+
+
+def internode_roofline(ai_net: float, local_ai: float,
+                       mach: Machine) -> float:
+    """Predicted flop/s per accelerator for one distributed iteration."""
+    return min(local_peak(local_ai, mach), ai_net * mach.net_bw)
+
+
+def spmm_model(m: int, k: int, n: int, p: int, d: float,
+               mach: Machine) -> Dict[str, float]:
+    """Everything Fig. 2 needs for one SpMM point."""
+    w = mach.word_bytes
+    ai_local = spmm_local_ai(m, k, n, p, d, w)
+    ai_net = spmm_internode_ai(m, k, n, p, d, w)
+    return {
+        "ai_local": ai_local,
+        "ai_net": ai_net,
+        "local_peak": local_peak(ai_local, mach),
+        "perf": internode_roofline(ai_net, ai_local, mach),
+        "net_bound": ai_net * mach.net_bw < local_peak(ai_local, mach),
+    }
+
+
+def spgemm_model(flops: float, cf: float, m: int, k: int, n: int, p: int,
+                 d: float, mach: Machine) -> Dict[str, float]:
+    """Everything Fig. 2 needs for one SpGEMM point (measured flops & cf)."""
+    w = mach.word_bytes
+    ai_local = spgemm_local_ai(cf, w)
+    ai_net = spgemm_internode_ai(flops, m, k, n, p, d, w)
+    return {
+        "ai_local": ai_local,
+        "ai_net": ai_net,
+        "local_peak": local_peak(ai_local, mach),
+        "perf": internode_roofline(ai_net, ai_local, mach),
+        "net_bound": ai_net * mach.net_bw < local_peak(ai_local, mach),
+    }

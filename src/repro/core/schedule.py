@@ -1,0 +1,180 @@
+"""Static work scheduling — the TPU adaptation of the paper's workstealing.
+
+The paper's workstealing (SS3.4) claims work at runtime with remote
+fetch-and-add against a 2D (random stealing) or 3D (locality-aware) work
+grid.  Inside a compiled XLA program there is no fetch-and-add against a
+remote counter, but the *quantity being balanced* — flops per device per
+stage, known from per-tile nonzero counts — is static for a given matrix.
+So we move the balancing decision ahead of execution:
+
+* :func:`lpt_assign` / :func:`makespan` — the classic Longest-Processing-Time
+  greedy used to *schedule* work items (i,j,k block products) onto devices;
+  this is what the paper's stealing converges to dynamically.  We use it
+  (a) to simulate/quantify how much stealing can help (benchmarks for
+  Fig. 1 / Table 2), and (b) to drive real decisions below.
+* :func:`balance_row_perm` — choose a row-block permutation of the sparse
+  matrix so nnz is evenly spread over grid rows.  On TPU this directly
+  shrinks the uniform tile capacity (= padded MXU work), turning the paper's
+  "less time lost to load imbalance" into fewer wasted flops.
+* :func:`stage_imbalance` — per-stage vs end-to-end max/avg flop imbalance
+  for the ring schedules: the paper's Fig. 1 metric (sync amplifies a 1.2x
+  end-to-end imbalance to ~2.3x per-stage for R-MAT scale 17 on 16x16).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "lpt_assign", "makespan", "balance_row_perm", "stage_imbalance",
+    "steal_simulation",
+]
+
+
+def lpt_assign(costs: Sequence[float], n_workers: int) -> np.ndarray:
+    """Greedy LPT: assign items (descending cost) to the least-loaded worker.
+
+    Returns int array: worker index per item.  4/3-approximation of optimal
+    makespan — the static analogue of the paper's workstealing equilibrium.
+    """
+    costs = np.asarray(costs, dtype=np.float64)
+    order = np.argsort(-costs, kind="stable")
+    heap = [(0.0, w) for w in range(n_workers)]
+    heapq.heapify(heap)
+    assign = np.zeros(len(costs), dtype=np.int64)
+    for item in order:
+        load, w = heapq.heappop(heap)
+        assign[item] = w
+        heapq.heappush(heap, (load + costs[item], w))
+    return assign
+
+
+def makespan(costs: Sequence[float], assign: np.ndarray,
+             n_workers: int) -> Tuple[float, float]:
+    """(max, avg) load over workers for a given assignment."""
+    costs = np.asarray(costs, dtype=np.float64)
+    loads = np.zeros(n_workers)
+    np.add.at(loads, np.asarray(assign), costs)
+    return float(loads.max()), float(loads.mean())
+
+
+def balance_row_perm(nnz_per_row_block: Sequence[int],
+                     grid_rows: int) -> np.ndarray:
+    """Permute row blocks so each grid row gets a near-equal nnz share.
+
+    Returns a permutation ``perm`` such that row block ``perm[t]`` should be
+    placed at position ``t``; positions are dealt round-robin within each
+    grid row so every grid row keeps ``n/grid_rows`` row blocks.
+    """
+    nnz = np.asarray(nnz_per_row_block, dtype=np.float64)
+    n = len(nnz)
+    if n % grid_rows:
+        raise ValueError("row blocks must divide evenly among grid rows")
+    per = n // grid_rows
+    assign = _lpt_capacity(nnz, grid_rows, per)
+    # build permutation: positions [g*per:(g+1)*per] receive the row blocks
+    # assigned to grid row g (descending nnz for determinism)
+    perm = np.zeros(n, dtype=np.int64)
+    for gidx in range(grid_rows):
+        mine = np.where(assign == gidx)[0]
+        mine = mine[np.argsort(-nnz[mine], kind="stable")]
+        perm[gidx * per:(gidx + 1) * per] = mine
+    return perm
+
+
+def _lpt_capacity(costs: np.ndarray, n_workers: int, cap: int) -> np.ndarray:
+    """LPT with a per-worker item-count capacity (keeps tiles per row even)."""
+    order = np.argsort(-costs, kind="stable")
+    loads = np.zeros(n_workers)
+    counts = np.zeros(n_workers, dtype=np.int64)
+    assign = np.zeros(len(costs), dtype=np.int64)
+    for item in order:
+        open_w = np.where(counts < cap)[0]
+        w = open_w[np.argmin(loads[open_w])]
+        assign[item] = w
+        loads[w] += costs[item]
+        counts[w] += 1
+    return assign
+
+
+def stage_imbalance(tile_costs: np.ndarray) -> Tuple[float, float]:
+    """(per_stage, end_to_end) max/avg imbalance of the ring-C schedule.
+
+    ``tile_costs[i, k]`` = flops of using tile A[i, k] (e.g. nnzb counts).
+    Device (i, j) at stage t works on A[i, (i + j + t) % g]: per-stage cost
+    matrix c_t(i, j) = tile_costs[i, (i+j+t) % g].
+
+    A bulk-synchronous implementation pays sum_t max_devices(c_t); the
+    asynchronous one pays max_devices(sum_t c_t).  Both are reported as
+    ratios over the average total (paper Fig. 1: ~2.3 vs ~1.2).
+    """
+    g = tile_costs.shape[0]
+    assert tile_costs.shape == (g, g)
+    i = np.arange(g)[:, None]
+    j = np.arange(g)[None, :]
+    totals = np.zeros((g, g))
+    per_stage_max = 0.0
+    for t in range(g):
+        c_t = tile_costs[i, (i + j + t) % g]
+        per_stage_max += c_t.max()
+        totals += c_t
+    avg_total = totals.mean()
+    if avg_total == 0:
+        return 1.0, 1.0
+    return per_stage_max / avg_total, totals.max() / avg_total
+
+
+def stage_imbalance_3d(flops_ikj: np.ndarray) -> Tuple[float, float]:
+    """(per_stage, end_to_end) imbalance with j-dependent local costs.
+
+    ``flops_ikj[i, k, j]`` = flops of A[i,k] @ B[k,j].  Device (i, j) at
+    stage t multiplies k = (i + j + t) % g (the paper's offset).
+    """
+    g = flops_ikj.shape[0]
+    i = np.arange(g)[:, None]
+    j = np.arange(g)[None, :]
+    totals = np.zeros((g, g))
+    per_stage_max = 0.0
+    for t in range(g):
+        k = (i + j + t) % g
+        c_t = flops_ikj[i, k, j]
+        per_stage_max += c_t.max()
+        totals += c_t
+    avg = totals.mean()
+    if avg == 0:
+        return 1.0, 1.0
+    return per_stage_max / avg, totals.max() / avg
+
+
+def steal_simulation(tile_costs: np.ndarray, steal: str = "none",
+                     comm_penalty: float = 0.0) -> float:
+    """Simulated end-to-end makespan of stationary-A with work stealing.
+
+    Work item (i, k) costs ``tile_costs[i, k]`` (x g output columns folded
+    in).  ``steal='none'`` = owner computes; ``'random'`` = 2D work grid,
+    any idle device may claim any remaining item at ``(1+comm_penalty)`` x
+    cost (all three tiles must move — paper SS3.4); ``'locality'`` = 3D grid,
+    items claimable only by devices in the same grid row/col at lower
+    penalty (one tile moves).  Returns max/avg load ratio.
+    """
+    g = tile_costs.shape[0]
+    costs = tile_costs.flatten().astype(np.float64)
+    n_dev = g * g
+    if steal == "none":
+        loads = costs.copy()   # device (i,k) owns item (i,k)
+        return float(loads.max() / loads.mean())
+    # greedy list scheduling = idealized stealing equilibrium
+    penalty = {"random": 1.0 + comm_penalty,
+               "locality": 1.0 + comm_penalty / 3.0}[steal]
+    order = np.argsort(-costs, kind="stable")
+    loads = np.zeros(n_dev)
+    for item in order:
+        owner = item  # device (i,k) owns item (i,k)
+        w = int(np.argmin(loads))
+        if w == owner or loads[owner] <= loads[w] + costs[item] * (penalty - 1):
+            loads[owner] += costs[item]
+        else:
+            loads[w] += costs[item] * penalty
+    return float(loads.max() / loads.mean())

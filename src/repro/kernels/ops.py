@@ -1,0 +1,138 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``impl`` dispatch:
+  * ``"pallas"``     — real TPU lowering (production target).
+  * ``"interpret"``  — Pallas interpret mode (CPU validation; this container).
+  * ``"ref"``        — pure-jnp oracle (used inside CPU shard_map tests and as
+                       the allclose target).
+  * ``"auto"``       — pallas on TPU backends, ref elsewhere.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref as _ref
+from .bsr_spmm import bsr_pair_matmul_pallas, bsr_spmm_pallas
+
+__all__ = [
+    "default_impl", "bsr_spmm", "bsr_spmm_raw", "build_pair_lists",
+    "bsr_pair_matmul", "densify",
+]
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() in ("tpu",) else "ref"
+
+
+def _resolve(impl: Optional[str]) -> str:
+    impl = impl or "auto"
+    return default_impl() if impl == "auto" else impl
+
+
+# ---------------------------------------------------------------------------
+# SpMM
+# ---------------------------------------------------------------------------
+def bsr_spmm_raw(blocks, rows, cols, dense, *, n_block_rows: int,
+                 impl: Optional[str] = None, block_n: int = 256):
+    """C = BSR(blocks, rows, cols) @ dense — raw-array form (shard_map-safe)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.bsr_spmm_raw_ref(blocks, rows, cols, dense, n_block_rows)
+    n = dense.shape[1]
+    bn = min(block_n, n)
+    while n % bn:
+        bn //= 2
+    # Coverage augmentation: append one zero block per block-row so that every
+    # output block is visited (and therefore zero-initialized) by the kernel,
+    # even for rows with no stored blocks.  Stable sort keeps row order.
+    bs = blocks.shape[1]
+    cov = jnp.arange(n_block_rows, dtype=rows.dtype)
+    rows_aug = jnp.concatenate([rows, cov])
+    order = jnp.argsort(rows_aug, stable=True)
+    blocks_aug = jnp.concatenate(
+        [blocks, jnp.zeros((n_block_rows, bs, bs), blocks.dtype)])[order]
+    cols_aug = jnp.concatenate(
+        [cols, jnp.zeros((n_block_rows,), cols.dtype)])[order]
+    return bsr_spmm_pallas(blocks_aug, rows_aug[order], cols_aug, dense,
+                           n_block_rows=n_block_rows, block_n=max(bn, 1),
+                           interpret=(impl == "interpret"))
+
+
+def bsr_spmm(a_bsr, dense, *, impl: Optional[str] = None, block_n: int = 256):
+    """C = A @ dense for a :class:`repro.core.bsr.BSR` A."""
+    return bsr_spmm_raw(a_bsr.blocks, a_bsr.rows, a_bsr.cols, dense,
+                        n_block_rows=a_bsr.n_block_rows, impl=impl,
+                        block_n=block_n)
+
+
+# ---------------------------------------------------------------------------
+# SpGEMM (host-known structure): pair-list construction + kernel
+# ---------------------------------------------------------------------------
+def build_pair_lists(a_rows, a_cols, a_nnzb: int, b_rows, b_cols, b_nnzb: int,
+                     n_block_rows: int, n_block_cols: int,
+                     capacity: Optional[int] = None
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, int]:
+    """Host-side symbolic phase of block SpGEMM.
+
+    Matches stored blocks of A and B with ``a_cols[i] == b_rows[j]`` and emits
+    flat pair lists sorted by output block (row, col).  Every output block is
+    covered at least once (uncovered blocks get a dummy pair referencing the
+    zero slot appended by :func:`bsr_pair_matmul`), so the Pallas kernel's
+    first-visit zeroing covers the whole C tile.
+
+    Returns (pair_a, pair_b, pair_rows, pair_cols, n_real_pairs); index
+    ``len(a_blocks)`` / ``len(b_blocks)`` denotes the appended zero slot.
+    """
+    a_rows = np.asarray(a_rows)[:a_nnzb]
+    a_cols = np.asarray(a_cols)[:a_nnzb]
+    b_rows = np.asarray(b_rows)[:b_nnzb]
+    b_cols = np.asarray(b_cols)[:b_nnzb]
+    by_brow = {}
+    for j, (br, bc) in enumerate(zip(b_rows, b_cols)):
+        by_brow.setdefault(int(br), []).append((j, int(bc)))
+    pairs = []
+    for i, (ar, ac) in enumerate(zip(a_rows, a_cols)):
+        for j, bc in by_brow.get(int(ac), ()):
+            pairs.append((int(ar), bc, i, j))
+    covered = {(r, c) for (r, c, _, _) in pairs}
+    zslot_a, zslot_b = a_nnzb, b_nnzb  # remapped to zero slot by the wrapper
+    for r in range(n_block_rows):
+        for c in range(n_block_cols):
+            if (r, c) not in covered:
+                pairs.append((r, c, zslot_a, zslot_b))
+    pairs.sort(key=lambda t: (t[0], t[1]))
+    n_real = len(pairs)
+    cap = capacity if capacity is not None else n_real
+    if n_real > cap:
+        raise ValueError(f"pair capacity {cap} < required {n_real}")
+    last = pairs[-1]
+    pairs.extend([(last[0], last[1], zslot_a, zslot_b)] * (cap - n_real))
+    arr = np.asarray(pairs, dtype=np.int32)
+    return arr[:, 2], arr[:, 3], arr[:, 0], arr[:, 1], n_real
+
+
+def bsr_pair_matmul(a_blocks, b_blocks, pair_a, pair_b, pair_rows, pair_cols,
+                    *, n_block_rows: int, n_block_cols: int,
+                    impl: Optional[str] = None):
+    """Dense C tile from matched block pairs (see :func:`build_pair_lists`)."""
+    impl = _resolve(impl)
+    bs = a_blocks.shape[1]
+    zero = jnp.zeros((1, bs, bs), a_blocks.dtype)
+    a_ext = jnp.concatenate([a_blocks, zero.astype(a_blocks.dtype)])
+    b_ext = jnp.concatenate([b_blocks, zero.astype(b_blocks.dtype)])
+    if impl == "ref":
+        return _ref.bsr_pair_matmul_raw_ref(
+            a_ext, b_ext, pair_a, pair_b, pair_rows, pair_cols,
+            n_block_rows, n_block_cols)
+    return bsr_pair_matmul_pallas(
+        a_ext, b_ext, pair_a, pair_b, pair_rows, pair_cols,
+        n_block_rows=n_block_rows, n_block_cols=n_block_cols,
+        interpret=(impl == "interpret"))
+
+
+def densify(blocks, rows, cols, *, n_block_rows: int, n_block_cols: int):
+    return _ref.densify_raw(blocks, rows, cols, n_block_rows, n_block_cols)

@@ -1,0 +1,183 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSON cache.
+
+  PYTHONPATH=src python -m repro.launch.report --dir results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12
+HBM_GB = 16.0  # v5e HBM per chip
+
+
+def load(dir_: str) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | status | compile_s | args GiB/chip | "
+        "temp GiB/chip | HLO flops/chip | collective counts |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP | - | - "
+                f"| - | - | {r['reason'][:60]} |")
+            continue
+        mem = r.get("memory_analysis", {})
+        cc = r.get("hlo_stats", {}).get("collective_count", {})
+        cc_s = " ".join(f"{k.split('-')[-1]}:{v}" for k, v in cc.items()
+                        if v) or "none"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"| {r['compile_seconds']} "
+            f"| {fmt_bytes(mem.get('argument_size_in_bytes'))} "
+            f"| {fmt_bytes(mem.get('temp_size_in_bytes'))} "
+            f"| {r['hlo_stats']['dot_flops']:.3e} | {cc_s} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: List[Dict], mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | bottleneck "
+        "| model_flops | useful/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r["status"] != "ok" or r["mesh"] != mesh:
+            continue
+        rf = r["roofline"]
+        dom = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        # roofline fraction: ideal-compute time / dominant achieved term
+        ideal = rf["model_flops"] / r["n_chips"] / PEAK_FLOPS
+        frac = ideal / dom if dom else 0.0
+        ur = rf.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3e} "
+            f"| {rf['memory_s']:.3e} | {rf['collective_s']:.3e} "
+            f"| {rf['bottleneck'].replace('_s', '')} "
+            f"| {rf['model_flops']:.3e} "
+            f"| {ur if ur is None else round(ur, 3)} "
+            f"| {frac:.4f} |")
+    return "\n".join(lines)
+
+
+def worst_cells(recs: List[Dict], mesh: str = "single", n: int = 5):
+    rows = []
+    for r in recs:
+        if r["status"] != "ok" or r["mesh"] != mesh:
+            continue
+        rf = r["roofline"]
+        dom = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        ideal = rf["model_flops"] / r["n_chips"] / PEAK_FLOPS
+        rows.append((ideal / dom if dom else 0.0, r["arch"], r["shape"],
+                     rf["bottleneck"]))
+    rows.sort()
+    return rows[:n]
+
+
+def reanalyze(dir_: str) -> None:
+    """Recompute hlo_stats/roofline in every JSON from the cached .hlo.gz
+    (after analyzer changes) without recompiling."""
+    import gzip
+
+    from repro.launch import hlo_analysis
+    from repro.launch.dryrun import HBM_BW, ICI_BW, PEAK_FLOPS as PEAK
+
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        hlo_path = path.replace(".json", "") + ".hlo.gz"
+        if rec.get("status") != "ok" or not os.path.exists(hlo_path):
+            continue
+        with gzip.open(hlo_path, "rt") as f:
+            stats = hlo_analysis.analyze_hlo(f.read())
+        terms = {"compute_s": stats.dot_flops / PEAK,
+                 "memory_s": stats.hbm_bytes_fused / HBM_BW,
+                 "collective_s": stats.total_collective_bytes / ICI_BW}
+        mf = rec["roofline"]["model_flops"]
+        rec["hlo_stats"] = {
+            "dot_flops": stats.dot_flops,
+            "hbm_bytes": stats.hbm_bytes,
+            "hbm_bytes_fused": stats.hbm_bytes_fused,
+            "collective_bytes": stats.collective_bytes,
+            "collective_count": stats.collective_count,
+        }
+        rec["roofline"] = {
+            **terms, "bottleneck": max(terms, key=terms.get),
+            "model_flops": mf,
+            "useful_flops_ratio": (mf / (stats.dot_flops * rec["n_chips"])
+                                   if stats.dot_flops else None),
+        }
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2, default=float)
+        print(f"reanalyzed {os.path.basename(path)}")
+
+
+def compare(baseline_path: str, dir_: str, mesh: str = "single") -> str:
+    """Markdown diff of dominant roofline terms: baseline report vs now."""
+    base = {}
+    for path in sorted(glob.glob(os.path.join("results",
+                                              "baseline_*__%s.json" % mesh))):
+        with open(path) as f:
+            r = json.load(f)
+        base[(r["arch"], r["shape"])] = r
+    lines = ["| cell | baseline dominant | optimized dominant | speedup |",
+             "|---|---|---|---|"]
+    for (arch, shape), rb in sorted(base.items()):
+        cur_path = os.path.join(dir_, f"{arch}__{shape}__{mesh}.json")
+        if not os.path.exists(cur_path):
+            continue
+        with open(cur_path) as f:
+            rc = json.load(f)
+        tb = rb["roofline"]
+        tc = rc["roofline"]
+        db = max(tb["compute_s"], tb["memory_s"], tb["collective_s"])
+        dc = max(tc["compute_s"], tc["memory_s"], tc["collective_s"])
+        lines.append(
+            f"| {arch} {shape} | {db:.3e} ({tb['bottleneck'][:-2]}) "
+            f"| {dc:.3e} ({tc['bottleneck'][:-2]}) | {db / dc:.1f}x |")
+    return "\n".join(lines)
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="results/dryrun")
+    p.add_argument("--mesh", default="single")
+    p.add_argument("--reanalyze", action="store_true")
+    p.add_argument("--compare", action="store_true")
+    args = p.parse_args()
+    if args.compare:
+        print(compare("results", args.dir, args.mesh))
+        return
+    if args.reanalyze:
+        reanalyze(args.dir)
+        return
+    recs = load(args.dir)
+    print("## Dry-run\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single-pod 16x16 = 256 chips)\n")
+    print(roofline_table(recs, "single"))
+    print("\n### Worst roofline fractions (hillclimb candidates)\n")
+    for frac, arch, shape, bn in worst_cells(recs):
+        print(f"- {arch} {shape}: {frac:.4f} ({bn})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Batched serving driver: continuous prefill + greedy decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
+        --requests 4 --prompt-len 16 --gen-len 16
+
+Demonstrates the serving path end-to-end: batched prefill, KV/state cache
+management (ring buffers for local attention; SSM/RG-LRU states), stepwise
+decode, simple request batching with padding.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def serve(cfg, *, requests: int, prompt_len: int, gen_len: int,
+          max_len: int = None, seed: int = 0, mesh=None):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import lm, transformer as tf
+
+    max_len = max_len or (prompt_len + gen_len + 8)
+    params = tf.init_params(cfg, jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, cfg.vocab_size, (requests, prompt_len))
+    batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+    if cfg.frontend == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal(
+                (requests, cfg.num_patches, cfg.frontend_dim)),
+            jnp.float32)
+
+    t0 = time.time()
+    logits, caches, pos = lm.prefill(params, batch, cfg, max_len,
+                                     cache_dtype=jnp.float32)
+    t_prefill = time.time() - t0
+    step = jax.jit(lm.make_decode_step(cfg))
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for _ in range(gen_len - 1):
+        logits, caches = step(params, tok, caches, pos)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+        pos = pos + 1
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    return {
+        "generated": gen,
+        "prefill_s": t_prefill,
+        "decode_s": t_decode,
+        "decode_tok_per_s": requests * (gen_len - 1) / max(t_decode, 1e-9),
+    }
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--requests", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=16)
+    p.add_argument("--gen-len", type=int, default=16)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    from repro.configs import get_config
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if cfg.is_encoder:
+        raise SystemExit(f"{args.arch} is encoder-only; no serve path")
+    out = serve(cfg, requests=args.requests, prompt_len=args.prompt_len,
+                gen_len=args.gen_len, seed=args.seed)
+    print(f"[serve] prefill {out['prefill_s']:.2f}s, "
+          f"decode {out['decode_s']:.2f}s "
+          f"({out['decode_tok_per_s']:.1f} tok/s)")
+    print(f"[serve] sample generation: {out['generated'][0][:16].tolist()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,273 @@
+"""Grouped-query attention with QKV bias, logit softcap, local windows,
+encoder (bidirectional) mode, and a ring-buffer KV cache for decode.
+
+Sharding: head dims shard over "model", batch over ("pod", "data").  Local
+(sliding-window) layers keep a cache of only ``window`` slots — this is what
+makes recurrentgemma's ``long_500k`` decode memory-bounded.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import (BATCH_AXES, MODEL_AXIS, apply_rope, constrain,
+                     dense_init, rope, softcap)
+from .config import ModelConfig
+
+__all__ = ["init_attn", "attn_specs", "attn_forward", "attn_decode",
+           "init_attn_cache", "attn_cache_specs"]
+
+NEG_INF = -2.3819763e38  # large negative for masking (bf16-safe)
+
+
+def init_attn(cfg: ModelConfig, key) -> Dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, k = cfg.n_heads, cfg.n_kv_heads
+    keys = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(keys[0], (d, h * hd)),
+        "wk": dense_init(keys[1], (d, k * hd)),
+        "wv": dense_init(keys[2], (d, k * hd)),
+        "wo": dense_init(keys[3], (h * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,))
+        p["bk"] = jnp.zeros((k * hd,))
+        p["bv"] = jnp.zeros((k * hd,))
+    return p
+
+
+def attn_specs(cfg: ModelConfig) -> Dict:
+    """FSDP (over 'data') x TP (over 'model') parameter shardings."""
+    p = {
+        "wq": P("data", MODEL_AXIS),
+        "wk": P("data", MODEL_AXIS),
+        "wv": P("data", MODEL_AXIS),
+        "wo": P(MODEL_AXIS, "data"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = P(MODEL_AXIS)
+        p["bk"] = P(MODEL_AXIS)
+        p["bv"] = P(MODEL_AXIS)
+    return p
+
+
+def _project_qkv(p: Dict, x, cfg: ModelConfig):
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("btd,dh->bth", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dh->bth", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dh->bth", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    b, t = x.shape[:2]
+    q = q.reshape(b, t, cfg.n_heads, hd)
+    k = k.reshape(b, t, cfg.n_kv_heads, hd)
+    v = v.reshape(b, t, cfg.n_kv_heads, hd)
+    q = constrain(q, BATCH_AXES, None, MODEL_AXIS, None)
+    k = constrain(k, BATCH_AXES, None, MODEL_AXIS, None)
+    v = constrain(v, BATCH_AXES, None, MODEL_AXIS, None)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q: [B,T,H,hd]; k,v: [B,S,K,hd]; mask: [B?,T,S] bool (True=attend)."""
+    b, t, h, hd = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    q = q.reshape(b, t, kh, g, hd)
+    logits = jnp.einsum("btkgd,bskd->bkgts", q, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits * (hd ** -0.5)
+    logits = softcap(logits, cfg.attn_softcap)
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v)
+    return out.reshape(b, t, h, hd)
+
+
+def _pair_mask(cfg: ModelConfig, kind: str, pos_q, pos_k):
+    """bool[Tq, Tk] attend mask from absolute positions."""
+    i = pos_q[:, None]
+    j = pos_k[None, :]
+    if cfg.causal:
+        m = j <= i
+    else:
+        m = jnp.ones((pos_q.shape[0], pos_k.shape[0]), bool)
+    if kind == "l" and cfg.local_window:
+        m = m & (i - j < cfg.local_window)
+    return m
+
+
+# Sequences longer than this use the kv-chunked online-softmax path, which
+# never materializes the [T, S] score matrix (memory-roofline lever; the
+# full Pallas flash kernel is follow-up work — see DESIGN.md).
+BLOCKED_ATTN_THRESHOLD = 8192
+KV_CHUNK = 1024
+
+
+def _sdpa_blocked(q, k, v, cfg: ModelConfig, kind: str, pos_q, pos_k,
+                  kv_chunk: int = KV_CHUNK):
+    """Online-softmax attention, scanned over KV chunks.
+
+    q: [B,T,H,hd]; k,v: [B,S,K,hd].  Score working set is [B,heads,T,chunk].
+    """
+    b, t, h, hd = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    pad = (-s) % kv_chunk
+    if pad:  # ragged tail: pad with masked-out slots, never shrink the chunk
+        k = jnp.concatenate([k, jnp.zeros((b, pad, kh, hd), k.dtype)], 1)
+        v = jnp.concatenate([v, jnp.zeros((b, pad, kh, hd), v.dtype)], 1)
+        pos_k = jnp.concatenate(
+            [pos_k, jnp.full((pad,), jnp.iinfo(jnp.int32).max, jnp.int32)])
+        s += pad
+    nk = s // kv_chunk
+    qr = q.reshape(b, t, kh, g, hd).astype(jnp.float32) * (hd ** -0.5)
+    kr = k.reshape(b, nk, kv_chunk, kh, hd).swapaxes(0, 1)
+    vr = v.reshape(b, nk, kv_chunk, kh, hd).swapaxes(0, 1)
+    pk = pos_k.reshape(nk, kv_chunk)
+
+    def step(carry, xs):
+        m, l, acc = carry
+        k_c, v_c, pk_c = xs
+        sc = jnp.einsum("btkgd,bskd->bkgts", qr, k_c.astype(jnp.float32))
+        sc = softcap(sc, cfg.attn_softcap)
+        mask = _pair_mask(cfg, kind, pos_q, pk_c)
+        sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(-1))
+        p = jnp.exp(sc - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgts,bskd->bkgtd", p, v_c.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    init = (
+        jnp.full((b, kh, g, t), NEG_INF, jnp.float32),
+        jnp.zeros((b, kh, g, t), jnp.float32),
+        jnp.zeros((b, kh, g, t, hd), jnp.float32),
+    )
+    step = jax.checkpoint(step)   # flash-style: recompute chunks in bwd
+    (m, l, acc), _ = jax.lax.scan(step, init, (kr, vr, pk))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    # [b,kh,g,t,hd] -> [b,t,h,hd]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, t, h, hd).astype(q.dtype)
+
+
+def attn_forward(p: Dict, x, cfg: ModelConfig, kind: str, positions,
+                 cache: Optional[Dict] = None,
+                 cache_offset: Optional[jnp.ndarray] = None):
+    """Full-sequence attention (train / prefill).
+
+    If ``cache`` is given (prefill), k/v are written into it and the updated
+    cache is returned alongside the output.
+    """
+    b, t, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    sin, cos = rope(positions, cfg.resolved_head_dim, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    if t > BLOCKED_ATTN_THRESHOLD:
+        out = _sdpa_blocked(q, k, v, cfg, kind, positions, positions)
+    else:
+        mask = _pair_mask(cfg, kind, positions, positions)[None]
+        out = _sdpa(q, k, v, mask, cfg)
+    out = jnp.einsum("bte,ed->btd", out.reshape(b, t, -1),
+                     p["wo"].astype(x.dtype))
+    out = constrain(out, BATCH_AXES, None, None)
+    if cache is None:
+        return out, None
+    new_cache = _write_prefill(cache, k, v, positions, cfg, kind)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# KV cache (ring buffer for local layers)
+# ---------------------------------------------------------------------------
+def cache_len(cfg: ModelConfig, kind: str, max_len: int) -> int:
+    if kind == "l" and cfg.local_window:
+        return min(cfg.local_window, max_len)
+    return max_len
+
+
+def init_attn_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                    dtype=jnp.bfloat16) -> Dict:
+    s = cache_len(cfg, kind, max_len)
+    kh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, s, kh, hd), dtype),
+        "v": jnp.zeros((batch, s, kh, hd), dtype),
+        "pos": jnp.full((s,), -1, jnp.int32),   # global position per slot
+    }
+
+
+def attn_cache_specs(cfg: ModelConfig, kind: str) -> Dict:
+    """KV cache sharding.
+
+    Prefer head-sharding over the model axis (classic TP serving).  When the
+    kv-head count can't cover the 16-way production model axis (GQA with
+    kv=8/2/1), shard the *sequence* dim over 'model' instead — context
+    parallelism; GSPMD inserts the softmax all-reduces.  This is what keeps
+    a 32k x batch-128 cache inside HBM on the assigned mesh.
+    """
+    if cfg.n_kv_heads % 16 == 0:
+        kv_spec = P(BATCH_AXES, None, MODEL_AXIS, None)
+    else:
+        kv_spec = P(BATCH_AXES, MODEL_AXIS, None, None)
+    return {
+        "k": kv_spec,
+        "v": kv_spec,
+        "pos": P(None),
+    }
+
+
+def _write_prefill(cache: Dict, k, v, positions, cfg: ModelConfig, kind: str):
+    """Write a full prefill's k/v into the (possibly ring) cache.
+
+    Only the trailing ``cache_len`` positions are written (earlier ones would
+    be overwritten in the ring anyway), which keeps slot indices unique.
+    """
+    s = cache["k"].shape[1]
+    t = k.shape[1]
+    keep = min(t, s)
+    k_tail = k[:, t - keep:].astype(cache["k"].dtype)
+    v_tail = v[:, t - keep:].astype(cache["v"].dtype)
+    pos_tail = positions[t - keep:]
+    slots = pos_tail % s
+    new_k = cache["k"].at[:, slots].set(k_tail)
+    new_v = cache["v"].at[:, slots].set(v_tail)
+    new_pos = cache["pos"].at[slots].set(pos_tail)
+    return {"k": new_k, "v": new_v, "pos": new_pos}
+
+
+def attn_decode(p: Dict, x, cache: Dict, pos, cfg: ModelConfig, kind: str
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """Single-token decode step.  x: [B, 1, d]; pos: scalar int32."""
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, x, cfg)
+    pos_arr = jnp.full((1,), pos, jnp.int32)
+    sin, cos = rope(pos_arr, cfg.resolved_head_dim, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    s = cache["k"].shape[1]
+    slot = pos % s
+    new_k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    new_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], pos_arr, slot, axis=0)
+    # attend over valid slots: written, <= pos, and within window if local
+    ok = (new_pos >= 0) & (new_pos <= pos)
+    if kind == "l" and cfg.local_window:
+        ok = ok & (pos - new_pos < cfg.local_window)
+    mask = jnp.broadcast_to(ok[None, None, :], (b, 1, s))
+    out = _sdpa(q, new_k.astype(x.dtype), new_v.astype(x.dtype), mask, cfg)
+    out = jnp.einsum("bte,ed->btd", out.reshape(b, 1, -1),
+                     p["wo"].astype(x.dtype))
+    return out, {"k": new_k, "v": new_v, "pos": new_pos}

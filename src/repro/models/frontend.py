@@ -1,0 +1,57 @@
+"""Modality frontend STUBS (per assignment: ``input_specs()`` provides
+precomputed frame/patch embeddings; the conv/ViT towers are out of scope).
+
+* audio  — HuBERT-style: precomputed conv-feature frames [B, T, frontend_dim]
+           projected + layer-normed into the encoder width.
+* vlm    — LLaVA-NeXT-style: anyres patch embeddings [B, num_patches,
+           frontend_dim] through the standard 2-layer MLP projector, then
+           prepended to the token embeddings.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import MODEL_AXIS, dense_init, layer_norm
+from .config import ModelConfig
+
+__all__ = ["init_frontend", "frontend_specs", "audio_embed", "vlm_embed"]
+
+
+def init_frontend(cfg: ModelConfig, key) -> Dict:
+    if cfg.frontend == "audio":
+        return {
+            "proj": dense_init(key, (cfg.frontend_dim, cfg.d_model)),
+            "ln_scale": jnp.ones((cfg.d_model,)),
+            "ln_bias": jnp.zeros((cfg.d_model,)),
+        }
+    if cfg.frontend == "vlm":
+        k1, k2 = jax.random.split(key)
+        return {
+            "proj1": dense_init(k1, (cfg.frontend_dim, cfg.d_model)),
+            "proj2": dense_init(k2, (cfg.d_model, cfg.d_model)),
+        }
+    return {}
+
+
+def frontend_specs(cfg: ModelConfig) -> Dict:
+    if cfg.frontend == "audio":
+        return {"proj": P(None, MODEL_AXIS), "ln_scale": P(None),
+                "ln_bias": P(None)}
+    if cfg.frontend == "vlm":
+        return {"proj1": P(None, MODEL_AXIS), "proj2": P(MODEL_AXIS, None)}
+    return {}
+
+
+def audio_embed(p: Dict, frames, cfg: ModelConfig):
+    x = jnp.einsum("btf,fd->btd", frames, p["proj"].astype(frames.dtype))
+    return layer_norm(x, p["ln_scale"], p["ln_bias"])
+
+
+def vlm_embed(p: Dict, patches, cfg: ModelConfig):
+    h = jnp.einsum("bpf,fd->bpd", patches, p["proj1"].astype(patches.dtype))
+    h = jax.nn.gelu(h, approximate=True)
+    return jnp.einsum("bpd,de->bpe", h, p["proj2"].astype(patches.dtype))

@@ -1,0 +1,109 @@
+"""Losses and step functions (train / prefill / decode) for all families."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as tf
+from .config import ModelConfig
+
+__all__ = ["loss_fn", "make_train_step", "prefill", "make_decode_step"]
+
+
+def cross_entropy(logits, labels, ignore: int = -1):
+    """Mean CE over non-ignored positions.  logits: [B,T,V] f32."""
+    mask = (labels != ignore)
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1)
+    return nll.sum() / denom
+
+
+def _shift_batch(batch: Dict, cfg: ModelConfig) -> Tuple[Dict, jnp.ndarray]:
+    """Produce (model inputs, labels) from a raw batch."""
+    if cfg.frontend == "audio":
+        # encoder: frame-level unit prediction, no shift
+        return {"frames": batch["frames"]}, batch["labels"]
+    if cfg.frontend == "vlm":
+        toks = batch["tokens"]
+        inputs = {"tokens": toks[:, :-1], "patches": batch["patches"]}
+        npatch = batch["patches"].shape[1]
+        ignore = jnp.full((toks.shape[0], npatch), -1, toks.dtype)
+        labels = jnp.concatenate([ignore, toks[:, 1:]], axis=1)
+        return inputs, labels
+    toks = batch["tokens"]
+    return {"tokens": toks[:, :-1]}, toks[:, 1:]
+
+
+def loss_fn(params: Dict, batch: Dict, cfg: ModelConfig):
+    inputs, labels = _shift_batch(batch, cfg)
+    logits, _, aux = tf.forward(params, inputs, cfg)
+    loss = cross_entropy(logits, labels)
+    total = loss + aux["aux"]
+    metrics = {"loss": loss, "aux": aux["aux"], "dropped": aux["dropped"]}
+    return total, metrics
+
+
+def make_train_step(cfg: ModelConfig, optimizer):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  The optimizer is a repro.optim object (init/update)."""
+
+    def train_step(params, opt_state, batch):
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = jax.tree.map(lambda p, u: (p + u).astype(p.dtype),
+                              params, updates)
+        metrics["grad_norm"] = optimizer.last_grad_norm(opt_state)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+def prefill(params: Dict, batch: Dict, cfg: ModelConfig, max_len: int,
+            cache_dtype=jnp.bfloat16):
+    """Run the prompt through the model, filling a fresh decode cache.
+
+    Returns (last_token_logits [B, V], caches, next_pos).
+    """
+    if cfg.is_encoder:
+        raise ValueError("encoder models have no decode path")
+    bsz = (batch["tokens"].shape[0] if "tokens" in batch
+           else batch["frames"].shape[0])
+    caches = tf.init_cache(cfg, bsz, max_len, cache_dtype)
+    logits, caches, _ = tf.forward(params, batch, cfg, caches=caches)
+    t = logits.shape[1]
+    return logits[:, -1], caches, jnp.asarray(t, jnp.int32)
+
+
+def make_decode_step(cfg: ModelConfig):
+    """Returns decode_step(params, token [B,1], caches, pos) ->
+    (logits [B,V], new_caches)."""
+
+    def decode_step(params, token, caches, pos):
+        logits, new_caches = tf.decode_step(params, token, caches, pos, cfg)
+        return logits[:, 0], new_caches
+
+    return decode_step
+
+
+def greedy_decode(params: Dict, batch: Dict, cfg: ModelConfig, steps: int,
+                  max_len: int, cache_dtype=jnp.float32):
+    """Prefill + N greedy steps (reference path for tests/examples)."""
+    logits, caches, pos = prefill(params, batch, cfg, max_len, cache_dtype)
+    step = make_decode_step(cfg)
+    out = []
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    for _ in range(steps):
+        out.append(tok)
+        logits, caches = step(params, tok, caches, pos)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        pos = pos + 1
+    return jnp.concatenate(out, axis=1)

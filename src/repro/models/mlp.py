@@ -1,0 +1,50 @@
+"""Gated MLPs (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import BATCH_AXES, MODEL_AXIS, constrain, dense_init
+from .config import ModelConfig
+
+__all__ = ["init_mlp", "mlp_specs", "mlp_forward"]
+
+
+def init_mlp(cfg: ModelConfig, key, d_ff=None) -> Dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(k2, (d, f)),
+        "w_down": dense_init(k3, (f, d)),
+    }
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        p["w_gate"] = dense_init(k1, (d, f))
+    return p
+
+
+def mlp_specs(cfg: ModelConfig) -> Dict:
+    p = {
+        "w_up": P("data", MODEL_AXIS),
+        "w_down": P(MODEL_AXIS, "data"),
+    }
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        p["w_gate"] = P("data", MODEL_AXIS)
+    return p
+
+
+def mlp_forward(p: Dict, x, cfg: ModelConfig):
+    gelu = lambda v: jax.nn.gelu(v, approximate=True)
+    u = jnp.einsum("btd,df->btf", x, p["w_up"].astype(x.dtype))
+    if cfg.mlp_kind == "gelu":          # plain 2-matrix MLP (hubert)
+        h = gelu(u)
+    else:                               # gated: swiglu / geglu
+        act = jax.nn.silu if cfg.mlp_kind == "swiglu" else gelu
+        g = jnp.einsum("btd,df->btf", x, p["w_gate"].astype(x.dtype))
+        h = act(g) * u
+    h = constrain(h, BATCH_AXES, None, MODEL_AXIS)
+    out = jnp.einsum("btf,fd->btd", h, p["w_down"].astype(x.dtype))
+    return constrain(out, BATCH_AXES, None, None)

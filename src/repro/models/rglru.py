@@ -1,0 +1,149 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block = linear-in x2 (x branch, GeLU gate branch), temporal conv (width 4)
+on the x branch, the RG-LRU diagonal linear recurrence, multiplicative gate,
+linear-out.  Gates use block-diagonal projections (8 blocks) as in Griffin.
+Training uses an associative scan over time (log-depth); decode is the plain
+one-step recurrence — this is what makes ``long_500k`` state-bounded.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import BATCH_AXES, MODEL_AXIS, constrain, dense_init
+from .config import ModelConfig
+
+__all__ = ["init_rglru", "rglru_specs", "rglru_forward", "rglru_decode",
+           "init_rglru_cache", "rglru_cache_specs"]
+
+_NBLOCKS = 8
+_CONV_W = 4
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def _w(cfg: ModelConfig) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def init_rglru(cfg: ModelConfig, key) -> Dict:
+    d, w = cfg.d_model, _w(cfg)
+    wb = w // _NBLOCKS
+    keys = jax.random.split(key, 6)
+    return {
+        "in_x": dense_init(keys[0], (d, w)),
+        "in_gate": dense_init(keys[1], (d, w)),
+        "conv_w": dense_init(keys[2], (_CONV_W, w)) * 0.1,
+        "conv_b": jnp.zeros((w,)),
+        "gate_a": dense_init(keys[3], (_NBLOCKS, wb, wb), in_axis=1),
+        "gate_x": dense_init(keys[4], (_NBLOCKS, wb, wb), in_axis=1),
+        "gate_a_b": jnp.zeros((w,)),
+        "gate_x_b": jnp.zeros((w,)),
+        # a = exp(-c * softplus(lam) * r); init so a^c ~ 0.9..0.999
+        "lam": jnp.linspace(0.3, 1.5, w),
+        "out": dense_init(keys[5], (w, d)),
+    }
+
+
+def rglru_specs(cfg: ModelConfig) -> Dict:
+    return {
+        "in_x": P("data", MODEL_AXIS),
+        "in_gate": P("data", MODEL_AXIS),
+        "conv_w": P(None, MODEL_AXIS),
+        "conv_b": P(MODEL_AXIS),
+        "gate_a": P(None, None, MODEL_AXIS),
+        "gate_x": P(None, None, MODEL_AXIS),
+        "gate_a_b": P(MODEL_AXIS),
+        "gate_x_b": P(MODEL_AXIS),
+        "lam": P(MODEL_AXIS),
+        "out": P(MODEL_AXIS, "data"),
+    }
+
+
+def _block_proj(x, wmat, bias):
+    """x: [..., w] -> block-diagonal projection, blocks on the last dim."""
+    shape = x.shape
+    xb = x.reshape(*shape[:-1], _NBLOCKS, shape[-1] // _NBLOCKS)
+    out = jnp.einsum("...nb,nbc->...nc", xb, wmat.astype(x.dtype))
+    return out.reshape(shape) + bias.astype(x.dtype)
+
+
+def _gates(p, xc):
+    r = jax.nn.sigmoid(_block_proj(xc, p["gate_a"], p["gate_a_b"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_proj(xc, p["gate_x"], p["gate_x_b"])
+                       .astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, (mult * i * xc.astype(jnp.float32))
+
+
+def _conv(xb, p, state=None):
+    w = p["conv_w"].astype(xb.dtype)
+    if state is None:
+        pad = jnp.zeros((xb.shape[0], _CONV_W - 1, xb.shape[2]), xb.dtype)
+    else:
+        pad = state.astype(xb.dtype)
+    xp = jnp.concatenate([pad, xb], axis=1)
+    out = sum(xp[:, i:i + xb.shape[1]] * w[i] for i in range(_CONV_W))
+    new_state = xp[:, xp.shape[1] - (_CONV_W - 1):]
+    return out + p["conv_b"].astype(xb.dtype), new_state
+
+
+def rglru_forward(p: Dict, x, cfg: ModelConfig,
+                  cache: Dict = None) -> Tuple[jnp.ndarray, Dict]:
+    """x: [B, T, d] full-sequence forward via associative scan."""
+    xb = jnp.einsum("btd,dw->btw", x, p["in_x"].astype(x.dtype))
+    gate = jax.nn.gelu(
+        jnp.einsum("btd,dw->btw", x, p["in_gate"].astype(x.dtype)),
+        approximate=True)
+    xc, conv_state = _conv(xb, p)
+    xc = constrain(xc, BATCH_AXES, None, MODEL_AXIS)
+    a, b = _gates(p, xc)                     # [B,T,W] f32 each
+
+    def combine(u, v):
+        a1, b1 = u
+        a2, b2 = v
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(x.dtype)
+    y = h * gate
+    out = jnp.einsum("btw,wd->btd", y, p["out"].astype(x.dtype))
+    out = constrain(out, BATCH_AXES, None, None)
+    if cache is None:
+        return out, None
+    new_cache = {"h": h[:, -1].astype(cache["h"].dtype),
+                 "conv": conv_state.astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    w = _w(cfg)
+    return {"h": jnp.zeros((batch, w), dtype),
+            "conv": jnp.zeros((batch, _CONV_W - 1, w), dtype)}
+
+
+def rglru_cache_specs(cfg: ModelConfig) -> Dict:
+    return {"h": P(BATCH_AXES, MODEL_AXIS),
+            "conv": P(BATCH_AXES, None, MODEL_AXIS)}
+
+
+def rglru_decode(p: Dict, x, cache: Dict, cfg: ModelConfig
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    """x: [B, 1, d] single-step recurrence."""
+    xb = jnp.einsum("btd,dw->btw", x, p["in_x"].astype(x.dtype))
+    gate = jax.nn.gelu(
+        jnp.einsum("btd,dw->btw", x, p["in_gate"].astype(x.dtype)),
+        approximate=True)
+    xc, conv_state = _conv(xb, p, state=cache["conv"])
+    a, b = _gates(p, xc)                     # [B,1,W]
+    h = (a[:, 0] * cache["h"].astype(jnp.float32) + b[:, 0])
+    y = h.astype(x.dtype)[:, None] * gate
+    out = jnp.einsum("btw,wd->btd", y, p["out"].astype(x.dtype))
+    return out, {"h": h.astype(cache["h"].dtype),
+                 "conv": conv_state.astype(cache["conv"].dtype)}

@@ -1,0 +1,216 @@
+"""Mamba-2 SSD (state-space duality) mixer.
+
+Chunked SSD algorithm (Dao & Gu 2024): within a chunk of length L the
+recurrence is computed as a masked quadratic form (attention-like, MXU
+friendly); across chunks a small state S [H, P, N] is carried by a scan.
+Decode is the plain single-step recurrence.  n_groups = 1.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import BATCH_AXES, MODEL_AXIS, constrain, dense_init, rms_norm
+from .config import ModelConfig, SSMConfig
+
+__all__ = ["init_mamba", "mamba_specs", "mamba_forward", "mamba_decode",
+           "init_mamba_cache", "mamba_cache_specs"]
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm or SSMConfig()
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    return s, di, nh
+
+
+def init_mamba(cfg: ModelConfig, key) -> Dict:
+    s, di, nh = _dims(cfg)
+    d = cfg.d_model
+    conv_ch = di + 2 * s.d_state
+    keys = jax.random.split(key, 3)
+    return {
+        "in_proj": dense_init(keys[0], (d, 2 * di + 2 * s.d_state + nh)),
+        "conv_w": dense_init(keys[1], (s.d_conv, conv_ch)) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,)),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)),
+        "d_skip": jnp.ones((nh,)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 1e-2))),  # softplus^-1
+        "norm": jnp.zeros((di,)),
+        "out_proj": dense_init(keys[2], (di, d)),
+    }
+
+
+def mamba_specs(cfg: ModelConfig) -> Dict:
+    return {
+        "in_proj": P("data", MODEL_AXIS),
+        "conv_w": P(None, MODEL_AXIS),
+        "conv_b": P(MODEL_AXIS),
+        "a_log": P(None),
+        "d_skip": P(None),
+        "dt_bias": P(None),
+        "norm": P(MODEL_AXIS),
+        "out_proj": P(MODEL_AXIS, "data"),
+    }
+
+
+def _split_proj(p, x, cfg: ModelConfig):
+    s, di, nh = _dims(cfg)
+    zxbcdt = jnp.einsum("btd,de->bte", x, p["in_proj"].astype(x.dtype))
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * s.d_state], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, p, cfg: ModelConfig, state=None):
+    """Depthwise causal conv over time; returns (out, new_state)."""
+    s, _, _ = _dims(cfg)
+    w = p["conv_w"].astype(xbc.dtype)                      # [W, C]
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)               # [B, T+W-1, C]
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(width))
+    out = jax.nn.silu(out + p["conv_b"].astype(xbc.dtype))
+    new_state = xp[:, xp.shape[1] - (width - 1):]
+    return out, new_state
+
+
+def _ssd_chunked(xh, bmat, cmat, dt, a_log, chunk: int):
+    """Chunked SSD.
+
+    xh:   [B, T, H, P]   (dt-weighted inputs are formed here)
+    bmat: [B, T, N], cmat: [B, T, N]   (n_groups = 1, shared across heads)
+    dt:   [B, T, H]      (positive step sizes)
+    Returns y [B, T, H, P].
+    """
+    bsz, t, h, pdim = xh.shape
+    t_orig = t
+    n = bmat.shape[-1]
+    L = min(chunk, t)
+    t_pad = -(-t // L) * L
+    if t_pad != t:  # pad with identity steps (dt=0 => a=1, input 0)
+        z = lambda v: jnp.concatenate(
+            [v, jnp.zeros((bsz, t_pad - t, *v.shape[2:]), v.dtype)], axis=1)
+        xh, bmat, cmat, dt = z(xh), z(bmat), z(cmat), z(dt)
+        t = t_pad
+    nc = t // L
+    la = (-jnp.exp(a_log.astype(jnp.float32))[None, None] *
+          dt.astype(jnp.float32))                           # log a_t  [B,T,H]
+    xdt = xh * dt[..., None].astype(xh.dtype)               # dt_j x_j
+
+    def r(v, extra=()):
+        return v.reshape(bsz, nc, L, *v.shape[2:])
+
+    la_c, x_c = r(la), r(xdt)
+    b_c, c_c = r(bmat), r(cmat)
+    cs = jnp.cumsum(la_c, axis=2)                           # [B,nc,L,H] incl.
+
+    # intra-chunk: scores[i,j] = (C_i . B_j) * exp(cs_i - cs_j) * (i >= j)
+    cb = jnp.einsum("bcin,bcjn->bcij", c_c, b_c,
+                    preferred_element_type=jnp.float32)     # [B,nc,L,L]
+    decay = jnp.exp(cs[:, :, :, None, :] - cs[:, :, None, :, :])  # [B,nc,i,j,H]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    scores = jnp.where(tri[None, None, :, :, None],
+                       cb[..., None] * decay, 0.0)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores.astype(xh.dtype), x_c)
+
+    # chunk state contribution: S_c = sum_j exp(cs_L - cs_j) B_j (dt_j x_j)
+    tail = jnp.exp(cs[:, :, -1:, :] - cs)                   # [B,nc,L,H]
+    s_c = jnp.einsum("bcjn,bcjh,bcjhp->bchnp",
+                     b_c, tail.astype(xh.dtype), x_c)       # [B,nc,H,N,P]
+    total = jnp.exp(cs[:, :, -1])                           # [B,nc,H]
+
+    def scan_fn(s_prev, inp):
+        s_chunk, tot = inp                                  # [B,H,N,P], [B,H]
+        s_new = s_prev * tot[..., None, None].astype(s_prev.dtype) + s_chunk
+        return s_new, s_prev
+
+    s0 = jnp.zeros((bsz, h, n, pdim), xh.dtype)
+    _, s_prevs = jax.lax.scan(
+        scan_fn, s0,
+        (s_c.swapaxes(0, 1), total.swapaxes(0, 1).astype(xh.dtype)))
+    s_prevs = s_prevs.swapaxes(0, 1)                        # [B,nc,H,N,P]
+
+    # inter-chunk: y_i += exp(cs_i) * C_i . S_prev
+    inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                       c_c, jnp.exp(cs).astype(xh.dtype), s_prevs)
+    y = (y_intra + inter).reshape(bsz, t, h, pdim)
+    return y[:, :t_orig]
+
+
+def mamba_forward(p: Dict, x, cfg: ModelConfig,
+                  cache: Dict = None) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence SSD forward.  x: [B, T, d]."""
+    s, di, nh = _dims(cfg)
+    z, xbc, dt = _split_proj(p, x, cfg)
+    xbc, conv_state = _causal_conv(xbc, p, cfg)
+    xin, bmat, cmat = jnp.split(xbc, [di, di + s.d_state], axis=-1)
+    xh = xin.reshape(*xin.shape[:2], nh, s.head_dim)
+    xh = constrain(xh, BATCH_AXES, None, MODEL_AXIS, None)
+    dt_pos = jax.nn.softplus(dt.astype(jnp.float32) +
+                             p["dt_bias"].astype(jnp.float32))
+    y = _ssd_chunked(xh, bmat, cmat, dt_pos, p["a_log"], s.chunk)
+    y = y + p["d_skip"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(*x.shape[:2], di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(x.dtype))
+    out = constrain(out, BATCH_AXES, None, None)
+    if cache is None:
+        return out, None
+    # prefill: recompute the final SSM state for decode
+    new_cache = _final_state(xh, bmat, cmat, dt_pos, p["a_log"])
+    new_cache = {"ssm": new_cache.astype(cache["ssm"].dtype),
+                 "conv": conv_state.astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+def _final_state(xh, bmat, cmat, dt, a_log):
+    """Exact state after the full sequence (for prefill -> decode handoff)."""
+    la = (-jnp.exp(a_log.astype(jnp.float32))[None, None] * dt)  # [B,T,H]
+    cs = jnp.cumsum(la, axis=1)
+    tail = jnp.exp(cs[:, -1:, :] - cs)                      # [B,T,H]
+    xdt = xh * dt[..., None].astype(xh.dtype)
+    return jnp.einsum("btn,bth,bthp->bhnp",
+                      bmat, tail.astype(xh.dtype), xdt)
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Dict:
+    s, di, nh = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, nh, s.d_state, s.head_dim), dtype),
+        "conv": jnp.zeros((batch, s.d_conv - 1, di + 2 * s.d_state), dtype),
+    }
+
+
+def mamba_cache_specs(cfg: ModelConfig) -> Dict:
+    return {"ssm": P(BATCH_AXES, MODEL_AXIS, None, None),
+            "conv": P(BATCH_AXES, None, MODEL_AXIS)}
+
+
+def mamba_decode(p: Dict, x, cache: Dict, cfg: ModelConfig
+                 ) -> Tuple[jnp.ndarray, Dict]:
+    """Single-step recurrence.  x: [B, 1, d]."""
+    s, di, nh = _dims(cfg)
+    z, xbc, dt = _split_proj(p, x, cfg)
+    xbc, conv_state = _causal_conv(xbc, p, cfg, state=cache["conv"])
+    xin, bmat, cmat = jnp.split(xbc, [di, di + s.d_state], axis=-1)
+    xh = xin.reshape(x.shape[0], 1, nh, s.head_dim)[:, 0]   # [B,H,P]
+    dt_pos = jax.nn.softplus(dt.astype(jnp.float32) +
+                             p["dt_bias"].astype(jnp.float32))[:, 0]  # [B,H]
+    a = jnp.exp(-jnp.exp(p["a_log"].astype(jnp.float32))[None] * dt_pos)
+    xdt = xh * dt_pos[..., None].astype(xh.dtype)
+    h_new = (cache["ssm"] * a[..., None, None].astype(cache["ssm"].dtype)
+             + jnp.einsum("bn,bhp->bhnp", bmat[:, 0], xdt))
+    y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0], h_new)
+    y = y + p["d_skip"].astype(y.dtype)[None, :, None] * xh
+    y = y.reshape(x.shape[0], 1, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(x.dtype))
+    out = out.astype(x.dtype)   # f32 state must not promote the residual
+    return out, {"ssm": h_new.astype(cache["ssm"].dtype),
+                 "conv": conv_state.astype(cache["conv"].dtype)}

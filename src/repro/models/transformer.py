@@ -1,0 +1,363 @@
+"""Unified model: embeds -> scanned layer groups -> norm -> logits.
+
+Layer kinds ('g' global attn, 'l' local attn, 'r' RG-LRU, 'm' Mamba-2 SSD)
+come from ``cfg.layer_pattern``; the pattern unit is scanned (stacked params,
+one compiled layer body) with any remainder layers unrolled, so an 80-layer
+model lowers to one unit's HLO.  Params, shardings, caches and cache specs
+all mirror the same grouped structure.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import attention as attn_mod
+from . import frontend as front_mod
+from . import mlp as mlp_mod
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .common import BATCH_AXES, MODEL_AXIS, constrain, dense_init, rms_norm, softcap
+from .config import ModelConfig
+
+__all__ = [
+    "layer_plan", "init_params", "param_specs", "forward",
+    "init_cache", "cache_specs", "decode_step",
+]
+
+
+# ---------------------------------------------------------------------------
+# Layer plan
+# ---------------------------------------------------------------------------
+def layer_plan(cfg: ModelConfig) -> List[Tuple[str, int]]:
+    """[(unit_pattern, n_units), ...]; remainder layers become a 1-unit group."""
+    unit = cfg.layer_pattern
+    n_full = cfg.n_layers // len(unit)
+    rem = cfg.pattern[n_full * len(unit):]
+    plan = []
+    if n_full:
+        plan.append((unit, n_full))
+    if rem:
+        plan.append((rem, 1))
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / specs / apply
+# ---------------------------------------------------------------------------
+def _init_layer(cfg: ModelConfig, kind: str, key) -> Dict:
+    d = cfg.d_model
+    keys = jax.random.split(key, 4)
+    p: Dict = {"ln1": jnp.zeros((d,))}
+    if kind in ("g", "l"):
+        p["attn"] = attn_mod.init_attn(cfg, keys[0])
+        if cfg.moe is not None:
+            p["ln2"] = jnp.zeros((d,))
+            p["moe"] = moe_mod.init_moe(cfg, keys[1])
+            if cfg.moe.dense_residual:
+                p["mlp"] = mlp_mod.init_mlp(cfg, keys[2])
+        elif cfg.mlp_kind != "none":
+            p["ln2"] = jnp.zeros((d,))
+            p["mlp"] = mlp_mod.init_mlp(cfg, keys[2])
+        if cfg.post_norms:
+            p["pn1"] = jnp.zeros((d,))
+            p["pn2"] = jnp.zeros((d,))
+    elif kind == "r":
+        p["rec"] = rglru_mod.init_rglru(cfg, keys[0])
+        if cfg.mlp_kind != "none":
+            p["ln2"] = jnp.zeros((d,))
+            p["mlp"] = mlp_mod.init_mlp(cfg, keys[2])
+    elif kind == "m":
+        p["mamba"] = ssm_mod.init_mamba(cfg, keys[0])
+    else:
+        raise ValueError(f"unknown layer kind {kind!r}")
+    return p
+
+
+def _layer_specs(cfg: ModelConfig, kind: str) -> Dict:
+    p: Dict = {"ln1": P(None)}
+    if kind in ("g", "l"):
+        p["attn"] = attn_mod.attn_specs(cfg)
+        if cfg.moe is not None:
+            p["ln2"] = P(None)
+            p["moe"] = moe_mod.moe_specs(cfg)
+            if cfg.moe.dense_residual:
+                p["mlp"] = mlp_mod.mlp_specs(cfg)
+        elif cfg.mlp_kind != "none":
+            p["ln2"] = P(None)
+            p["mlp"] = mlp_mod.mlp_specs(cfg)
+        if cfg.post_norms:
+            p["pn1"] = P(None)
+            p["pn2"] = P(None)
+    elif kind == "r":
+        p["rec"] = rglru_mod.rglru_specs(cfg)
+        if cfg.mlp_kind != "none":
+            p["ln2"] = P(None)
+            p["mlp"] = mlp_mod.mlp_specs(cfg)
+    elif kind == "m":
+        p["mamba"] = ssm_mod.mamba_specs(cfg)
+    return p
+
+
+def _apply_layer(p: Dict, x, kind: str, cfg: ModelConfig, positions,
+                 cache: Optional[Dict], pos=None, decode: bool = False):
+    """Returns (x, new_cache, aux_scalar_dict)."""
+    aux = {"aux": jnp.zeros((), jnp.float32),
+           "dropped": jnp.zeros((), jnp.float32)}
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("g", "l"):
+        if decode:
+            y, new_cache = attn_mod.attn_decode(p["attn"], h, cache, pos,
+                                                cfg, kind)
+        else:
+            y, new_cache = attn_mod.attn_forward(p["attn"], h, cfg, kind,
+                                                 positions, cache)
+    elif kind == "r":
+        if decode:
+            y, new_cache = rglru_mod.rglru_decode(p["rec"], h, cache, cfg)
+        else:
+            y, new_cache = rglru_mod.rglru_forward(p["rec"], h, cfg, cache)
+    elif kind == "m":
+        if decode:
+            y, new_cache = ssm_mod.mamba_decode(p["mamba"], h, cache, cfg)
+        else:
+            y, new_cache = ssm_mod.mamba_forward(p["mamba"], h, cfg, cache)
+    if cfg.post_norms:
+        y = rms_norm(y, p["pn1"], cfg.norm_eps)
+    x = x + y
+
+    if "mlp" in p or "moe" in p:
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if "moe" in p:
+            moe_fn = (moe_mod.ring_moe_forward if cfg.moe_impl == "ring"
+                      else moe_mod.moe_forward)
+            y2, moe_aux = moe_fn(p["moe"], h2, cfg)
+            aux["aux"] = aux["aux"] + moe_aux["moe_aux"] + moe_aux["moe_z"]
+            aux["dropped"] = aux["dropped"] + moe_aux["moe_dropped"]
+            if "mlp" in p:  # arctic's parallel dense residual branch
+                y2 = y2 + mlp_mod.mlp_forward(p["mlp"], h2, cfg)
+        else:
+            y2 = mlp_mod.mlp_forward(p["mlp"], h2, cfg)
+        if cfg.post_norms:
+            y2 = rms_norm(y2, p["pn2"], cfg.norm_eps)
+        x = x + y2
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model params / specs
+# ---------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key) -> Dict:
+    keys = jax.random.split(key, 8)
+    params: Dict = {
+        "embed": dense_init(keys[0], (cfg.vocab_size, cfg.d_model),
+                            in_axis=1),
+        "final_norm": jnp.zeros((cfg.d_model,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], (cfg.d_model, cfg.vocab_size))
+    if cfg.frontend:
+        params["frontend"] = front_mod.init_frontend(cfg, keys[2])
+    groups = []
+    gkeys = jax.random.split(keys[3], max(len(layer_plan(cfg)), 1))
+    for gi, (unit, n_units) in enumerate(layer_plan(cfg)):
+        ukeys = jax.random.split(gkeys[gi], n_units)
+
+        def one_unit(k, _unit=unit):
+            lkeys = jax.random.split(k, len(_unit))
+            return [_init_layer(cfg, kind, lk)
+                    for kind, lk in zip(_unit, lkeys)]
+
+        stacked = jax.vmap(one_unit)(ukeys)   # leaves: [n_units, ...]
+        groups.append(stacked)
+    params["groups"] = groups
+    return params
+
+
+def _stacked(spec: P) -> P:
+    return P(None, *spec)
+
+
+def param_specs(cfg: ModelConfig) -> Dict:
+    specs: Dict = {
+        "embed": P("data", MODEL_AXIS),
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P("data", MODEL_AXIS)
+    if cfg.frontend:
+        specs["frontend"] = front_mod.frontend_specs(cfg)
+    groups = []
+    for unit, _ in layer_plan(cfg):
+        unit_specs = [jax.tree.map(_stacked, _layer_specs(cfg, kind),
+                                   is_leaf=lambda s: isinstance(s, P))
+                      for kind in unit]
+        groups.append(unit_specs)
+    specs["groups"] = groups
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                      dtype):
+    if kind in ("g", "l"):
+        return attn_mod.init_attn_cache(cfg, kind, batch, max_len, dtype)
+    if kind == "r":
+        return rglru_mod.init_rglru_cache(cfg, batch)
+    if kind == "m":
+        return ssm_mod.init_mamba_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+def _layer_cache_specs(cfg: ModelConfig, kind: str):
+    if kind in ("g", "l"):
+        return attn_mod.attn_cache_specs(cfg, kind)
+    if kind == "r":
+        return rglru_mod.rglru_cache_specs(cfg)
+    if kind == "m":
+        return ssm_mod.mamba_cache_specs(cfg)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> List:
+    groups = []
+    for unit, n_units in layer_plan(cfg):
+        unit_cache = []
+        for kind in unit:
+            one = _init_layer_cache(cfg, kind, batch, max_len, dtype)
+            unit_cache.append(jax.tree.map(
+                lambda v: jnp.broadcast_to(v, (n_units, *v.shape)), one))
+        groups.append(unit_cache)
+    return groups
+
+
+def cache_specs(cfg: ModelConfig) -> List:
+    groups = []
+    for unit, _ in layer_plan(cfg):
+        groups.append([jax.tree.map(_stacked, _layer_cache_specs(cfg, kind),
+                                    is_leaf=lambda s: isinstance(s, P))
+                       for kind in unit])
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill) and decode
+# ---------------------------------------------------------------------------
+def _embed_inputs(params: Dict, batch: Dict, cfg: ModelConfig):
+    """Returns (x [B,T,d], label_positions [T])."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    if cfg.frontend == "audio":
+        x = front_mod.audio_embed(params["frontend"],
+                                  batch["frames"].astype(dtype), cfg)
+    elif cfg.frontend == "vlm":
+        tok = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dtype)
+        patches = front_mod.vlm_embed(params["frontend"],
+                                      batch["patches"].astype(dtype), cfg)
+        x = jnp.concatenate([patches.astype(dtype), tok], axis=1)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dtype)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    return constrain(x, BATCH_AXES, None, None)
+
+
+def _run_groups(params: Dict, x, cfg: ModelConfig, positions,
+                caches: Optional[List] = None):
+    """Scan each layer group; returns (x, new_caches, aux_sum)."""
+    aux_sum = {"aux": jnp.zeros((), jnp.float32),
+               "dropped": jnp.zeros((), jnp.float32)}
+    new_caches: Optional[List] = [] if caches is not None else None
+
+    for gi, (unit, n_units) in enumerate(layer_plan(cfg)):
+        gparams = params["groups"][gi]
+        gcache = caches[gi] if caches is not None else None
+
+        def unit_fn(x, unit_params, unit_cache, _unit=unit):
+            nc_list, aux_l = [], []
+            for li, kind in enumerate(_unit):
+                c = unit_cache[li] if unit_cache is not None else None
+                x, nc, aux = _apply_layer(unit_params[li], x, kind, cfg,
+                                          positions, c)
+                nc_list.append(nc)
+                aux_l.append(aux)
+            aux_tot = jax.tree.map(lambda *v: sum(v), *aux_l)
+            return x, nc_list, aux_tot
+
+        if cfg.remat:
+            unit_fn = jax.checkpoint(
+                unit_fn, policy=jax.checkpoint_policies.nothing_saveable,
+                static_argnums=())
+
+        def scan_body(x, xs):
+            unit_params, unit_cache = xs
+            x, nc, aux = unit_fn(x, unit_params, unit_cache)
+            return x, (nc, aux)
+
+        xs = (gparams, gcache)
+        x, (nc_stack, aux_stack) = jax.lax.scan(scan_body, x, xs)
+        aux_sum = jax.tree.map(lambda a, b: a + b.sum(), aux_sum, aux_stack)
+        if new_caches is not None:
+            new_caches.append(nc_stack)
+    return x, new_caches, aux_sum
+
+
+def forward(params: Dict, batch: Dict, cfg: ModelConfig,
+            caches: Optional[List] = None,
+            positions: Optional[jnp.ndarray] = None):
+    """Full-sequence forward.  Returns (logits, new_caches, aux)."""
+    x = _embed_inputs(params, batch, cfg)
+    t = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(t, dtype=jnp.int32)
+    x, new_caches, aux = _run_groups(params, x, cfg, positions, caches)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+    logits = jnp.einsum("btd,dv->btv", x, head,
+                        preferred_element_type=jnp.float32)
+    logits = softcap(logits, cfg.final_softcap)
+    logits = constrain(logits, BATCH_AXES, None, MODEL_AXIS)
+    return logits, new_caches, aux
+
+
+def decode_step(params: Dict, token, caches: List, pos, cfg: ModelConfig):
+    """One-token step.  token: [B, 1] int32; pos: scalar int32 position.
+
+    Returns (logits [B, 1, V], new_caches).
+    """
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], token, axis=0).astype(dtype)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+
+    new_caches = []
+    for gi, (unit, n_units) in enumerate(layer_plan(cfg)):
+        gparams = params["groups"][gi]
+        gcache = caches[gi]
+
+        def scan_body(x, xs, _unit=unit):
+            unit_params, unit_cache = xs
+            nc_list = []
+            for li, kind in enumerate(_unit):
+                x, nc, _ = _apply_layer(unit_params[li], x, kind, cfg,
+                                        None, unit_cache[li], pos=pos,
+                                        decode=True)
+                nc_list.append(nc)
+            return x, nc_list
+
+        x, nc_stack = jax.lax.scan(scan_body, x, (gparams, gcache))
+        new_caches.append(nc_stack)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+    logits = jnp.einsum("btd,dv->btv", x, head,
+                        preferred_element_type=jnp.float32)
+    logits = softcap(logits, cfg.final_softcap)
+    return logits, new_caches

@@ -1,0 +1,3 @@
+from .adamw import AdamW, cosine_schedule  # noqa: F401
+from .compression import (compress_int8, decompress_int8,  # noqa: F401
+                          ErrorFeedbackState)

@@ -1,0 +1,94 @@
+"""AdamW with global-norm clipping and cosine schedule (no optax here)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Union
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "cosine_schedule"]
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Union[float, Callable] = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # second-moment dtype: bf16 halves optimizer memory (beyond-paper lever)
+    nu_dtype: str = "float32"
+
+    def init(self, params) -> Dict:
+        zeros = lambda dt: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.dtype(dt)), params)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": zeros("float32"),
+            "nu": zeros(self.nu_dtype),
+            "gnorm": jnp.zeros((), jnp.float32),
+        }
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32) * scale
+            mu = self.b1 * mu + (1 - self.b1) * g
+            nu_f = nu.astype(jnp.float32)
+            nu_f = self.b2 * nu_f + (1 - self.b2) * jnp.square(g)
+            mu_hat = mu / (1 - self.b1 ** step.astype(jnp.float32))
+            nu_hat = nu_f / (1 - self.b2 ** step.astype(jnp.float32))
+            u = -self._lr(step) * (
+                mu_hat / (jnp.sqrt(nu_hat) + self.eps)
+                + self.weight_decay * p.astype(jnp.float32))
+            return u, mu, nu_f.astype(nu.dtype)
+
+        flat = jax.tree.map(upd, grads, state["mu"], state["nu"], params)
+        # unzip the (u, mu, nu) triples
+        updates = jax.tree.map(lambda t: t[0], flat,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree.map(lambda t: t[1], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree.map(lambda t: t[2], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        new_state = {"step": step, "mu": mu, "nu": nu, "gnorm": gnorm}
+        return updates, new_state
+
+    @staticmethod
+    def last_grad_norm(state) -> jnp.ndarray:
+        return state["gnorm"]
+
+    # ------------------------------------------------------ sharding helpers
+    @staticmethod
+    def state_specs(param_specs) -> Dict:
+        """Optimizer state shards exactly like the parameters (ZeRO)."""
+        from jax.sharding import PartitionSpec as P
+        return {
+            "step": P(),
+            "mu": param_specs,
+            "nu": param_specs,
+            "gnorm": P(),
+        }

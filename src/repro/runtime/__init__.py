@@ -1,0 +1,2 @@
+from .fault import StragglerDetector, RestartableLoop, PreemptionSignal  # noqa: F401
+from .elastic import choose_mesh_shape  # noqa: F401

@@ -1,0 +1,44 @@
+"""Elastic mesh sizing: pick the best mesh for however many chips survive.
+
+When a pod loses nodes, the job restarts on the remaining chip count; this
+module picks the closest-to-square (data, model) factorization subject to
+divisibility constraints (model axis must divide heads/experts), and the
+checkpoint manager re-shards state onto the new mesh (see ckpt/checkpoint).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+__all__ = ["choose_mesh_shape"]
+
+
+def choose_mesh_shape(n_chips: int, *, model_divisors: Tuple[int, ...] = (),
+                      max_model: int = 64,
+                      prefer_model: Optional[int] = None) -> Tuple[int, int]:
+    """Return (data, model) with data*model == usable_chips (largest usable).
+
+    ``model_divisors``: the model axis must divide all of these (heads,
+    kv-heads, experts...).  Prefers the largest model axis <= max_model that
+    satisfies constraints, then the squarest data split.
+    """
+    def ok_model(m: int) -> bool:
+        if m > max_model:
+            return False
+        return all(d % m == 0 for d in model_divisors if d)
+
+    best = None
+    # allow shaving chips (failed nodes) down to 87.5% utilization
+    for use in range(n_chips, max(1, int(n_chips * 0.875)) - 1, -1):
+        cands = [m for m in range(1, use + 1) if use % m == 0 and ok_model(m)]
+        if not cands:
+            continue
+        if prefer_model and prefer_model in cands:
+            m = prefer_model
+        else:
+            m = max(cands)
+        best = (use // m, m)
+        break
+    if best is None:
+        raise ValueError(f"no usable mesh for {n_chips} chips "
+                         f"with divisors {model_divisors}")
+    return best

@@ -1,0 +1,96 @@
+"""Fault tolerance runtime: restartable training loop, straggler detection,
+preemption handling.
+
+Designed for the 1000+-node regime:
+
+* every step is resumable — data batches are a pure function of (seed, step)
+  and checkpoints commit atomically, so `RestartableLoop` can recover from
+  any exception by restoring the latest checkpoint and re-entering the loop;
+* `StragglerDetector` keeps an EWMA of step times and flags outliers (on a
+  real cluster the flagged host is reported to the job scheduler for
+  drain/replace; here the hook records and, optionally, raises for tests);
+* `PreemptionSignal` converts SIGTERM (maintenance events) into a clean
+  checkpoint-and-exit between steps.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from typing import Callable, Dict, List, Optional
+
+__all__ = ["StragglerDetector", "PreemptionSignal", "RestartableLoop"]
+
+
+class StragglerDetector:
+    """EWMA step-time outlier detection (z-score on the smoothed residual)."""
+
+    def __init__(self, alpha: float = 0.1, threshold: float = 4.0,
+                 warmup: int = 5):
+        self.alpha, self.threshold, self.warmup = alpha, threshold, warmup
+        self.mean: Optional[float] = None
+        self.var: float = 0.0
+        self.count = 0
+        self.events: List[Dict] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Returns True if this step is a straggler event."""
+        self.count += 1
+        if self.mean is None:
+            self.mean = dt
+            return False
+        resid = dt - self.mean
+        slow = (self.count > self.warmup and self.var > 0 and
+                resid > self.threshold * (self.var ** 0.5))
+        # update stats only with non-outliers so one hang doesn't poison them
+        if not slow:
+            self.mean += self.alpha * resid
+            self.var = (1 - self.alpha) * (self.var + self.alpha * resid ** 2)
+        if slow:
+            self.events.append({"step": step, "dt": dt, "mean": self.mean})
+        return slow
+
+
+class PreemptionSignal:
+    """SIGTERM -> graceful stop flag checked between steps."""
+
+    def __init__(self, install: bool = True):
+        self.requested = False
+        if install:
+            try:
+                signal.signal(signal.SIGTERM, self._handler)
+            except ValueError:
+                pass  # non-main thread (tests)
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+
+class RestartableLoop:
+    """Run `body(step) -> None` for steps [start, total); on exception,
+    call `recover() -> restart_step` and continue.  Bounded retries."""
+
+    def __init__(self, total_steps: int, recover: Callable[[], int],
+                 max_restarts: int = 3,
+                 on_restart: Optional[Callable[[int, Exception], None]] = None):
+        self.total = total_steps
+        self.recover = recover
+        self.max_restarts = max_restarts
+        self.on_restart = on_restart
+        self.restarts = 0
+
+    def run(self, body: Callable[[int], None], start_step: int = 0):
+        step = start_step
+        while step < self.total:
+            try:
+                body(step)
+                step += 1
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception as e:  # noqa: BLE001 — any node failure
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                if self.on_restart:
+                    self.on_restart(step, e)
+                step = self.recover()
+        return step

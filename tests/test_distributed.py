@@ -1,0 +1,50 @@
+"""Multi-device distributed correctness, via subprocess self-tests.
+
+The main pytest process must keep a single CPU device (smoke tests assume
+it), so multi-device checks run in subprocesses that set
+``XLA_FLAGS=--xla_force_host_platform_device_count`` before importing jax.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_selftest(devices: int, check: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.selftest",
+         "--devices", str(devices), "--check", check],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert proc.returncode == 0, (
+        f"selftest {check} on {devices} devices failed:\n"
+        f"{proc.stdout}\n{proc.stderr}")
+    return proc.stdout
+
+
+@pytest.mark.parametrize("check", ["dense", "spmm", "spgemm"])
+def test_selftest_2x2(check):
+    out = _run_selftest(4, check)
+    assert "SELFTEST PASSED" in out
+
+
+@pytest.mark.slow
+def test_selftest_3x3_all_core():
+    for check in ("dense", "spmm", "spgemm"):
+        out = _run_selftest(9, check)
+        assert "SELFTEST PASSED" in out
+
+
+def test_selftest_moe():
+    out = _run_selftest(4, "moe")
+    assert "SELFTEST PASSED" in out
+
+
+def test_selftest_train_parallel():
+    out = _run_selftest(8, "train_parallel")
+    assert "SELFTEST PASSED" in out

@@ -1,0 +1,84 @@
+"""Hypothesis property tests for system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.bsr import BSR, TiledBSR, random_sparse
+from repro.core.dist import skew_dense, tileize, unskew_c_rows, untileize
+from repro.core.grid import ProcessGrid, ceil_div, pad_to_multiple
+from repro.core.roofline import spmm_internode_ai, spmm_local_ai
+from repro.kernels import ops
+
+
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(1, 16))
+def test_pad_to_multiple_properties(a, b, m):
+    p = pad_to_multiple(a, m)
+    assert p >= a and p % m == 0 and p - a < m
+    assert ceil_div(a, b) == -(-a // b)
+
+
+@given(st.integers(4, 40), st.integers(4, 40),
+       st.sampled_from([2, 4, 8]),
+       st.floats(0.0, 1.0), st.integers(0, 10))
+@settings(max_examples=25, deadline=None)
+def test_bsr_roundtrip_property(m, n, bs, density, seed):
+    d = random_sparse(m, n, density, seed=seed)
+    a = BSR.from_dense(d, bs)
+    back = np.asarray(a.to_dense())[:m, :n]
+    np.testing.assert_array_equal(back, d)
+    # rows stay sorted (kernel contract), even with extra padding
+    r = np.asarray(a.with_capacity(a.capacity + 3).rows)
+    assert (np.diff(r) >= 0).all()
+
+
+@given(st.integers(0, 5), st.sampled_from([8, 16]),
+       st.floats(0.05, 0.6))
+@settings(max_examples=15, deadline=None)
+def test_spmm_kernel_linearity(seed, size, density):
+    """BSR(a) @ (x + y) == BSR(a) @ x + BSR(a) @ y (ref impl)."""
+    a_d = random_sparse(size, size, density, seed=seed)
+    a = BSR.from_dense(a_d, 4)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((size, 4)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((size, 4)), jnp.float32)
+    lhs = ops.bsr_spmm(a, x + y, impl="ref")
+    rhs = ops.bsr_spmm(a, x, impl="ref") + ops.bsr_spmm(a, y, impl="ref")
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-4, atol=1e-4)
+
+
+@given(st.sampled_from([2, 3, 4]), st.integers(0, 5))
+@settings(max_examples=10, deadline=None)
+def test_skew_unskew_inverse(g, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((4 * g, 4 * g)), jnp.float32)
+    sk = skew_dense(x, g, "rows")
+    np.testing.assert_array_equal(np.asarray(unskew_c_rows(sk, g)),
+                                  np.asarray(x))
+    # tileize/untileize inverse
+    np.testing.assert_array_equal(np.asarray(untileize(tileize(x, g))),
+                                  np.asarray(x))
+
+
+@given(st.sampled_from([2, 4]), st.floats(0.05, 0.9), st.integers(0, 5))
+@settings(max_examples=10, deadline=None)
+def test_tiled_bsr_counts_conserve_nnzb(g, density, seed):
+    d = random_sparse(8 * g, 8 * g, density, seed=seed)
+    t = TiledBSR.from_dense(d, ProcessGrid(g, g), block_size=4)
+    total_tiles = int(np.asarray(t.counts).sum())
+    whole = BSR.from_dense(d, 4)
+    # tiling never merges blocks; block counts can only grow at tile edges
+    assert total_tiles >= whole.nnzb
+    assert t.capacity >= int(np.asarray(t.counts).max())
+
+
+@given(st.integers(32, 2048))
+@settings(max_examples=20, deadline=None)
+def test_roofline_monotone_in_width(n):
+    lo = spmm_internode_ai(1 << 16, 1 << 16, n, 16, 1e-3)
+    hi = spmm_internode_ai(1 << 16, 1 << 16, 2 * n, 16, 1e-3)
+    assert hi > lo
+    # local AI <= inter-node AI (local includes C bytes in denominator)
+    assert spmm_local_ai(1 << 16, 1 << 16, n, 16, 1e-3) < lo

@@ -1,0 +1,60 @@
+"""Paper SS4 roofline model tests."""
+import math
+
+import pytest
+
+from repro.core import roofline as rl
+
+
+def test_spmm_ai_formula_by_hand():
+    # m=k=1024, n=256, p=16, d=0.01, w=4
+    m = k = 1024.0
+    n, p, d, w = 256.0, 16.0, 0.01, 4
+    sp = math.sqrt(p)
+    flops = 2 * (d * m * k / p) * (n / sp)
+    net_bytes = w * (2 * d * m * k / p + m / sp + 1 + k * n / p)
+    assert rl.spmm_internode_ai(1024, 1024, 256, 16, 0.01) == pytest.approx(
+        flops / net_bytes)
+
+
+def test_spmm_local_ai_includes_c_bytes():
+    ai_l = rl.spmm_local_ai(1024, 1024, 256, 16, 0.01)
+    ai_n = rl.spmm_internode_ai(1024, 1024, 256, 16, 0.01)
+    assert ai_l < ai_n  # local AI divides by A+B+C bytes, net by A+B only
+
+
+def test_wider_b_is_more_intense():
+    """Paper SS6.1: wider dense B => higher inter-node AI => less net-bound."""
+    ais = [rl.spmm_internode_ai(1 << 20, 1 << 20, n, 24, 1e-4)
+           for n in (32, 128, 512, 1024)]
+    assert all(a < b for a, b in zip(ais, ais[1:]))
+
+
+def test_spgemm_local_ai_gu_formula():
+    assert rl.spgemm_local_ai(cf=4.0, b=4) == pytest.approx(
+        4.0 / ((3 + 8) * 4))
+
+
+def test_roofline_min_behavior():
+    mach = rl.SUMMIT_V100
+    # deep in the bandwidth-bound region the roofline is linear in AI
+    lo = rl.internode_roofline(1.0, 100.0, mach)
+    assert lo == pytest.approx(1.0 * mach.net_bw)
+    # huge AI saturates at the local peak
+    hi = rl.internode_roofline(1e12, 100.0, mach)
+    assert hi == pytest.approx(rl.local_peak(100.0, mach))
+
+
+def test_spmm_model_summit_is_network_bound():
+    """Paper Fig. 2: SpMM on Summit is well into the network-bound regime."""
+    # isolates-like: m=k ~ 17.5M, nnz ~ 5.2B => d ~ 1.7e-5, p=24, n=512
+    d = 5.2e9 / (17.5e6 ** 2)
+    out = rl.spmm_model(17_500_000, 17_500_000, 512, 24, d, rl.SUMMIT_V100)
+    assert out["net_bound"]
+    assert out["perf"] < rl.SUMMIT_V100.arith_peak
+
+
+def test_tpu_constants():
+    assert rl.TPU_V5E.arith_peak == pytest.approx(197e12)
+    assert rl.TPU_V5E.mem_bw == pytest.approx(819e9)
+    assert rl.TPU_V5E.net_bw == pytest.approx(50e9)

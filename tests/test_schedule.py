@@ -1,0 +1,77 @@
+"""Static workstealing scheduler tests (+ hypothesis properties)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bsr import TiledBSR, rmat_matrix
+from repro.core.grid import ProcessGrid
+from repro.core.schedule import (balance_row_perm, lpt_assign, makespan,
+                                 stage_imbalance, steal_simulation)
+
+
+def test_lpt_beats_owner_computes_on_skewed_costs():
+    rng = np.random.default_rng(0)
+    costs = rng.pareto(1.5, size=64) + 0.1      # heavy-tailed like R-MAT tiles
+    naive_max, naive_avg = makespan(costs, np.arange(64) % 16, 16)
+    a = lpt_assign(costs, 16)
+    lpt_max, lpt_avg = makespan(costs, a, 16)
+    assert abs(naive_avg - lpt_avg) < 1e-9      # same total work
+    assert lpt_max <= naive_max                 # never worse
+    assert lpt_max / lpt_avg < naive_max / naive_avg
+
+
+@given(st.lists(st.floats(0.0, 100.0), min_size=1, max_size=200),
+       st.integers(1, 16))
+@settings(max_examples=50, deadline=None)
+def test_lpt_properties(costs, n_workers):
+    a = lpt_assign(costs, n_workers)
+    # every item assigned to a valid worker exactly once
+    assert a.shape == (len(costs),)
+    assert ((0 <= a) & (a < n_workers)).all()
+    mx, avg = makespan(costs, a, n_workers)
+    # LPT is a 4/3 + 1/(3m) approximation; a loose sanity bound:
+    assert mx <= max(sum(costs) / n_workers + max(costs), 1e-12) + 1e-9
+
+
+def test_balance_row_perm_reduces_capacity_waste():
+    # R-MAT matrices concentrate nnz in low row blocks (a=0.6)
+    d = rmat_matrix(8, 8, seed=3)
+    g = ProcessGrid(4, 4)
+    before = TiledBSR.from_dense(d, g, block_size=8)
+    nbr_global = before.shape[0] // before.block_size
+    per_row = np.zeros(nbr_global)
+    # nnz per global row-block
+    for rb in range(nbr_global):
+        per_row[rb] = np.count_nonzero(
+            d[rb * before.block_size:(rb + 1) * before.block_size])
+    perm = balance_row_perm(per_row, 4)
+    assert sorted(perm.tolist()) == list(range(nbr_global))
+    d_perm = d.reshape(nbr_global, before.block_size, -1)[perm].reshape(d.shape)
+    after = TiledBSR.from_dense(d_perm, g, block_size=8)
+    assert after.capacity <= before.capacity
+    assert after.load_imbalance() <= before.load_imbalance() + 1e-9
+
+
+def test_stage_imbalance_sync_amplification():
+    """Per-stage (BSP) imbalance >= end-to-end (async) imbalance — Fig. 1."""
+    rng = np.random.default_rng(1)
+    costs = rng.pareto(1.0, size=(16, 16)) + 0.05
+    per_stage, end_to_end = stage_imbalance(costs)
+    assert per_stage >= end_to_end - 1e-9
+    assert end_to_end >= 1.0
+
+
+def test_stage_imbalance_uniform_is_balanced():
+    per_stage, end_to_end = stage_imbalance(np.ones((8, 8)))
+    assert per_stage == pytest.approx(1.0)
+    assert end_to_end == pytest.approx(1.0)
+
+
+def test_steal_simulation_ordering():
+    rng = np.random.default_rng(2)
+    costs = rng.pareto(1.2, size=(8, 8)) + 0.01
+    none = steal_simulation(costs, "none")
+    rand = steal_simulation(costs, "random", comm_penalty=0.5)
+    loc = steal_simulation(costs, "locality", comm_penalty=0.5)
+    assert rand <= none + 1e-9          # stealing never hurts the makespan
+    assert loc <= rand + 1e-6           # locality-aware >= random (paper SS6.1)
