@@ -3,9 +3,12 @@
 CPU measurement of algorithmic behaviour: wall-time of each distributed
 algorithm on 1/4/9(/16) fake host devices for an R-MAT matrix at dense
 widths N in {128, 512} (the paper's widths), plus model-predicted Summit /
-TPU-v5e times for the same tiling.  Run in a subprocess per device count
-(jax locks the device count at first init); this module is invoked by
-benchmarks.run in-process for the current device count or standalone:
+TPU-v5e times for the same tiling.  Uses the plan-based API: the DistMatrix
+handles and MatmulPlan are built once per (algorithm, width), so the timed
+loop measures pure communication + compute — the paper's steady state —
+not per-call setup.  Run in a subprocess per device count (jax locks the
+device count at first init); this module is invoked by benchmarks.run
+in-process for the current device count or standalone:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=9 \
   PYTHONPATH=src python -m benchmarks.fig34_spmm_scaling
@@ -21,10 +24,10 @@ def run(scale: int = 10, widths=(128, 512), repeats: int = 3):
     import jax
     import jax.numpy as jnp
 
-    from repro.core import spmm as dspmm
-    from repro.core.bsr import TiledBSR, rmat_matrix
+    from repro.core import api
+    from repro.core.api import DistBSR, DistDense
+    from repro.core.bsr import rmat_matrix
     from repro.core.dist import make_grid_mesh
-    from repro.core.grid import ProcessGrid
     from repro.core.roofline import SUMMIT_V100, TPU_V5E, spmm_model
 
     n_dev = len(jax.devices())
@@ -36,13 +39,13 @@ def run(scale: int = 10, widths=(128, 512), repeats: int = 3):
     for width in widths:
         b = np.random.default_rng(0).standard_normal(
             (m, width)).astype(np.float32)
-        grid = ProcessGrid(g, g)
         mesh = make_grid_mesh(g)
-        a_t = TiledBSR.from_dense(a, grid, block_size=16)
-        b_j = jnp.asarray(b)
-        for alg in dspmm.ALGORITHMS:
-            fn = lambda: dspmm.spmm(a_t, b_j, mesh=mesh, algorithm=alg,
-                                    impl="ref").block_until_ready()
+        a_h = DistBSR.from_dense(a, g=g, block_size=16)
+        b_h = DistDense.for_rhs(jnp.asarray(b), a_h)
+        for alg in api.algorithms():
+            plan = api.plan_matmul(a_h, b_h, mesh=mesh, algorithm=alg,
+                                   impl="ref")
+            fn = lambda: plan(a_h, b_h).block_until_ready()
             fn()  # compile
             t0 = time.perf_counter()
             for _ in range(repeats):

@@ -4,12 +4,51 @@ On real TPU hardware the same harness times the compiled kernels; here
 interpret-mode wall time is only a correctness-path proxy, so we also report
 the jnp-reference time (the number that matters on CPU) and the kernel's
 modelled MXU utilization on v5e.
+
+Also measures the repeated-multiply story of the plan-based API: the same
+SpMM called 10 times through one reused MatmulPlan (setup + trace amortized
+away) vs. 10 fresh plans (the legacy per-call behaviour, re-skewing and
+re-tracing every call).
 """
 from __future__ import annotations
 
 import time
 
 import numpy as np
+
+
+def _plan_reuse_rows(calls: int = 10):
+    import jax.numpy as jnp
+
+    from repro.core import api
+    from repro.core.api import DistBSR, DistDense
+    from repro.core.bsr import random_sparse
+
+    a_d = random_sparse(256, 256, 0.1, seed=3)
+    b = np.random.default_rng(3).standard_normal((256, 64)).astype(np.float32)
+    a_h = DistBSR.from_dense(a_d, g=1, block_size=32)
+    b_h = DistDense.for_rhs(jnp.asarray(b), a_h)
+
+    plan = api.plan_matmul(a_h, b_h, algorithm="ring_c", impl="ref")
+    plan(a_h, b_h).block_until_ready()      # compile once
+    t0 = time.perf_counter()
+    for _ in range(calls):
+        plan(a_h, b_h).block_until_ready()
+    t_reuse = (time.perf_counter() - t0) / calls
+
+    t0 = time.perf_counter()
+    for _ in range(calls):
+        fresh = api.plan_matmul(a_h, b_h, algorithm="ring_c", impl="ref",
+                                cache=False)
+        fresh(a_h, b_h).block_until_ready()
+    t_fresh = (time.perf_counter() - t0) / calls
+
+    return [
+        (f"plan,spmm_reuse,{calls}calls", t_reuse * 1e6,
+         f"us_per_call;traces={plan.traces}"),
+        (f"plan,spmm_fresh,{calls}calls", t_fresh * 1e6,
+         f"us_per_call;speedup={t_fresh / max(t_reuse, 1e-12):.1f}x"),
+    ]
 
 
 def run(repeats: int = 3):
@@ -41,6 +80,7 @@ def run(repeats: int = 3):
                      t_ref * 1e6,
                      f"us_ref;pallas_err={err:.1e};"
                      f"mxu_s_v5e={flops / 197e12:.2e}"))
+    rows.extend(_plan_reuse_rows())
     return rows
 
 

@@ -2,10 +2,14 @@
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 
-Builds an R-MAT sparse matrix, distributes it over a (fake multi-device)
-2x2 grid, and runs every algorithm from the paper — bulk-synchronous SUMMA
-and the asynchronous RDMA-style ring algorithms — checking them against a
-dense reference and printing the communication-balance story.
+Builds an R-MAT sparse matrix, wraps it in a persistent :class:`DistBSR`
+handle (the analogue of the paper's BCL distributed matrix: placement/skew
+decided once, reused forever), plans every algorithm from the paper — the
+bulk-synchronous SUMMA baselines and the asynchronous RDMA-style rings —
+through the plan-based API (``repro.core.api``), and checks each against a
+dense reference.  Because the operands are handles and the executables are
+plans, the second call of any plan is pure communication + compute: no
+re-pad, no re-skew, no re-trace (``plan.traces`` stays at 1).
 """
 import os
 import sys
@@ -16,10 +20,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import spmm as dspmm
-from repro.core.bsr import BSR, TiledBSR, rmat_matrix
+from repro.core import api
+from repro.core.api import DistBSR, DistDense
+from repro.core.bsr import BSR, rmat_matrix
 from repro.core.dist import make_grid_mesh
-from repro.core.grid import ProcessGrid
 from repro.core.roofline import SUMMIT_V100, TPU_V5E, spmm_model
 from repro.core.schedule import stage_imbalance
 from repro.kernels import ops
@@ -42,33 +46,47 @@ def main():
           f"pallas-vs-ref max err={np.abs(y_ref - y_pal).max():.2e}")
 
     # --- 3. distributed algorithms on a 2x2 device grid ---------------------
+    # DistMatrix handles are built ONCE; each algorithm's skew placement is
+    # materialized lazily on first use and cached on the handle.
     g = 2
     mesh = make_grid_mesh(g)
-    grid = ProcessGrid(g, g)
-    a_tiled = TiledBSR.from_dense(a_dense, grid, block_size=8)
+    a_h = DistBSR.from_dense(a_dense, g=g, block_size=8)
+    b_h = DistDense.for_rhs(jnp.asarray(b), a_h)
     want = a_dense @ b
-    print(f"\ndistributed SpMM on {g}x{g} grid "
-          f"(tile load imbalance = {a_tiled.load_imbalance():.2f}):")
-    for alg in dspmm.ALGORITHMS:
-        got = dspmm.spmm(a_tiled, jnp.asarray(b), mesh=mesh, algorithm=alg,
-                         impl="ref")
+    print(f"\ndistributed SpMM on {g}x{g} grid (tile load imbalance = "
+          f"{a_h.tiled.load_imbalance():.2f}):")
+    for alg in api.algorithms():
+        plan = api.plan_matmul(a_h, b_h, mesh=mesh, algorithm=alg,
+                               impl="ref")
+        got = plan(a_h, b_h)
+        got = plan(a_h, b_h)          # second call: cached executable
         err = np.abs(np.asarray(got) - want).max()
-        style = "BSP " if alg.startswith("summa") else "RDMA"
-        print(f"  [{style}] {alg:12s} max err {err:.2e}")
+        style = api.REGISTRY.get(alg).style.upper().ljust(4)
+        print(f"  [{style}] {alg:12s} max err {err:.2e} "
+              f"(traces={plan.traces})")
 
     # --- 4. the paper's Fig-1 story: sync amplifies imbalance ---------------
-    counts = np.asarray(a_tiled.counts, dtype=np.float64)
+    counts = np.asarray(a_h.counts, dtype=np.float64)
     per_stage, end_to_end = stage_imbalance(counts)
     print(f"\nload imbalance (flops max/avg): per-stage (BSP) "
           f"{per_stage:.2f}x vs end-to-end (async) {end_to_end:.2f}x")
 
     # --- 5. the paper's SS4 inter-node roofline ------------------------------
+    # The paper-exact model (density-based, CSR wire format) ...
     d = a_dense.mean()
     for mach in (SUMMIT_V100, TPU_V5E):
         m = spmm_model(256, 256, n_cols, g * g, float(d), mach)
         print(f"roofline[{mach.name}]: AI_net={m['ai_net']:.2f} fl/B, "
               f"predicted {m['perf'] / 1e9:.1f} GF/s/chip "
               f"({'network' if m['net_bound'] else 'compute'}-bound)")
+    # ... and the plan's own cost model (padded-BSR wire format, per step):
+    plan = api.plan_matmul(a_h, b_h, mesh=mesh, algorithm="ring_c",
+                           impl="ref")
+    cm = plan.cost_model(a_h)
+    pp = plan.predicted_perf(TPU_V5E)
+    print(f"plan cost model[ring_c]: {cm['net_bytes_per_step']:.0f} B/step, "
+          f"AI_net={cm['ai_net']:.2f} fl/B, predicted "
+          f"{pp['perf'] / 1e9:.1f} GF/s/chip on {TPU_V5E.name}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,65 @@
+"""jax version-compatibility shims.
+
+The codebase is written against the modern jax names (``jax.shard_map``,
+``jax.sharding.AxisType``, ``lax.pvary``, ``jax.sharding.set_mesh``); older
+runtimes (0.4.x, as shipped in the CPU test container) spell them
+differently or lack them entirely.  Every call site goes through this module
+so the rest of the code reads as if the modern API existed everywhere:
+
+* :func:`make_mesh`   — ``jax.make_mesh`` with Auto axis types when the
+  runtime knows about axis types, plain otherwise.
+* :func:`shard_map`   — ``jax.shard_map`` (new) or
+  ``jax.experimental.shard_map.shard_map`` (old); the new ``check_vma``
+  flag maps onto the old ``check_rep``.
+* :func:`pvary`       — identity on runtimes without the varying-axes
+  checker (it only exists to annotate vma, never to move data).
+* :func:`set_mesh`    — ``jax.sharding.set_mesh`` context where available;
+  on old jax a ``Mesh`` is itself a context manager with the same effect.
+"""
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+__all__ = ["make_mesh", "shard_map", "pvary", "set_mesh",
+           "get_abstract_mesh"]
+
+
+def make_mesh(axis_shapes, axis_names):
+    """A device mesh with Auto axis types (stable across jax 0.4/0.6+)."""
+    try:
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    except (AttributeError, TypeError):
+        return jax.make_mesh(axis_shapes, axis_names)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def pvary(x, axis_names):
+    if hasattr(lax, "pvary"):
+        return lax.pvary(x, axis_names)
+    return x
+
+
+def set_mesh(mesh):
+    if hasattr(jax.sharding, "set_mesh"):
+        return jax.sharding.set_mesh(mesh)
+    return mesh  # old jax: Mesh.__enter__ sets the global mesh
+
+
+def get_abstract_mesh():
+    """The ambient mesh set by :func:`set_mesh` (None-ish when unset)."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as mesh_lib
+    env = getattr(mesh_lib.thread_resources, "env", None)
+    return getattr(env, "physical_mesh", None)

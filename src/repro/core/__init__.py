@@ -1,3 +1,14 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# Public surface: the plan-based distributed-matmul API (see DESIGN.md).
+from .api import (REGISTRY, AlgorithmRegistry, DistBSR, DistDense,
+                  DistMatrix, MatmulPlan, algorithms, clear_plan_cache,
+                  matmul, plan_matmul, register_algorithm)
+
+__all__ = [
+    "REGISTRY", "AlgorithmRegistry", "DistBSR", "DistDense", "DistMatrix",
+    "MatmulPlan", "algorithms", "clear_plan_cache", "matmul", "plan_matmul",
+    "register_algorithm",
+]

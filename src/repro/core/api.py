@@ -1,0 +1,835 @@
+"""Plan-based public API for the distributed sparse-matmul engine.
+
+The paper's NVSHMEM implementation builds its algorithms on *persistent*
+distributed-matrix objects (BCL ``DMatrix``) with a global pointer
+directory: placement and skew are decided once, at construction, and every
+multiply afterwards is pure communication + compute.  This module is the
+TPU analogue of that design:
+
+* :class:`DistBSR` / :class:`DistDense` — distributed-matrix *handles*
+  wrapping a :class:`~repro.core.bsr.TiledBSR` / a grid-padded dense array.
+  A handle carries the process-grid geometry, dtype, logical (uncropped)
+  shape and — crucially — a cache of *placements* (natural / skew-rows /
+  skew-cols / stationary-A), so the paper's ``k_offset`` skew is
+  materialized at most once per operand and reused across calls.
+* :func:`plan_matmul` -> :class:`MatmulPlan` — precomputes the static
+  :class:`_Geom`, operand pack specs and placement requirements, and holds
+  one jit-compiled ``shard_map`` executable: calling the plan again with the
+  same abstract shapes never re-traces.  ``plan.cost_model()`` exposes the
+  per-step network volume / flops that feed ``core/roofline.py`` and
+  ``core/schedule.py``.
+* :func:`matmul` — one polymorphic entry point dispatching
+  sparse x dense -> SpMM, sparse x sparse -> SpGEMM and dense x dense ->
+  the dense engine through :data:`REGISTRY` (an :class:`AlgorithmRegistry`).
+  Algorithms register declaratively with their required operand placements,
+  output unskew and per-step wire traffic, so new schedules (work-stealing
+  layouts, stationary-B, ...) plug in without touching the engine.
+
+The algorithm family itself is unchanged from the paper adaptation (see the
+body docstrings): ``summa_bcast`` / ``summa_ag`` are the bulk-synchronous
+baselines, ``ring_c`` / ``ring_a`` the RDMA-style stationary-C /
+stationary-A rings with placement-time ``k_offset`` skew and prefetch via
+early ``ppermute``.  The legacy free functions in ``core/spmm.py`` remain
+as deprecated shims delegating to the shared plan cache here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from ..compat import pvary, shard_map
+from ..kernels import ops as kops
+from ..kernels import ref as kref
+from . import roofline as _roofline
+from . import schedule as _schedule
+from .bsr import TiledBSR
+from .dist import (make_grid_mesh, place_b_for_stationary_a, skew_bsr,
+                   skew_dense, unskew_c_rows)
+from .grid import ProcessGrid, pad_to_multiple
+
+__all__ = [
+    "NATURAL", "SKEW_ROWS", "SKEW_COLS", "STATIONARY_A", "PLACEMENTS",
+    "DistMatrix", "DistBSR", "DistDense",
+    "Algorithm", "AlgorithmRegistry", "REGISTRY", "register_algorithm",
+    "algorithms",
+    "MatmulPlan", "plan_matmul", "matmul",
+    "add_trace_hook", "remove_trace_hook",
+    "clear_plan_cache", "plan_cache_size",
+    "validate_mesh",
+]
+
+# Placement states a DistMatrix can hold (the paper's directory remaps).
+NATURAL = "natural"            # tile (i, j) at mesh position (i, j)
+SKEW_ROWS = "skew_rows"        # position (i, j) holds tile (i, (i+j)%g)
+SKEW_COLS = "skew_cols"        # position (i, j) holds tile ((i+j)%g, j)
+STATIONARY_A = "stationary_a"  # position (i, j) holds tile (j, (i+j)%g)
+PLACEMENTS = (NATURAL, SKEW_ROWS, SKEW_COLS, STATIONARY_A)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Geom:
+    """Static geometry threaded to the shard_map bodies via closure."""
+    g: int
+    tm: int           # local C tile rows
+    tn: int           # local C tile cols
+    a_nbr: int        # block-rows per A tile (0 => dense A)
+    b_nbr: int        # block-rows per B tile (0 => dense B)
+    b_nbc: int        # block-cols per B tile (0 => dense B)
+    impl: Optional[str]
+    axr: str
+    axc: str
+    out_dtype: object
+
+
+# ---------------------------------------------------------------------------
+# Local tile math (operand trees hold ONLY arrays)
+# ---------------------------------------------------------------------------
+def _local_mm(a: Dict, b: Dict, geom: _Geom) -> jnp.ndarray:
+    if "dense" in b:
+        b_dense = b["dense"]
+    else:
+        b_dense = kref.densify_raw(b["blocks"], b["rows"], b["cols"],
+                                   geom.b_nbr, geom.b_nbc)
+    if "dense" in a:
+        out = jnp.dot(a["dense"], b_dense, preferred_element_type=jnp.float32)
+    else:
+        out = kops.bsr_spmm_raw(a["blocks"], a["rows"], a["cols"], b_dense,
+                                n_block_rows=geom.a_nbr, impl=geom.impl)
+    return out.astype(geom.out_dtype)
+
+
+def _tree_ppermute(tree: Dict, axis: str, g: int) -> Dict:
+    perm = [((d + 1) % g, d) for d in range(g)]
+    return {k: lax.ppermute(v, axis, perm) for k, v in tree.items()}
+
+
+def _tree_bcast(tree: Dict, axis: str, root, my_idx) -> Dict:
+    sel = my_idx == root
+    return {k: lax.psum(jnp.where(sel, v, jnp.zeros_like(v)), axis)
+            for k, v in tree.items()}
+
+
+def _pvary(x, geom: _Geom):
+    return pvary(x, (geom.axr, geom.axc))
+
+
+# ---------------------------------------------------------------------------
+# Algorithm registry
+# ---------------------------------------------------------------------------
+# Shared plan cache (defined before the registry: registering over an
+# existing algorithm name must evict that name's cached plans).
+_PLAN_CACHE: Dict[tuple, "MatmulPlan"] = {}
+
+
+def clear_plan_cache() -> None:
+    _PLAN_CACHE.clear()
+
+
+def plan_cache_size() -> int:
+    return len(_PLAN_CACHE)
+
+
+def _evict_plans_for_algorithm(name: str) -> None:
+    for key in [k for k in _PLAN_CACHE if k[0] == name]:
+        del _PLAN_CACHE[key]
+
+
+@dataclasses.dataclass(frozen=True)
+class Algorithm:
+    """A registered schedule: shard_map body + declarative placement needs.
+
+    ``a_placement`` / ``b_placement`` name the :data:`PLACEMENTS` state each
+    operand must be in before the body runs (the handle caches the
+    transform); ``unskew_out`` names the inverse placement applied to the
+    output; ``wire`` lists which tiles ride the network each inner step
+    (feeds :meth:`MatmulPlan.cost_model`); ``wire_amortized`` marks
+    schedules whose communication happens once up front (all-gather) rather
+    than per step.
+    """
+    name: str
+    body: Callable
+    a_placement: str = NATURAL
+    b_placement: str = NATURAL
+    unskew_out: Optional[str] = None        # None | "rows"
+    wire: Tuple[str, ...] = ("a", "b")      # subset of {"a", "b", "c"}
+    wire_amortized: bool = False
+    style: str = "rdma"                     # "rdma" | "bsp"
+
+
+class AlgorithmRegistry:
+    """Name -> :class:`Algorithm` map driving :func:`matmul` dispatch."""
+
+    def __init__(self):
+        self._algorithms: Dict[str, Algorithm] = {}
+
+    def register(self, alg: Algorithm, *, overwrite: bool = False) -> Algorithm:
+        for placement, who in ((alg.a_placement, "a"), (alg.b_placement, "b")):
+            if placement not in PLACEMENTS:
+                raise ValueError(
+                    f"algorithm {alg.name!r}: unknown {who}_placement "
+                    f"{placement!r}; one of {PLACEMENTS}")
+        if alg.name in self._algorithms:
+            if not overwrite:
+                raise ValueError(f"algorithm {alg.name!r} already registered")
+            _evict_plans_for_algorithm(alg.name)
+        self._algorithms[alg.name] = alg
+        return alg
+
+    def unregister(self, name: str) -> None:
+        if self._algorithms.pop(name, None) is not None:
+            _evict_plans_for_algorithm(name)
+
+    def get(self, name: str) -> Algorithm:
+        try:
+            return self._algorithms[name]
+        except KeyError:
+            raise ValueError(
+                f"unknown algorithm {name!r}; one of {self.names()}") from None
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self._algorithms)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._algorithms
+
+    def __iter__(self):
+        return iter(self._algorithms.values())
+
+    def __len__(self) -> int:
+        return len(self._algorithms)
+
+
+REGISTRY = AlgorithmRegistry()
+
+
+def register_algorithm(name: str, *, a_placement: str = NATURAL,
+                       b_placement: str = NATURAL,
+                       unskew_out: Optional[str] = None,
+                       wire: Tuple[str, ...] = ("a", "b"),
+                       wire_amortized: bool = False, style: str = "rdma",
+                       registry: AlgorithmRegistry = REGISTRY):
+    """Decorator registering a shard_map body as a named algorithm."""
+    def deco(body):
+        registry.register(Algorithm(
+            name=name, body=body, a_placement=a_placement,
+            b_placement=b_placement, unskew_out=unskew_out, wire=wire,
+            wire_amortized=wire_amortized, style=style))
+        return body
+    return deco
+
+
+def algorithms() -> Tuple[str, ...]:
+    """Names of all registered algorithms (registration order)."""
+    return REGISTRY.names()
+
+
+# ---------------------------------------------------------------------------
+# Algorithm bodies (run inside shard_map on local tile views)
+# ---------------------------------------------------------------------------
+@register_algorithm("summa_bcast", style="bsp")
+def _body_summa_bcast(a, b, geom: _Geom):
+    """Bulk-synchronous SUMMA (paper SS2.2): a broadcast per inner step."""
+    my_row = lax.axis_index(geom.axr)
+    my_col = lax.axis_index(geom.axc)
+
+    def step(c, k):
+        a_k = _tree_bcast(a, geom.axc, k, my_col)  # bcast A[:, k] along rows
+        b_k = _tree_bcast(b, geom.axr, k, my_row)  # bcast B[k, :] along cols
+        return c + _local_mm(a_k, b_k, geom), None
+
+    c0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
+    c, _ = lax.scan(step, c0, jnp.arange(geom.g))
+    return c
+
+
+@register_algorithm("summa_ag", style="bsp", wire_amortized=True)
+def _body_summa_ag(a, b, geom: _Geom):
+    """All-gather SUMMA: one big up-front collective, g x tile footprint."""
+    a_g = {k: lax.all_gather(v, geom.axc) for k, v in a.items()}
+    b_g = {k: lax.all_gather(v, geom.axr) for k, v in b.items()}
+
+    def step(c, k):
+        a_k = {kk: v[k] for kk, v in a_g.items()}
+        b_k = {kk: v[k] for kk, v in b_g.items()}
+        return c + _local_mm(a_k, b_k, geom), None
+
+    c0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
+    c, _ = lax.scan(step, c0, jnp.arange(geom.g))
+    return c
+
+
+@register_algorithm("ring_c", a_placement=SKEW_ROWS, b_placement=SKEW_COLS)
+def _body_ring_c(a, b, geom: _Geom):
+    """Paper Alg 2 (stationary-C): skewed placement + neighbour ppermute."""
+    def step(carry, _):
+        a_t, b_t, c = carry
+        # "async_get_tile" for step k+1, issued before the local matmul so
+        # the collective-permute DMA overlaps MXU work (paper SS3.3 prefetch).
+        a_n = _tree_ppermute(a_t, geom.axc, geom.g)
+        b_n = _tree_ppermute(b_t, geom.axr, geom.g)
+        c = c + _local_mm(a_t, b_t, geom)
+        return (a_n, b_n, c), None
+
+    c0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
+    (_, _, c), _ = lax.scan(step, (a, b, c0), None, length=geom.g)
+    return c
+
+
+@register_algorithm("ring_a", b_placement=STATIONARY_A, unskew_out="rows",
+                    wire=("b", "c"))
+def _body_ring_a(a, b, geom: _Geom):
+    """Paper Alg 1 (stationary-A): B rides the ring, partial C rides back."""
+    acc0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
+
+    def step(carry, _):
+        b_t, acc = carry
+        b_n = _tree_ppermute(b_t, geom.axr, geom.g)   # prefetch next B tile
+        acc = acc + _local_mm(a, b_t, geom)
+        # route the partial C tile one hop toward its owner (the TPU
+        # replacement for the paper's remote accumulation queue push)
+        acc = lax.ppermute(acc, geom.axc,
+                           [((d + 1) % geom.g, d) for d in range(geom.g)])
+        return (b_n, acc), None
+
+    (_, acc), _ = lax.scan(step, (b, acc0), None, length=geom.g)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Distributed-matrix handles
+# ---------------------------------------------------------------------------
+def _place_bsr(t: TiledBSR, placement: str) -> TiledBSR:
+    if placement == NATURAL:
+        return t
+    if placement in (SKEW_ROWS, SKEW_COLS):
+        return skew_bsr(t, placement[len("skew_"):])
+    if placement == STATIONARY_A:
+        g = t.grid_shape[0]
+        i = np.arange(g)[:, None]
+        j = np.arange(g)[None, :]
+        si, sj = j + 0 * i, (i + j) % g   # position (i,j) <- tile (j,(i+j)%g)
+        take = lambda arr: arr[si, sj]
+        return TiledBSR(
+            blocks=take(t.blocks), rows=take(t.rows), cols=take(t.cols),
+            counts=take(t.counts), shape=t.shape, block_size=t.block_size,
+            grid_shape=t.grid_shape, capacity=t.capacity,
+            logical_shape=t.logical_shape)
+    raise ValueError(f"unknown placement {placement!r}; one of {PLACEMENTS}")
+
+
+def _place_dense(x: jnp.ndarray, g: int, placement: str) -> jnp.ndarray:
+    if placement == NATURAL:
+        return x
+    if placement == SKEW_ROWS:
+        return skew_dense(x, g, "rows")
+    if placement == SKEW_COLS:
+        return skew_dense(x, g, "cols")
+    if placement == STATIONARY_A:
+        return place_b_for_stationary_a(x, g)
+    raise ValueError(f"unknown placement {placement!r}; one of {PLACEMENTS}")
+
+
+class DistMatrix:
+    """A matrix distributed over a square ``g x g`` process grid.
+
+    Subclasses cache placement transforms: ``placed(p)`` materializes the
+    operand tree for placement ``p`` at most once per handle, the way the
+    paper's DMatrix resolves its pointer directory once at construction.
+    """
+
+    kind = "abstract"
+
+    @property
+    def g(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def shape(self) -> Tuple[int, int]:      # padded global shape
+        raise NotImplementedError
+
+    @property
+    def logical_shape(self) -> Tuple[int, int]:
+        raise NotImplementedError
+
+    @property
+    def tile_shape(self) -> Tuple[int, int]:
+        s = self.shape
+        return s[0] // self.g, s[1] // self.g
+
+    def placed(self, placement: str) -> Dict[str, jnp.ndarray]:
+        raise NotImplementedError
+
+    def abstract_key(self) -> tuple:
+        """Hashable abstract signature (shapes/dtypes, no data) for caching."""
+        raise NotImplementedError
+
+    def placements(self) -> Tuple[str, ...]:
+        """Placement states materialized so far (diagnostics/tests)."""
+        return tuple(self._placed)
+
+
+class DistBSR(DistMatrix):
+    """Handle for a block-sparse distributed matrix (wraps TiledBSR)."""
+
+    kind = "bsr"
+
+    def __init__(self, tiled: TiledBSR):
+        if tiled.grid_shape[0] != tiled.grid_shape[1]:
+            raise ValueError("square process grid required, got "
+                             f"{tiled.grid_shape}")
+        self.tiled = tiled
+        self._placed: Dict[str, Dict[str, jnp.ndarray]] = {}
+
+    @classmethod
+    def from_tiled(cls, tiled: TiledBSR) -> "DistBSR":
+        return cls(tiled)
+
+    @classmethod
+    def from_dense(cls, dense, *, g: int, block_size: int,
+                   capacity: Optional[int] = None, dtype=None) -> "DistBSR":
+        return cls(TiledBSR.from_dense(dense, ProcessGrid(g, g), block_size,
+                                       capacity=capacity, dtype=dtype))
+
+    @property
+    def g(self) -> int:
+        return self.tiled.grid_shape[0]
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.tiled.shape
+
+    @property
+    def logical_shape(self) -> Tuple[int, int]:
+        return self.tiled.logical_shape or self.tiled.shape
+
+    @property
+    def dtype(self):
+        return self.tiled.dtype
+
+    @property
+    def block_size(self) -> int:
+        return self.tiled.block_size
+
+    @property
+    def capacity(self) -> int:
+        return self.tiled.capacity
+
+    @property
+    def counts(self):
+        return self.tiled.counts
+
+    def placed(self, placement: str) -> Dict[str, jnp.ndarray]:
+        tree = self._placed.get(placement)
+        if tree is None:
+            t = _place_bsr(self.tiled, placement)
+            tree = {"blocks": t.blocks, "rows": t.rows, "cols": t.cols}
+            self._placed[placement] = tree
+        return tree
+
+    def abstract_key(self) -> tuple:
+        t = self.tiled
+        return ("bsr", t.shape, t.grid_shape, t.block_size, t.capacity,
+                jnp.dtype(t.dtype).name)
+
+
+class DistDense(DistMatrix):
+    """Handle for a dense distributed matrix (grid-padded global array)."""
+
+    kind = "dense"
+
+    def __init__(self, data, g: int,
+                 logical_shape: Optional[Tuple[int, int]] = None):
+        data = jnp.asarray(data)
+        if data.ndim != 2:
+            raise ValueError(f"expected a 2-D array, got shape {data.shape}")
+        if data.shape[0] % g or data.shape[1] % g:
+            raise ValueError(
+                f"padded shape {data.shape} not divisible by grid size {g}; "
+                "use DistDense.from_global to pad")
+        self.data = data
+        self._g = g
+        self._logical = tuple(logical_shape or data.shape)
+        self._placed: Dict[str, Dict[str, jnp.ndarray]] = {}
+
+    @classmethod
+    def from_global(cls, x, g: int, *, rows_pad: Optional[int] = None,
+                    cols_pad: Optional[int] = None) -> "DistDense":
+        """Wrap a global array, zero-padding each dim to a multiple of g."""
+        x = jnp.asarray(x)
+        m, n = x.shape
+        rp = pad_to_multiple(m, g) if rows_pad is None else rows_pad
+        cp = pad_to_multiple(n, g) if cols_pad is None else cols_pad
+        if rp < m or cp < n or rp % g or cp % g:
+            raise ValueError(f"bad padded shape ({rp}, {cp}) for array "
+                             f"{x.shape} on a {g}x{g} grid")
+        if (rp, cp) != (m, n):
+            x = jnp.zeros((rp, cp), x.dtype).at[:m, :n].set(x)
+        return cls(x, g, logical_shape=(m, n))
+
+    @classmethod
+    def for_rhs(cls, x, a: DistMatrix, *, allow_pad: bool = False
+                ) -> "DistDense":
+        """Wrap the right operand of ``a @ x``, matching a's padded K dim.
+
+        The inner dimension must equal a's logical or padded column count;
+        anything smaller is only zero-padded with an explicit
+        ``allow_pad=True`` (silent padding hides shape bugs).
+        """
+        x = jnp.asarray(x)
+        k = x.shape[0]
+        k_pad, k_log = a.shape[1], a.logical_shape[1]
+        if k > k_pad:
+            raise ValueError(
+                f"inner dimensions disagree: right operand has {k} rows, "
+                f"left operand has only {k_pad} (padded) columns")
+        if k not in (k_pad, k_log) and not allow_pad:
+            raise ValueError(
+                f"inner dimension mismatch: right operand has {k} rows but "
+                f"the left operand has {k_log} logical / {k_pad} padded "
+                "columns; pass allow_pad=True to zero-pad explicitly")
+        return cls.from_global(x, a.g, rows_pad=k_pad)
+
+    @property
+    def g(self) -> int:
+        return self._g
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.data.shape
+
+    @property
+    def logical_shape(self) -> Tuple[int, int]:
+        return self._logical
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    def placed(self, placement: str) -> Dict[str, jnp.ndarray]:
+        tree = self._placed.get(placement)
+        if tree is None:
+            tree = {"dense": _place_dense(self.data, self._g, placement)}
+            self._placed[placement] = tree
+        return tree
+
+    def abstract_key(self) -> tuple:
+        return ("dense", self.data.shape, self._g,
+                jnp.dtype(self.data.dtype).name)
+
+
+# ---------------------------------------------------------------------------
+# Mesh preparation / validation
+# ---------------------------------------------------------------------------
+def validate_mesh(mesh, g: int, axis_row: str, axis_col: str) -> None:
+    """Fail fast (and clearly) on a mesh that can't carry the g x g grid."""
+    names = tuple(mesh.axis_names)
+    if axis_row not in names or axis_col not in names:
+        raise ValueError(
+            f"mesh axes {names} do not include the required axes "
+            f"({axis_row!r}, {axis_col!r}); build one with "
+            f"make_grid_mesh({g}, {axis_row!r}, {axis_col!r})")
+    if len(names) != 2:
+        raise ValueError(
+            f"expected a 2-axis ({axis_row!r}, {axis_col!r}) mesh, got axes "
+            f"{names}")
+    shape = dict(mesh.shape)
+    got = (shape[axis_row], shape[axis_col])
+    if got != (g, g):
+        raise ValueError(
+            f"mesh shape {axis_row}={got[0]}, {axis_col}={got[1]} does not "
+            f"match the {g}x{g} process grid of the operands")
+
+
+def _prep_mesh(mesh, g: int, axis_row: str, axis_col: str):
+    if mesh is None:
+        return make_grid_mesh(g, axis_row, axis_col)
+    validate_mesh(mesh, g, axis_row, axis_col)
+    return mesh
+
+
+# ---------------------------------------------------------------------------
+# Plans
+# ---------------------------------------------------------------------------
+_TRACE_HOOKS: List[Callable] = []
+
+
+def add_trace_hook(hook: Callable) -> Callable:
+    """Register ``hook(plan)`` to fire once per executable (re)trace."""
+    _TRACE_HOOKS.append(hook)
+    return hook
+
+
+def remove_trace_hook(hook: Callable) -> None:
+    _TRACE_HOOKS.remove(hook)
+
+
+def _tree_keys(abstract_key: tuple) -> Tuple[str, ...]:
+    return ("blocks", "rows", "cols") if abstract_key[0] == "bsr" \
+        else ("dense",)
+
+
+def _specs_for_keys(keys: Tuple[str, ...], axr: str, axc: str) -> Dict:
+    out = {}
+    for k in keys:
+        if k == "dense":
+            out[k] = P(axr, axc)
+        elif k == "blocks":
+            out[k] = P(axr, axc, None, None, None)
+        else:  # rows / cols
+            out[k] = P(axr, axc, None)
+    return out
+
+
+def _local_view(tree: Dict) -> Dict:
+    """Strip the leading (1, 1) grid dims of TiledBSR leaves inside shard_map."""
+    return {k: (v if k == "dense" else v[0, 0]) for k, v in tree.items()}
+
+
+def _tile_bytes(abstract_key: tuple) -> int:
+    if abstract_key[0] == "bsr":
+        _, _, _, bs, cap, dt = abstract_key
+        return cap * bs * bs * np.dtype(dt).itemsize + cap * 2 * 4
+    _, shape, g, dt = abstract_key
+    return (shape[0] // g) * (shape[1] // g) * np.dtype(dt).itemsize
+
+
+class MatmulPlan:
+    """A reusable distributed multiply: placement + one compiled executable.
+
+    Create via :func:`plan_matmul`; execute with ``plan(a, b)``.  The
+    executable is ``jax.jit(shard_map(body))`` built once at plan time, so
+    repeated calls with the same abstract operand shapes re-use the compiled
+    program (``plan.traces`` counts actual traces).
+    """
+
+    def __init__(self, algorithm: Algorithm, geom: _Geom, mesh,
+                 a_key: tuple, b_key: tuple, allow_pad: bool = False):
+        self.algorithm = algorithm
+        self.geom = geom
+        self.mesh = mesh
+        self._a_key = a_key
+        self._b_key = b_key
+        self._allow_pad = allow_pad
+        self.traces = 0
+        body = algorithm.body
+
+        def fn(a, b):
+            self.traces += 1          # runs at trace time only
+            for hook in list(_TRACE_HOOKS):
+                hook(self)
+            return body(_local_view(a), _local_view(b), geom)
+
+        self._exec = jax.jit(shard_map(
+            fn, mesh=mesh,
+            in_specs=(_specs_for_keys(_tree_keys(a_key), geom.axr, geom.axc),
+                      _specs_for_keys(_tree_keys(b_key), geom.axr, geom.axc)),
+            out_specs=P(geom.axr, geom.axc),
+            # pallas_call's out_shape carries no vma annotation; the engine's
+            # collectives are explicit, so skip the varying-axes checker.
+            check_vma=False))
+
+    @property
+    def kind(self) -> str:
+        """"spmm" | "spgemm" | "dense" — what this plan dispatches to."""
+        a_sparse = self._a_key[0] == "bsr"
+        b_sparse = self._b_key[0] == "bsr"
+        if a_sparse:
+            return "spgemm" if b_sparse else "spmm"
+        return "dense"
+
+    def __call__(self, a, b) -> jnp.ndarray:
+        a_h, b_h = _coerce_pair(a, b, g=self.geom.g,
+                                allow_pad=self._allow_pad)
+        if (a_h.abstract_key(), b_h.abstract_key()) != (self._a_key,
+                                                        self._b_key):
+            raise ValueError(
+                "operands do not match this plan's abstract shapes "
+                f"(plan: {self._a_key} @ {self._b_key}, got "
+                f"{a_h.abstract_key()} @ {b_h.abstract_key()}); build a new "
+                "plan with plan_matmul")
+        c = self._exec(a_h.placed(self.algorithm.a_placement),
+                       b_h.placed(self.algorithm.b_placement))
+        return self._epilogue(c, a_h, b_h)
+
+    def _epilogue(self, c: jnp.ndarray, a_h: DistMatrix,
+                  b_h: DistMatrix) -> jnp.ndarray:
+        """Shared output fix-up: invert the output skew, crop padding.
+
+        One copy for all operand kinds — the sparse and dense paths get
+        identical ``logical_shape`` cropping semantics.
+        """
+        if self.algorithm.unskew_out == "rows":
+            c = unskew_c_rows(c, self.geom.g)
+        elif self.algorithm.unskew_out is not None:
+            raise ValueError(
+                f"unknown unskew_out {self.algorithm.unskew_out!r}")
+        return c[:a_h.logical_shape[0], :b_h.logical_shape[1]]
+
+    # ------------------------------------------------------------- analysis
+    def cost_model(self, a: Optional[DistBSR] = None) -> Dict[str, float]:
+        """Per-step volume / flops of one plan execution (per device).
+
+        Flop counts are the *executed* (padding included) MXU work, the
+        quantity the static scheduler balances.  Pass the sparse left-hand
+        handle to also get the paper's Fig-1 per-stage vs end-to-end
+        imbalance from its tile counts (feeds ``core/schedule.py``).
+        """
+        geom, alg = self.geom, self.algorithm
+        g = geom.g
+        a_bytes = _tile_bytes(self._a_key)
+        b_bytes = _tile_bytes(self._b_key)
+        c_bytes = geom.tm * geom.tn * np.dtype(geom.out_dtype).itemsize
+        if self._a_key[0] == "bsr":
+            bs, cap = self._a_key[3], self._a_key[4]
+            flops_step = 2 * cap * bs * bs * geom.tn
+        else:
+            tk = self._a_key[1][1] // g
+            flops_step = 2 * geom.tm * tk * geom.tn
+        tiles = {"a": a_bytes, "b": b_bytes, "c": c_bytes}
+        step_bytes = sum(tiles[t] for t in alg.wire)
+        if alg.wire_amortized:
+            step_bytes = step_bytes * (g - 1) / g
+        total_flops = float(flops_step * g)
+        total_bytes = float(step_bytes * g)
+        out = {
+            "steps": float(g),
+            "flops_per_step": float(flops_step),
+            "net_bytes_per_step": float(step_bytes),
+            "total_flops": total_flops,
+            "total_net_bytes": total_bytes,
+            "ai_net": total_flops / total_bytes if total_bytes else float("inf"),
+            "ai_local": total_flops / (g * (a_bytes + b_bytes) + c_bytes),
+        }
+        if isinstance(a, DistBSR):
+            per_stage, end_to_end = _schedule.stage_imbalance(
+                np.asarray(a.counts, dtype=np.float64))
+            out["per_stage_imbalance"] = per_stage
+            out["end_to_end_imbalance"] = end_to_end
+        return out
+
+    def predicted_perf(self, machine: "_roofline.Machine") -> Dict[str, float]:
+        """Paper SS4 inter-node roofline prediction for this plan."""
+        cm = self.cost_model()
+        peak = _roofline.local_peak(cm["ai_local"], machine)
+        return {
+            "perf": _roofline.internode_roofline(cm["ai_net"],
+                                                 cm["ai_local"], machine),
+            "local_peak": peak,
+            "net_bound": cm["ai_net"] * machine.net_bw < peak,
+            **cm,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Operand coercion + plan cache + public entry points
+# ---------------------------------------------------------------------------
+def _coerce_pair(a, b, *, g: Optional[int] = None, allow_pad: bool = False
+                 ) -> Tuple[DistMatrix, DistMatrix]:
+    if isinstance(a, DistMatrix):
+        a_h = a
+    elif isinstance(a, TiledBSR):
+        a_h = DistBSR.from_tiled(a)
+    else:
+        arr = jnp.asarray(a)
+        if g is None:
+            raise ValueError(
+                "a dense left operand needs g=<grid size> or a DistDense "
+                "handle (DistDense.from_global)")
+        a_h = DistDense.from_global(arr, g)
+    if g is not None and a_h.g != g:
+        raise ValueError(f"left operand lives on a {a_h.g}x{a_h.g} grid, "
+                         f"but g={g} was requested")
+
+    if isinstance(b, DistMatrix):
+        b_h = b
+    elif isinstance(b, TiledBSR):
+        b_h = DistBSR.from_tiled(b)
+    else:
+        b_h = DistDense.for_rhs(jnp.asarray(b), a_h, allow_pad=allow_pad)
+
+    if isinstance(a_h, DistDense) and isinstance(b_h, DistBSR):
+        raise NotImplementedError(
+            "dense x sparse is not supported; compute the transposed "
+            "product sparse x dense instead (B^T A^T = (AB)^T)")
+    if a_h.g != b_h.g:
+        raise ValueError(f"operands on different process grids: "
+                         f"{a_h.g}x{a_h.g} vs {b_h.g}x{b_h.g}")
+    if a_h.shape[1] != b_h.shape[0]:
+        raise ValueError(
+            f"inner (padded) dimensions disagree: A is {a_h.shape}, B is "
+            f"{b_h.shape}; build the right operand with "
+            "DistDense.for_rhs(b, a) to match A's padding")
+    return a_h, b_h
+
+
+def _geometry(a_h: DistMatrix, b_h: DistMatrix, *, impl: Optional[str],
+              axis_row: str, axis_col: str) -> _Geom:
+    a_bsr = isinstance(a_h, DistBSR)
+    b_bsr = isinstance(b_h, DistBSR)
+    return _Geom(
+        g=a_h.g, tm=a_h.tile_shape[0], tn=b_h.tile_shape[1],
+        a_nbr=(a_h.tile_shape[0] // a_h.block_size) if a_bsr else 0,
+        b_nbr=(b_h.tile_shape[0] // b_h.block_size) if b_bsr else 0,
+        b_nbc=(b_h.tile_shape[1] // b_h.block_size) if b_bsr else 0,
+        impl=impl, axr=axis_row, axc=axis_col,
+        out_dtype=jnp.promote_types(a_h.dtype, b_h.dtype))
+
+
+def _mesh_key(mesh):
+    try:
+        hash(mesh)
+        return mesh
+    except TypeError:
+        return id(mesh)
+
+
+def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
+                impl: Optional[str] = None, g: Optional[int] = None,
+                axis_row: str = "row", axis_col: str = "col",
+                allow_pad: bool = False, cache: bool = True) -> MatmulPlan:
+    """Build (or fetch from the shared cache) a plan for ``a @ b``.
+
+    ``a`` / ``b`` may be :class:`DistMatrix` handles (preferred — placement
+    caches live on the handle), raw :class:`TiledBSR` values, or plain dense
+    arrays (``g`` required when both are dense).  ``cache=False`` forces a
+    fresh plan — i.e. the legacy per-call behaviour, retracing every time.
+    """
+    a_h, b_h = _coerce_pair(a, b, g=g, allow_pad=allow_pad)
+    alg = REGISTRY.get(algorithm)
+    mesh = _prep_mesh(mesh, a_h.g, axis_row, axis_col)
+    key = (alg.name, impl, axis_row, axis_col, allow_pad, _mesh_key(mesh),
+           a_h.abstract_key(), b_h.abstract_key())
+    if cache:
+        plan = _PLAN_CACHE.get(key)
+        if plan is not None:
+            return plan
+    plan = MatmulPlan(alg, _geometry(a_h, b_h, impl=impl, axis_row=axis_row,
+                                     axis_col=axis_col),
+                      mesh, a_h.abstract_key(), b_h.abstract_key(),
+                      allow_pad=allow_pad)
+    if cache:
+        _PLAN_CACHE[key] = plan
+    return plan
+
+
+def matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
+           impl: Optional[str] = None, g: Optional[int] = None,
+           axis_row: str = "row", axis_col: str = "col",
+           allow_pad: bool = False) -> jnp.ndarray:
+    """Polymorphic distributed ``a @ b``.
+
+    Dispatches sparse x dense -> SpMM, sparse x sparse -> SpGEMM, and
+    dense x dense -> the dense engine, all through the shared plan cache:
+    repeated calls with the same abstract shapes never re-trace.
+    """
+    a_h, b_h = _coerce_pair(a, b, g=g, allow_pad=allow_pad)
+    plan = plan_matmul(a_h, b_h, algorithm=algorithm, mesh=mesh, impl=impl,
+                       axis_row=axis_row, axis_col=axis_col,
+                       allow_pad=allow_pad)
+    return plan(a_h, b_h)

@@ -1,333 +1,68 @@
-"""Distributed SpMM / SpGEMM / dense matmul algorithms.
+"""Deprecated per-call wrappers for the distributed matmul engine.
 
-The paper's algorithm family, adapted from one-sided RDMA to a TPU torus:
+The engine itself — the paper's algorithm family (bulk-synchronous SUMMA
+baselines and the RDMA-style ``ring_c`` / ``ring_a`` schedules with
+placement-time ``k_offset`` skew), operand packing and the shard_map bodies
+— lives in :mod:`repro.core.api` behind the plan-based interface:
 
-* ``summa_bcast``  — the bulk-synchronous SUMMA baseline (paper SS2.2): a
-  broadcast collective in every inner-loop step, realized as masked ``psum``
-  (an all-reduce per step — the synchronizing pattern the paper criticizes).
-* ``summa_ag``     — all-gather variant: every device gathers its whole tile
-  row of A / tile column of B up front (the way dense TP usually does it);
-  one big collective, g x tile memory footprint.
-* ``ring_c``       — the paper's RDMA stationary-C algorithm (Alg 2).  The
-  iteration offset ``k_offset = i + j`` becomes a skewed tile placement, and
-  each step exchanges exactly one A tile and one B tile with torus
-  neighbours via ``ppermute`` (collective-permute = the ICI analogue of an
-  RDMA get).  The next step's tiles are requested before the local matmul so
-  the compiler overlaps DMA with MXU work (the paper's prefetch).
-* ``ring_a``       — the paper's RDMA stationary-A algorithm (Alg 1).  A
-  tiles stay put; B tiles ride the ring; partial C tiles ride a reverse ring
-  toward their owners, accumulating en route (the TPU replacement for the
-  paper's remote accumulation queues).
-* stationary-B is stationary-A on the transposed problem; the paper skips it
-  for SpMM (B and C have equal size) and so do we — see DESIGN.md.
+    a_h  = api.DistBSR.from_tiled(a_tiled)
+    b_h  = api.DistDense.for_rhs(b, a_h)
+    plan = api.plan_matmul(a_h, b_h, algorithm="ring_c")
+    c    = plan(a_h, b_h)          # no re-trace, no re-skew on later calls
 
-All algorithms produce results equal to a dense reference (up to float
-accumulation order) and move identical per-step per-device volume on the
-ring paths (the paper's balanced-send property, by construction).
+or simply ``api.matmul(a, b)``.  The free functions below are kept only for
+backward compatibility; they delegate to the shared plan cache (so repeated
+calls no longer re-trace) and emit a :class:`DeprecationWarning`.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Optional
+import warnings
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
-import numpy as np
-from jax import lax
-from jax.sharding import PartitionSpec as P
 
-from ..kernels import ops as kops
-from ..kernels import ref as kref
+from . import api
+from .api import _prep_mesh, validate_mesh  # noqa: F401 (compat re-export)
 from .bsr import TiledBSR
-from .dist import (make_grid_mesh, place_b_for_stationary_a, skew_bsr,
-                   skew_dense, unskew_c_rows)
-from .grid import pad_to_multiple
 
 __all__ = ["spmm", "spgemm", "dense_matmul", "ALGORITHMS"]
 
-ALGORITHMS = ("summa_bcast", "summa_ag", "ring_c", "ring_a")
+# Snapshot of the built-in registry, in registration order (legacy name).
+ALGORITHMS = api.algorithms()
 
 
-@dataclasses.dataclass(frozen=True)
-class _Geom:
-    """Static geometry threaded to the shard_map bodies via closure."""
-    g: int
-    tm: int           # local C tile rows
-    tn: int           # local C tile cols
-    a_nbr: int        # block-rows per A tile (0 => dense A)
-    b_nbr: int        # block-rows per B tile (0 => dense B)
-    b_nbc: int        # block-cols per B tile (0 => dense B)
-    impl: Optional[str]
-    axr: str
-    axc: str
-    out_dtype: object
+def _warn(name: str) -> None:
+    warnings.warn(
+        f"repro.core.spmm.{name} is deprecated; use repro.core.api.matmul "
+        "or plan_matmul (see DESIGN.md, 'Plan-based API')",
+        DeprecationWarning, stacklevel=3)
 
 
-# ---------------------------------------------------------------------------
-# Local tile math (operand trees hold ONLY arrays)
-# ---------------------------------------------------------------------------
-def _local_mm(a: Dict, b: Dict, geom: _Geom) -> jnp.ndarray:
-    if "dense" in b:
-        b_dense = b["dense"]
-    else:
-        b_dense = kref.densify_raw(b["blocks"], b["rows"], b["cols"],
-                                   geom.b_nbr, geom.b_nbc)
-    if "dense" in a:
-        out = jnp.dot(a["dense"], b_dense, preferred_element_type=jnp.float32)
-    else:
-        out = kops.bsr_spmm_raw(a["blocks"], a["rows"], a["cols"], b_dense,
-                                n_block_rows=geom.a_nbr, impl=geom.impl)
-    return out.astype(geom.out_dtype)
+def spmm(a: TiledBSR, b: jnp.ndarray, *, mesh=None,
+         algorithm: str = "ring_c", impl: Optional[str] = None,
+         axis_row: str = "row", axis_col: str = "col",
+         allow_pad: bool = False) -> jnp.ndarray:
+    """Deprecated: distributed C = A @ B for block-sparse A and dense B."""
+    _warn("spmm")
+    return api.matmul(a, b, algorithm=algorithm, mesh=mesh, impl=impl,
+                      axis_row=axis_row, axis_col=axis_col,
+                      allow_pad=allow_pad)
 
 
-def _tree_ppermute(tree: Dict, axis: str, g: int) -> Dict:
-    perm = [((d + 1) % g, d) for d in range(g)]
-    return {k: lax.ppermute(v, axis, perm) for k, v in tree.items()}
-
-
-def _tree_bcast(tree: Dict, axis: str, root, my_idx) -> Dict:
-    sel = my_idx == root
-    return {k: lax.psum(jnp.where(sel, v, jnp.zeros_like(v)), axis)
-            for k, v in tree.items()}
-
-
-# ---------------------------------------------------------------------------
-# Algorithm bodies (run inside shard_map on local tile views)
-# ---------------------------------------------------------------------------
-def _pvary(x, geom: _Geom):
-    return lax.pvary(x, (geom.axr, geom.axc))
-
-
-def _body_ring_c(a, b, geom: _Geom):
-    def step(carry, _):
-        a_t, b_t, c = carry
-        # "async_get_tile" for step k+1, issued before the local matmul so the
-        # collective-permute DMA overlaps the MXU work (paper SS3.3 prefetch).
-        a_n = _tree_ppermute(a_t, geom.axc, geom.g)
-        b_n = _tree_ppermute(b_t, geom.axr, geom.g)
-        c = c + _local_mm(a_t, b_t, geom)
-        return (a_n, b_n, c), None
-
-    c0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
-    (_, _, c), _ = lax.scan(step, (a, b, c0), None, length=geom.g)
-    return c
-
-
-def _body_ring_a(a, b, geom: _Geom):
-    acc0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
-
-    def step(carry, _):
-        b_t, acc = carry
-        b_n = _tree_ppermute(b_t, geom.axr, geom.g)   # prefetch next B tile
-        acc = acc + _local_mm(a, b_t, geom)
-        # route the partial C tile one hop toward its owner (the TPU
-        # replacement for the paper's remote accumulation queue push)
-        acc = lax.ppermute(acc, geom.axc,
-                           [((d + 1) % geom.g, d) for d in range(geom.g)])
-        return (b_n, acc), None
-
-    (_, acc), _ = lax.scan(step, (b, acc0), None, length=geom.g)
-    return acc
-
-
-def _body_summa_bcast(a, b, geom: _Geom):
-    my_row = lax.axis_index(geom.axr)
-    my_col = lax.axis_index(geom.axc)
-
-    def step(c, k):
-        a_k = _tree_bcast(a, geom.axc, k, my_col)  # bcast A[:, k] along rows
-        b_k = _tree_bcast(b, geom.axr, k, my_row)  # bcast B[k, :] along cols
-        return c + _local_mm(a_k, b_k, geom), None
-
-    c0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
-    c, _ = lax.scan(step, c0, jnp.arange(geom.g))
-    return c
-
-
-def _body_summa_ag(a, b, geom: _Geom):
-    a_g = {k: lax.all_gather(v, geom.axc) for k, v in a.items()}
-    b_g = {k: lax.all_gather(v, geom.axr) for k, v in b.items()}
-
-    def step(c, k):
-        a_k = {kk: v[k] for kk, v in a_g.items()}
-        b_k = {kk: v[k] for kk, v in b_g.items()}
-        return c + _local_mm(a_k, b_k, geom), None
-
-    c0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
-    c, _ = lax.scan(step, c0, jnp.arange(geom.g))
-    return c
-
-
-_BODIES = {
-    "ring_c": _body_ring_c,
-    "ring_a": _body_ring_a,
-    "summa_bcast": _body_summa_bcast,
-    "summa_ag": _body_summa_ag,
-}
-
-
-# ---------------------------------------------------------------------------
-# Operand packing / placement
-# ---------------------------------------------------------------------------
-def _pack_bsr(t: TiledBSR) -> Dict:
-    return {"blocks": t.blocks, "rows": t.rows, "cols": t.cols}
-
-
-def _specs_for(tree: Dict, axr: str, axc: str) -> Dict:
-    out = {}
-    for k, v in tree.items():
-        if k == "dense":
-            out[k] = P(axr, axc)
-        elif k == "blocks":
-            out[k] = P(axr, axc, None, None, None)
-        else:  # rows / cols
-            out[k] = P(axr, axc, None)
-    return out
-
-
-def _local_view(tree: Dict) -> Dict:
-    """Strip the leading (1, 1) grid dims of TiledBSR leaves inside shard_map."""
-    return {k: (v if k == "dense" else v[0, 0]) for k, v in tree.items()}
-
-
-def _run(a_tree, b_tree, mesh, algorithm, geom: _Geom):
-    body = _BODIES[algorithm]
-
-    def fn(a, b):
-        return body(_local_view(a), _local_view(b), geom)
-
-    f = jax.shard_map(
-        fn, mesh=mesh,
-        in_specs=(_specs_for(a_tree, geom.axr, geom.axc),
-                  _specs_for(b_tree, geom.axr, geom.axc)),
-        out_specs=P(geom.axr, geom.axc),
-        # pallas_call's out_shape carries no vma annotation; the engine's
-        # collectives are explicit, so skip the varying-axes checker.
-        check_vma=False)
-    return f(a_tree, b_tree)
-
-
-def _prep_mesh(mesh, g, axr, axc):
-    return mesh if mesh is not None else make_grid_mesh(g, axr, axc)
-
-
-# ---------------------------------------------------------------------------
-# Public API
-# ---------------------------------------------------------------------------
-def spmm(a: TiledBSR, b: jnp.ndarray, *, mesh=None, algorithm: str = "ring_c",
-         impl: Optional[str] = None, axis_row: str = "row",
-         axis_col: str = "col") -> jnp.ndarray:
-    """Distributed C = A @ B for block-sparse A and dense B."""
-    if algorithm not in ALGORITHMS:
-        raise ValueError(f"unknown algorithm {algorithm}; one of {ALGORITHMS}")
-    g = a.grid_shape[0]
-    assert a.grid_shape[0] == a.grid_shape[1], "square process grid required"
-    mesh = _prep_mesh(mesh, g, axis_row, axis_col)
-    k_log, n_log = b.shape
-    if k_log > a.shape[1]:
-        raise ValueError("inner dimensions disagree")
-    n_pad = pad_to_multiple(max(n_log, g), g)
-    b_p = jnp.zeros((a.shape[1], n_pad), b.dtype).at[:k_log, :n_log].set(b)
-
-    geom = _Geom(
-        g=g, tm=a.tile_shape[0], tn=n_pad // g,
-        a_nbr=a.tile_shape[0] // a.block_size, b_nbr=0, b_nbc=0,
-        impl=impl, axr=axis_row, axc=axis_col,
-        out_dtype=jnp.promote_types(a.dtype, b.dtype))
-
-    if algorithm == "ring_c":
-        a_tree = _pack_bsr(skew_bsr(a, "rows"))
-        b_tree = {"dense": skew_dense(b_p, g, "cols")}
-    elif algorithm == "ring_a":
-        a_tree = _pack_bsr(a)
-        b_tree = {"dense": place_b_for_stationary_a(b_p, g)}
-    else:
-        a_tree = _pack_bsr(a)
-        b_tree = {"dense": b_p}
-
-    c = _run(a_tree, b_tree, mesh, algorithm, geom)
-    if algorithm == "ring_a":
-        c = unskew_c_rows(c, g)
-    m_log = (a.logical_shape or a.shape)[0]
-    return c[:m_log, :n_log]
-
-
-def spgemm(a: TiledBSR, b: TiledBSR, *, mesh=None, algorithm: str = "ring_c",
-           impl: Optional[str] = None, axis_row: str = "row",
-           axis_col: str = "col") -> jnp.ndarray:
-    """Distributed C = A @ B for block-sparse A and B (dense result tiles).
-
-    Circulating B tiles stay compressed (blocks/rows/cols) on the wire — the
-    analogue of shipping the paper's three CSR arrays — and are densified
-    only transiently for the local MXU call.
-    """
-    if algorithm not in ALGORITHMS:
-        raise ValueError(f"unknown algorithm {algorithm}; one of {ALGORITHMS}")
-    g = a.grid_shape[0]
-    assert a.grid_shape == b.grid_shape, "operands on different grids"
-    assert a.shape[1] == b.shape[0], "inner dimensions disagree"
-    mesh = _prep_mesh(mesh, g, axis_row, axis_col)
-
-    geom = _Geom(
-        g=g, tm=a.tile_shape[0], tn=b.tile_shape[1],
-        a_nbr=a.tile_shape[0] // a.block_size,
-        b_nbr=b.tile_shape[0] // b.block_size,
-        b_nbc=b.tile_shape[1] // b.block_size,
-        impl=impl, axr=axis_row, axc=axis_col,
-        out_dtype=jnp.promote_types(a.dtype, b.dtype))
-
-    if algorithm == "ring_c":
-        a_tree = _pack_bsr(skew_bsr(a, "rows"))
-        b_tree = _pack_bsr(skew_bsr(b, "cols"))
-    elif algorithm == "ring_a":
-        a_tree = _pack_bsr(a)
-        i = np.arange(g)[:, None]
-        k = np.arange(g)[None, :]
-        si, sj = k + 0 * i, (i + k) % g  # B tile (k, (i+k)%g) at position (i,k)
-        b_tree = {"blocks": b.blocks[si, sj], "rows": b.rows[si, sj],
-                  "cols": b.cols[si, sj]}
-    else:
-        a_tree = _pack_bsr(a)
-        b_tree = _pack_bsr(b)
-
-    c = _run(a_tree, b_tree, mesh, algorithm, geom)
-    if algorithm == "ring_a":
-        c = unskew_c_rows(c, g)
-    m_log = (a.logical_shape or a.shape)[0]
-    n_log = (b.logical_shape or b.shape)[1]
-    return c[:m_log, :n_log]
+def spgemm(a: TiledBSR, b: TiledBSR, *, mesh=None,
+           algorithm: str = "ring_c", impl: Optional[str] = None,
+           axis_row: str = "row", axis_col: str = "col") -> jnp.ndarray:
+    """Deprecated: distributed C = A @ B for block-sparse A and B."""
+    _warn("spgemm")
+    return api.matmul(a, b, algorithm=algorithm, mesh=mesh, impl=impl,
+                      axis_row=axis_row, axis_col=axis_col)
 
 
 def dense_matmul(a: jnp.ndarray, b: jnp.ndarray, *, g: int, mesh=None,
                  algorithm: str = "ring_c", axis_row: str = "row",
                  axis_col: str = "col") -> jnp.ndarray:
-    """Dense-dense distributed matmul through the same engine (engine test)."""
-    if algorithm not in ALGORITHMS:
-        raise ValueError(f"unknown algorithm {algorithm}; one of {ALGORITHMS}")
-    mesh = _prep_mesh(mesh, g, axis_row, axis_col)
-    m, k = a.shape
-    k2, n = b.shape
-    assert k == k2
-    mp, kp, np_ = (pad_to_multiple(x, g) for x in (m, k, n))
-    a_p = jnp.zeros((mp, kp), a.dtype).at[:m, :k].set(a)
-    b_p = jnp.zeros((kp, np_), b.dtype).at[:k, :n].set(b)
-
-    geom = _Geom(
-        g=g, tm=mp // g, tn=np_ // g, a_nbr=0, b_nbr=0, b_nbc=0,
-        impl=None, axr=axis_row, axc=axis_col,
-        out_dtype=jnp.promote_types(a.dtype, b.dtype))
-
-    if algorithm == "ring_c":
-        a_tree = {"dense": skew_dense(a_p, g, "rows")}
-        b_tree = {"dense": skew_dense(b_p, g, "cols")}
-    elif algorithm == "ring_a":
-        a_tree = {"dense": a_p}
-        b_tree = {"dense": place_b_for_stationary_a(b_p, g)}
-    else:
-        a_tree = {"dense": a_p}
-        b_tree = {"dense": b_p}
-
-    c = _run(a_tree, b_tree, mesh, algorithm, geom)
-    if algorithm == "ring_a":
-        c = unskew_c_rows(c, g)
-    return c[:m, :n]
+    """Deprecated: dense-dense distributed matmul through the same engine."""
+    _warn("dense_matmul")
+    return api.matmul(jnp.asarray(a), jnp.asarray(b), g=g, mesh=mesh,
+                      algorithm=algorithm, axis_row=axis_row,
+                      axis_col=axis_col)

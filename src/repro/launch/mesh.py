@@ -10,6 +10,8 @@ from typing import Optional, Tuple
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..compat import make_mesh
+
 __all__ = ["make_production_mesh", "filter_spec", "shardings_for",
            "batch_partition_spec"]
 
@@ -17,8 +19,7 @@ __all__ = ["make_production_mesh", "filter_spec", "shardings_for",
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def filter_spec(spec: P, mesh) -> P:

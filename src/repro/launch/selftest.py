@@ -6,6 +6,11 @@ and checks the distributed algorithms against dense references.  Used by
 clusters (a node that fails its self-test is drained before training
 starts — part of the fault-tolerance story).
 
+All distributed-matmul checks go through the plan-based API
+(:mod:`repro.core.api`); the ``api`` check additionally verifies plan/
+placement reuse (no re-trace, skew applied once) and that the deprecated
+``core.spmm`` shims are bit-identical to the planned path.
+
 Usage:  python -m repro.launch.selftest --devices 4 --check all
 """
 from __future__ import annotations
@@ -19,7 +24,7 @@ def _parse():
     p = argparse.ArgumentParser()
     p.add_argument("--devices", type=int, default=4)
     p.add_argument("--check", default="all",
-                   choices=["all", "spmm", "spgemm", "dense", "moe",
+                   choices=["all", "spmm", "spgemm", "dense", "api", "moe",
                             "train_parallel"])
     p.add_argument("--seed", type=int, default=0)
     return p.parse_args()
@@ -34,12 +39,12 @@ def main() -> int:
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.core.bsr import TiledBSR, random_sparse
-    from repro.core.grid import ProcessGrid
-    from repro.core import spmm as dspmm
+    from repro.core import api
+    from repro.core.api import DistBSR, DistDense
+    from repro.core.bsr import random_sparse
     from repro.core.dist import make_grid_mesh
 
-    needs_grid = args.check in ("all", "dense", "spmm", "spgemm")
+    needs_grid = args.check in ("all", "dense", "spmm", "spgemm", "api")
     g = int(np.sqrt(args.devices))
     mesh = None
     if needs_grid:
@@ -55,45 +60,76 @@ def main() -> int:
         if not ok:
             failures.append(name)
 
+    def check_flag(name, ok):
+        print(f"  [{'ok' if ok else 'FAIL'}] {name}")
+        if not ok:
+            failures.append(name)
+
     if args.check in ("all", "dense"):
-        print(f"== dense_matmul on {g}x{g} mesh ==")
-        a = rng.standard_normal((24, 20)).astype(np.float32)
-        b = rng.standard_normal((20, 12)).astype(np.float32)
+        print(f"== dense matmul on {g}x{g} mesh ==")
+        # odd shapes exercise the shared pad/crop epilogue on the dense path
+        a = rng.standard_normal((23, 19)).astype(np.float32)
+        b = rng.standard_normal((19, 11)).astype(np.float32)
         want = a @ b
-        for alg in dspmm.ALGORITHMS:
-            got = dspmm.dense_matmul(jnp.asarray(a), jnp.asarray(b), g=g,
-                                     mesh=mesh, algorithm=alg)
+        for alg in api.algorithms():
+            got = api.matmul(jnp.asarray(a), jnp.asarray(b), g=g, mesh=mesh,
+                             algorithm=alg)
             check(f"dense/{alg}", got, want)
 
     if args.check in ("all", "spmm"):
         print(f"== spmm on {g}x{g} mesh ==")
-        bs = 4
         a_d = random_sparse(32, 32, 0.2, seed=args.seed)
         b = rng.standard_normal((32, 8)).astype(np.float32)
-        grid = ProcessGrid(g, g)
-        a_t = TiledBSR.from_dense(a_d, grid, block_size=bs)
+        a_h = DistBSR.from_dense(a_d, g=g, block_size=4)
+        b_h = DistDense.for_rhs(jnp.asarray(b), a_h)
         want = a_d @ b
-        for alg in dspmm.ALGORITHMS:
-            got = dspmm.spmm(a_t, jnp.asarray(b), mesh=mesh, algorithm=alg,
-                             impl="ref")
+        for alg in api.algorithms():
+            got = api.matmul(a_h, b_h, mesh=mesh, algorithm=alg, impl="ref")
             check(f"spmm/{alg}", got, want)
         # Pallas interpret path through the distributed ring
-        got = dspmm.spmm(a_t, jnp.asarray(b), mesh=mesh, algorithm="ring_c",
+        got = api.matmul(a_h, b_h, mesh=mesh, algorithm="ring_c",
                          impl="interpret")
         check("spmm/ring_c[interpret]", got, want)
 
     if args.check in ("all", "spgemm"):
         print(f"== spgemm on {g}x{g} mesh ==")
-        bs = 4
         a_d = random_sparse(32, 32, 0.15, seed=args.seed + 1)
         b_d = random_sparse(32, 32, 0.2, seed=args.seed + 2)
-        grid = ProcessGrid(g, g)
-        a_t = TiledBSR.from_dense(a_d, grid, block_size=bs)
-        b_t = TiledBSR.from_dense(b_d, grid, block_size=bs)
+        a_h = DistBSR.from_dense(a_d, g=g, block_size=4)
+        b_h = DistBSR.from_dense(b_d, g=g, block_size=4)
         want = a_d @ b_d
-        for alg in dspmm.ALGORITHMS:
-            got = dspmm.spgemm(a_t, b_t, mesh=mesh, algorithm=alg, impl="ref")
+        for alg in api.algorithms():
+            got = api.matmul(a_h, b_h, mesh=mesh, algorithm=alg, impl="ref")
             check(f"spgemm/{alg}", got, want)
+
+    if args.check in ("all", "api"):
+        print(f"== plan-based API invariants on {g}x{g} mesh ==")
+        from repro.core import spmm as legacy
+        a_d = random_sparse(32, 32, 0.2, seed=args.seed + 3)
+        b = rng.standard_normal((32, 8)).astype(np.float32)
+        b_j = jnp.asarray(b)
+        a_h = DistBSR.from_dense(a_d, g=g, block_size=4)
+        b_h = DistDense.for_rhs(b_j, a_h)
+        api.clear_plan_cache()
+        plan = api.plan_matmul(a_h, b_h, mesh=mesh, algorithm="ring_c",
+                               impl="ref")
+        outs = [plan(a_h, b_h) for _ in range(5)]
+        check("api/plan_result", outs[-1], a_d @ b)
+        check_flag(f"api/plan_traces_once (traces={plan.traces})",
+                   plan.traces == 1)
+        check_flag("api/placement_cached",
+                   a_h.placed("skew_rows") is a_h.placed("skew_rows"))
+        got_new = api.matmul(a_h, b_h, mesh=mesh, algorithm="ring_c",
+                             impl="ref")
+        import warnings as _w
+        with _w.catch_warnings():
+            _w.simplefilter("ignore", DeprecationWarning)
+            got_old = legacy.spmm(a_h.tiled, b_j, mesh=mesh,
+                                  algorithm="ring_c", impl="ref")
+        check_flag("api/shim_bit_identical",
+                   bool((np.asarray(got_new) == np.asarray(got_old)).all()))
+        check_flag(f"api/shared_plan_cache (size={api.plan_cache_size()})",
+                   api.plan_cache_size() == 1)
 
     if args.check in ("all", "moe"):
         print("== MoE dispatch/combine vs dense ==")

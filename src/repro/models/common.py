@@ -85,7 +85,8 @@ def constrain(x, *spec):
     are dropped — the constraint degrades gracefully across mesh shapes.
     """
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        from ..compat import get_abstract_mesh
+        mesh = get_abstract_mesh()
         if mesh is None or mesh.empty:
             return x
         sizes = dict(mesh.shape)

@@ -1,0 +1,356 @@
+"""Plan-based distributed-matmul API tests (single-device, g=1 grid).
+
+Multi-device behaviour (2x2/3x3 grids) is covered by the subprocess
+selftests in ``tests/test_distributed.py``; here we verify the API
+contract in-process: registry dispatch for every algorithm x operand-kind
+combination against dense references, plan reuse (one trace for repeated
+calls, vs. a retrace per call on the legacy uncached path), placement-state
+caching on DistMatrix handles, bit-identical deprecation shims, mesh and
+inner-dimension validation, the cost model, and the examples/benchmarks
+API-hygiene guard.
+"""
+import importlib.util
+import pathlib
+import warnings
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import api
+from repro.core.api import (REGISTRY, Algorithm, DistBSR, DistDense, matmul,
+                            plan_matmul)
+from repro.core.bsr import TiledBSR, random_sparse
+from repro.core.dist import make_grid_mesh
+from repro.core.grid import ProcessGrid
+
+G = 1  # the main pytest process owns a single CPU device
+
+
+@pytest.fixture
+def operands():
+    a_d = random_sparse(16, 16, 0.3, seed=0)
+    b = np.random.default_rng(0).standard_normal((16, 8)).astype(np.float32)
+    b_sp = random_sparse(16, 16, 0.25, seed=1)
+    a_h = DistBSR.from_dense(a_d, g=G, block_size=4)
+    b_h = DistDense.for_rhs(jnp.asarray(b), a_h)
+    b_sph = DistBSR.from_dense(b_sp, g=G, block_size=4)
+    return a_d, b, b_sp, a_h, b_h, b_sph
+
+
+# ---------------------------------------------------------------------------
+# Dispatch: every registered algorithm x {spmm, spgemm, dense}
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("alg", api.algorithms())
+def test_dispatch_spmm(operands, alg):
+    a_d, b, _, a_h, b_h, _ = operands
+    plan = plan_matmul(a_h, b_h, algorithm=alg, impl="ref")
+    assert plan.kind == "spmm"
+    got = np.asarray(matmul(a_h, b_h, algorithm=alg, impl="ref"))
+    np.testing.assert_allclose(got, a_d @ b, atol=1e-5)
+
+
+@pytest.mark.parametrize("alg", api.algorithms())
+def test_dispatch_spgemm(operands, alg):
+    a_d, _, b_sp, a_h, _, b_sph = operands
+    plan = plan_matmul(a_h, b_sph, algorithm=alg, impl="ref")
+    assert plan.kind == "spgemm"
+    got = np.asarray(matmul(a_h, b_sph, algorithm=alg, impl="ref"))
+    np.testing.assert_allclose(got, a_d @ b_sp, atol=1e-5)
+
+
+@pytest.mark.parametrize("alg", api.algorithms())
+def test_dispatch_dense(alg):
+    a = np.random.default_rng(1).standard_normal((10, 7)).astype(np.float32)
+    b = np.random.default_rng(2).standard_normal((7, 5)).astype(np.float32)
+    plan = plan_matmul(jnp.asarray(a), jnp.asarray(b), g=G, algorithm=alg)
+    assert plan.kind == "dense"
+    got = np.asarray(matmul(jnp.asarray(a), jnp.asarray(b), g=G,
+                            algorithm=alg))
+    # logical-shape crop applies uniformly (the dense path used to skip it)
+    assert got.shape == (10, 5)
+    np.testing.assert_allclose(got, a @ b, atol=1e-5)
+
+
+def test_dense_sparse_not_implemented(operands):
+    *_, b_sph = operands
+    a = jnp.ones((16, 16), jnp.float32)
+    with pytest.raises(NotImplementedError):
+        matmul(DistDense.from_global(a, G), b_sph)
+
+
+# ---------------------------------------------------------------------------
+# Plan reuse: trace counts
+# ---------------------------------------------------------------------------
+def test_plan_reuse_traces_once(operands):
+    """10 calls of one plan: the executable is traced exactly once."""
+    _, _, _, a_h, b_h, _ = operands
+    api.clear_plan_cache()
+    seen = []
+    hook = api.add_trace_hook(lambda plan: seen.append(plan))
+    try:
+        plan = plan_matmul(a_h, b_h, algorithm="ring_c", impl="ref")
+        outs = [np.asarray(plan(a_h, b_h)) for _ in range(10)]
+    finally:
+        api.remove_trace_hook(hook)
+    assert plan.traces == 1
+    assert len(seen) == 1 and seen[0] is plan
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o, outs[0])
+
+
+def test_legacy_fresh_plans_retrace_every_call(operands):
+    """cache=False reproduces the legacy per-call behaviour: N traces."""
+    _, _, _, a_h, b_h, _ = operands
+    n_calls = 4
+    seen = []
+    hook = api.add_trace_hook(lambda plan: seen.append(plan))
+    try:
+        for _ in range(n_calls):
+            fresh = plan_matmul(a_h, b_h, algorithm="ring_c", impl="ref",
+                                cache=False)
+            fresh(a_h, b_h)
+    finally:
+        api.remove_trace_hook(hook)
+    assert len(seen) == n_calls
+
+
+def test_shims_share_plan_cache_and_match_bitwise(operands):
+    a_d, b, _, a_h, b_h, _ = operands
+    from repro.core import spmm as legacy
+    api.clear_plan_cache()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old1 = np.asarray(legacy.spmm(a_h.tiled, jnp.asarray(b),
+                                      algorithm="ring_c", impl="ref"))
+        old2 = np.asarray(legacy.spmm(a_h.tiled, jnp.asarray(b),
+                                      algorithm="ring_c", impl="ref"))
+    assert api.plan_cache_size() == 1     # both calls hit one shared plan
+    new = np.asarray(matmul(a_h, b_h, algorithm="ring_c", impl="ref"))
+    np.testing.assert_array_equal(old1, old2)
+    np.testing.assert_array_equal(old1, new)   # bit-identical, same engine
+
+
+def test_shim_spgemm_and_dense_match_bitwise(operands):
+    a_d, _, b_sp, a_h, _, b_sph = operands
+    from repro.core import spmm as legacy
+    da = np.random.default_rng(5).standard_normal((12, 9)).astype(np.float32)
+    db = np.random.default_rng(6).standard_normal((9, 6)).astype(np.float32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        old_sp = np.asarray(legacy.spgemm(a_h.tiled, b_sph.tiled,
+                                          algorithm="ring_a", impl="ref"))
+        old_d = np.asarray(legacy.dense_matmul(da, db, g=G,
+                                               algorithm="ring_a"))
+    new_sp = np.asarray(matmul(a_h, b_sph, algorithm="ring_a", impl="ref"))
+    new_d = np.asarray(matmul(jnp.asarray(da), jnp.asarray(db), g=G,
+                              algorithm="ring_a"))
+    np.testing.assert_array_equal(old_sp, new_sp)
+    np.testing.assert_array_equal(old_d, new_d)
+
+
+def test_shims_warn_deprecation(operands):
+    _, b, _, a_h, _, _ = operands
+    from repro.core import spmm as legacy
+    with pytest.warns(DeprecationWarning):
+        legacy.spmm(a_h.tiled, jnp.asarray(b), impl="ref")
+
+
+# ---------------------------------------------------------------------------
+# Placement-state caching on handles
+# ---------------------------------------------------------------------------
+def test_placement_materialized_once(operands):
+    _, _, _, a_h, b_h, _ = operands
+    t1 = a_h.placed("skew_rows")
+    t2 = a_h.placed("skew_rows")
+    assert t1 is t2                      # skew applied at most once
+    d1 = b_h.placed("skew_cols")
+    assert d1 is b_h.placed("skew_cols")
+    assert set(a_h.placements()) >= {"skew_rows"}
+
+
+def test_placement_reused_across_plans(operands):
+    _, _, _, a_h, b_h, _ = operands
+    matmul(a_h, b_h, algorithm="ring_c", impl="ref")
+    placed_before = a_h.placed("skew_rows")
+    matmul(a_h, b_h, algorithm="ring_c", impl="ref")   # second multiply
+    assert a_h.placed("skew_rows") is placed_before
+
+
+def test_unknown_placement_rejected(operands):
+    _, _, _, a_h, _, _ = operands
+    with pytest.raises(ValueError, match="placement"):
+        a_h.placed("diagonal")
+
+
+# ---------------------------------------------------------------------------
+# Validation: mesh and inner dimensions
+# ---------------------------------------------------------------------------
+def test_mesh_wrong_axis_names_rejected(operands):
+    _, _, _, a_h, b_h, _ = operands
+    bad = make_grid_mesh(1, "r", "c")
+    with pytest.raises(ValueError, match="axes"):
+        plan_matmul(a_h, b_h, mesh=bad)
+
+
+def test_mesh_wrong_shape_rejected():
+    # operands on a 2x2 grid, mesh is 1x1: caught before any shard_map
+    a_t = TiledBSR.from_dense(random_sparse(16, 16, 0.3, seed=2),
+                              ProcessGrid(2, 2), block_size=4)
+    b = jnp.ones((16, 4), jnp.float32)
+    with pytest.raises(ValueError, match="process grid"):
+        plan_matmul(a_t, b, mesh=make_grid_mesh(1))
+
+
+def test_inner_dim_mismatch_needs_allow_pad(operands):
+    a_d, _, _, a_h, _, _ = operands
+    b_short = np.random.default_rng(7).standard_normal(
+        (12, 8)).astype(np.float32)
+    with pytest.raises(ValueError, match="allow_pad"):
+        matmul(a_h, jnp.asarray(b_short))
+    got = np.asarray(matmul(a_h, jnp.asarray(b_short), allow_pad=True,
+                            impl="ref"))
+    np.testing.assert_allclose(got, a_d[:, :12] @ b_short, atol=1e-5)
+
+
+def test_inner_dim_overflow_always_rejected(operands):
+    _, _, _, a_h, _, _ = operands
+    b_long = jnp.ones((20, 8), jnp.float32)
+    with pytest.raises(ValueError, match="inner dimensions disagree"):
+        matmul(a_h, b_long, allow_pad=True)
+
+
+def test_plan_rejects_mismatched_operands(operands):
+    _, _, _, a_h, b_h, _ = operands
+    plan = plan_matmul(a_h, b_h, algorithm="ring_c", impl="ref")
+    other = DistDense.from_global(jnp.ones((16, 12), jnp.float32), G)
+    with pytest.raises(ValueError, match="plan"):
+        plan(a_h, other)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+def test_registry_unknown_algorithm(operands):
+    _, _, _, a_h, b_h, _ = operands
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        matmul(a_h, b_h, algorithm="cannon")
+
+
+def test_registry_rejects_duplicates():
+    alg = REGISTRY.get("ring_c")
+    with pytest.raises(ValueError, match="already registered"):
+        REGISTRY.register(Algorithm(name="ring_c", body=alg.body))
+
+
+def test_registry_extension_dispatches(operands):
+    """A newly registered algorithm is immediately reachable via matmul."""
+    a_d, b, _, a_h, b_h, _ = operands
+    ring_c = REGISTRY.get("ring_c")
+    REGISTRY.register(Algorithm(
+        name="ring_c_clone", body=ring_c.body,
+        a_placement=ring_c.a_placement, b_placement=ring_c.b_placement,
+        unskew_out=ring_c.unskew_out, wire=ring_c.wire))
+    try:
+        got = np.asarray(matmul(a_h, b_h, algorithm="ring_c_clone",
+                                impl="ref"))
+        np.testing.assert_allclose(got, a_d @ b, atol=1e-5)
+    finally:
+        REGISTRY.unregister("ring_c_clone")
+    assert "ring_c_clone" not in REGISTRY
+
+
+def test_plan_cache_keys_on_allow_pad(operands):
+    """allow_pad=True and =False must not share a cached plan."""
+    _, _, _, a_h, b_h, _ = operands
+    api.clear_plan_cache()
+    strict = plan_matmul(a_h, b_h, algorithm="ring_c", impl="ref")
+    padding = plan_matmul(a_h, b_h, algorithm="ring_c", impl="ref",
+                          allow_pad=True)
+    assert strict is not padding
+    b_short = np.random.default_rng(8).standard_normal(
+        (12, 8)).astype(np.float32)
+    padding(a_h, jnp.asarray(b_short))           # pads: ok
+    with pytest.raises(ValueError, match="allow_pad"):
+        strict(a_h, jnp.asarray(b_short))        # strict plan still strict
+
+
+def test_reregistering_algorithm_evicts_stale_plans(operands):
+    a_d, b, _, a_h, b_h, _ = operands
+    ring_c = REGISTRY.get("ring_c")
+    bcast = REGISTRY.get("summa_bcast")
+    name = "evict_probe"
+    REGISTRY.register(Algorithm(
+        name=name, body=ring_c.body, a_placement=ring_c.a_placement,
+        b_placement=ring_c.b_placement, unskew_out=ring_c.unskew_out,
+        wire=ring_c.wire))
+    try:
+        p1 = plan_matmul(a_h, b_h, algorithm=name, impl="ref")
+        REGISTRY.register(Algorithm(name=name, body=bcast.body),
+                          overwrite=True)
+        p2 = plan_matmul(a_h, b_h, algorithm=name, impl="ref")
+        assert p2 is not p1                      # stale plan evicted
+        assert p2.algorithm.a_placement == "natural"
+        np.testing.assert_allclose(
+            np.asarray(p2(a_h, b_h)), a_d @ b, atol=1e-5)
+    finally:
+        REGISTRY.unregister(name)
+
+
+def test_legacy_algorithms_tuple_matches_registry():
+    from repro.core import spmm as legacy
+    assert legacy.ALGORITHMS == api.algorithms()
+    assert set(legacy.ALGORITHMS) == {"summa_bcast", "summa_ag", "ring_c",
+                                      "ring_a"}
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+def test_cost_model_and_roofline(operands):
+    _, _, _, a_h, b_h, _ = operands
+    plan = plan_matmul(a_h, b_h, algorithm="ring_c", impl="ref")
+    cm = plan.cost_model(a_h)
+    assert cm["flops_per_step"] > 0 and cm["net_bytes_per_step"] > 0
+    assert cm["ai_net"] == pytest.approx(
+        cm["total_flops"] / cm["total_net_bytes"])
+    assert cm["per_stage_imbalance"] >= cm["end_to_end_imbalance"] >= 1.0
+    from repro.core.roofline import TPU_V5E
+    perf = plan.predicted_perf(TPU_V5E)
+    assert 0 < perf["perf"] <= TPU_V5E.arith_peak
+
+
+def test_cost_model_ring_a_ships_c_not_a(operands):
+    _, _, _, a_h, b_h, _ = operands
+    ring_a = plan_matmul(a_h, b_h, algorithm="ring_a", impl="ref")
+    ring_c = plan_matmul(a_h, b_h, algorithm="ring_c", impl="ref")
+    assert ring_a.algorithm.wire == ("b", "c")
+    assert ring_c.algorithm.wire == ("a", "b")
+    assert ring_a.cost_model()["net_bytes_per_step"] != \
+        ring_c.cost_model()["net_bytes_per_step"]
+
+
+# ---------------------------------------------------------------------------
+# API-hygiene guard (tools/check_api.py rides tier-1 via this test)
+# ---------------------------------------------------------------------------
+def _load_check_api():
+    path = pathlib.Path(__file__).resolve().parents[1] / "tools" \
+        / "check_api.py"
+    spec = importlib.util.spec_from_file_location("check_api", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_examples_benchmarks_use_plan_api():
+    assert _load_check_api().violations() == []
+
+
+def test_check_api_flags_deprecated_import(tmp_path):
+    (tmp_path / "examples").mkdir()
+    (tmp_path / "benchmarks").mkdir()
+    (tmp_path / "examples" / "bad.py").write_text(
+        "from repro.core.spmm import spmm\n")
+    found = _load_check_api().violations(str(tmp_path))
+    assert len(found) == 1 and "bad.py" in found[0]

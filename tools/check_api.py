@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""API-hygiene guard: examples/ and benchmarks/ must use the plan-based API.
+
+The free functions in ``repro.core.spmm`` (``spmm`` / ``spgemm`` /
+``dense_matmul``) are deprecated shims kept only for downstream
+compatibility; first-party code must go through ``repro.core.api``
+(``matmul`` / ``plan_matmul`` / ``DistBSR`` / ``DistDense``).  This script
+AST-scans ``examples/`` and ``benchmarks/`` for imports of the deprecated
+module and exits non-zero on any hit.  It is also run by
+``tests/test_api.py`` so the guard rides tier-1.
+
+Usage:  python tools/check_api.py  [repo_root]
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+from typing import List, Optional
+
+DEPRECATED_MODULE = "repro.core.spmm"
+SCANNED_DIRS = ("examples", "benchmarks")
+
+
+def violations(root: Optional[str] = None) -> List[str]:
+    root_path = pathlib.Path(root) if root else \
+        pathlib.Path(__file__).resolve().parents[1]
+    out: List[str] = []
+    for sub in SCANNED_DIRS:
+        for path in sorted((root_path / sub).glob("**/*.py")):
+            rel = path.relative_to(root_path)
+            tree = ast.parse(path.read_text(), filename=str(path))
+            for node in ast.walk(tree):
+                if isinstance(node, ast.Import):
+                    for alias in node.names:
+                        name = alias.name
+                        if name == DEPRECATED_MODULE or name.startswith(
+                                DEPRECATED_MODULE + "."):
+                            out.append(f"{rel}:{node.lineno}: "
+                                       f"import {name}")
+                elif isinstance(node, ast.ImportFrom):
+                    mod = node.module or ""
+                    if mod == DEPRECATED_MODULE or mod.startswith(
+                            DEPRECATED_MODULE + "."):
+                        out.append(f"{rel}:{node.lineno}: "
+                                   f"from {mod} import ...")
+                    elif mod == "repro.core":
+                        for alias in node.names:
+                            if alias.name == "spmm":
+                                out.append(
+                                    f"{rel}:{node.lineno}: "
+                                    "from repro.core import spmm")
+    return out
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    found = violations(argv[0] if argv else None)
+    if found:
+        print("deprecated repro.core.spmm usage (use repro.core.api):")
+        for v in found:
+            print(f"  {v}")
+        return 1
+    print(f"check_api: OK ({', '.join(SCANNED_DIRS)} are plan-API clean)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
