@@ -5,16 +5,32 @@ interpret-mode wall time is only a correctness-path proxy, so we also report
 the jnp-reference time (the number that matters on CPU) and the kernel's
 modelled MXU utilization on v5e.
 
-Also measures the repeated-multiply story of the plan-based API: the same
-SpMM called 10 times through one reused MatmulPlan (setup + trace amortized
-away) vs. 10 fresh plans (the legacy per-call behaviour, re-skewing and
-re-tracing every call).
+Also measures:
+
+* the repeated-multiply story of the plan-based API: the same SpMM called
+  10 times through one reused MatmulPlan (setup + trace amortized away) vs.
+  10 fresh plans (the legacy per-call behaviour);
+* the vectorized SpGEMM symbolic phase (``ops.build_pair_lists``): since
+  PR 2 a numpy sort-merge join + lexsort, not a python dict-of-lists loop —
+  the timing row below tracks it (~11x faster at 5k stored blocks than the
+  loop it replaced, with the gap growing in the pair count);
+* per-algorithm plan build / multiply / predicted-vs-measured cost, exported
+  as JSON by ``benchmarks/run.py --json`` (the perf trajectory baseline).
 """
 from __future__ import annotations
 
 import time
+from typing import Dict
 
 import numpy as np
+
+
+def _time(fn, repeats: int = 3) -> float:
+    fn()                       # warm (compile / cache)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats
 
 
 def _plan_reuse_rows(calls: int = 10):
@@ -51,15 +67,83 @@ def _plan_reuse_rows(calls: int = 10):
     ]
 
 
-def run(repeats: int = 3):
+def _pair_list_rows(nnzb: int = 20_000, nbr: int = 512, nbc: int = 512):
+    """Time the vectorized SpGEMM symbolic phase (host-side numpy).
+
+    Hypersparse block grid (~40 matched B blocks per A block) — the output
+    pair count, which dominates both the join and the lexsort, stays
+    O(nnzb), like a real SpGEMM tile.  The replaced dict-of-lists python
+    loop measured ~11x slower at 5k blocks on this harness (and scaled
+    with the python-level pair count, not numpy throughput).
+    """
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(7)
+    a_rows = np.sort(rng.integers(0, nbr, nnzb)).astype(np.int32)
+    a_cols = rng.integers(0, nbc, nnzb).astype(np.int32)
+    b_rows = np.sort(rng.integers(0, nbr, nnzb)).astype(np.int32)
+    b_cols = rng.integers(0, nbc, nnzb).astype(np.int32)
+
+    t = _time(lambda: ops.build_pair_lists(
+        a_rows, a_cols, nnzb, b_rows, b_cols, nnzb, nbr, nbc), repeats=3)
+    n_pairs = ops.build_pair_lists(
+        a_rows, a_cols, nnzb, b_rows, b_cols, nnzb, nbr, nbc)[4]
+    return [(f"symbolic,build_pair_lists,{nnzb}blk", t * 1e3,
+             f"ms;pairs={n_pairs};vectorized=numpy_join+lexsort")]
+
+
+def _algorithm_rows(smoke: bool = False) -> Dict:
+    """Per-algorithm plan build / multiply / predicted cost (g=1, ref impl).
+
+    Returns {"algorithms": {name: {metric: float}}, "auto_selection":
+    {"choice": name, "scores": {name: float}}} — timings and the
+    auto-selection result are separate keys so trajectory consumers can
+    diff the floats without special-casing.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import api
+    from repro.core.api import DistBSR, DistDense
+    from repro.core.bsr import random_sparse
+    from repro.core.roofline import TPU_V5E
+
+    m = 128 if smoke else 512
+    a_d = random_sparse(m, m, 0.08, seed=5)
+    b = np.random.default_rng(5).standard_normal((m, 64)).astype(np.float32)
+    a_h = DistBSR.from_dense(a_d, g=1, block_size=32)
+    b_h = DistDense.for_rhs(jnp.asarray(b), a_h)
+    out: Dict[str, Dict[str, float]] = {}
+    for alg in api.algorithms():
+        t0 = time.perf_counter()
+        plan = api.plan_matmul(a_h, b_h, algorithm=alg, impl="ref",
+                               cache=False)
+        t_build = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        plan(a_h, b_h).block_until_ready()
+        t_first = time.perf_counter() - t0
+        t_call = _time(lambda: plan(a_h, b_h).block_until_ready(),
+                       repeats=2 if smoke else 5)
+        out[alg] = {
+            "plan_build_s": t_build,
+            "first_call_s": t_first,          # trace + compile + run
+            "per_multiply_s": t_call,
+            "predicted_s_v5e": plan.predicted_cost(TPU_V5E),
+        }
+    choice, scores = api.auto_select(a_h, b_h, machine=TPU_V5E)
+    return {"algorithms": out,
+            "auto_selection": {"choice": choice, "scores": scores}}
+
+
+def run(repeats: int = 3, smoke: bool = False):
     import jax.numpy as jnp
 
     from repro.core.bsr import BSR, random_sparse
     from repro.kernels import ops
 
     rows = []
-    for m, k, n, bs, dens in ((256, 256, 256, 32, 0.1),
-                              (512, 512, 128, 64, 0.05)):
+    cases = ((256, 256, 256, 32, 0.1),) if smoke else \
+        ((256, 256, 256, 32, 0.1), (512, 512, 128, 64, 0.05))
+    for m, k, n, bs, dens in cases:
         a_d = random_sparse(m, k, dens, seed=0)
         b = np.random.default_rng(0).standard_normal((k, n)).astype(
             np.float32)
@@ -80,12 +164,24 @@ def run(repeats: int = 3):
                      t_ref * 1e6,
                      f"us_ref;pallas_err={err:.1e};"
                      f"mxu_s_v5e={flops / 197e12:.2e}"))
-    rows.extend(_plan_reuse_rows())
+    rows.extend(_pair_list_rows(*((2_000, 256, 256) if smoke
+                                  else (20_000, 512, 512))))
+    if not smoke:
+        rows.extend(_plan_reuse_rows())
     return rows
 
 
-def main():
-    for name, val, unit in run():
+def run_json(smoke: bool = False) -> Dict:
+    """Structured results for BENCH_kernels.json (see benchmarks/run.py)."""
+    return {
+        "csv_rows": [list(r) for r in run(repeats=1 if smoke else 3,
+                                          smoke=smoke)],
+        "algorithms_g1": _algorithm_rows(smoke=smoke),
+    }
+
+
+def main(smoke: bool = False):
+    for name, val, unit in run(smoke=smoke):
         print(f"{name},{val:.1f},{unit}")
 
 

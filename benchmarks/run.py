@@ -6,34 +6,111 @@ rest run in-process.
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run fig1 fig2  # subset
+  PYTHONPATH=src python -m benchmarks.run --smoke    # quick CI pass
+  PYTHONPATH=src python -m benchmarks.run --json     # write BENCH_kernels.json
+
+``--json`` runs the kernel micro-bench plus the balanced-tiling experiment
+(R-MAT scale-10, 4x4 grid, in a 16-device subprocess) and writes
+``BENCH_kernels.json`` at the repo root: plan build time, per-multiply
+time, padded-flop waste and predicted-vs-measured cost per algorithm — the
+perf-trajectory baseline for future PRs.
 """
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
 
 SCALING_DEVICE_COUNTS = (1, 4, 9)
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
-def _run_subprocess(module: str, devices: int) -> None:
+def _subprocess_env(devices: int) -> dict:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
-    src = os.path.join(os.path.dirname(__file__), "..", "src")
-    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get(
-        "PYTHONPATH", "")
-    out = subprocess.run([sys.executable, "-m", module], env=env,
-                         capture_output=True, text=True, timeout=1200)
+    src = os.path.join(REPO_ROOT, "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def _run_subprocess(module: str, devices: int, *extra_args: str,
+                    quiet: bool = False) -> str:
+    out = subprocess.run(
+        [sys.executable, "-m", module, *extra_args],
+        env=_subprocess_env(devices), capture_output=True, text=True,
+        timeout=1200)
     if out.returncode != 0:
         tail = out.stderr.strip().splitlines()[-1] if out.stderr else "?"
         print(f"{module},ERROR,{tail}")
-    else:
+        return ""
+    if not quiet:
         sys.stdout.write(out.stdout)
+    return out.stdout
+
+
+def _write_json(smoke: bool) -> None:
+    from benchmarks import kernels_bench
+    # "smoke" marks reduced-scale payloads so trajectory comparisons never
+    # mistake a quick CI pass for the full baseline.
+    payload = {"smoke": smoke,
+               "kernels": kernels_bench.run_json(smoke=smoke)}
+    # The balance experiment configures 16 fake devices before importing
+    # jax, so it must run in its own process; it prints one JSON object.
+    extra = ("--smoke",) if smoke else ()
+    raw = _run_subprocess("benchmarks.balance_bench", 16, *extra, quiet=True)
+    try:
+        payload["balance_rmat_4x4"] = json.loads(raw) if raw else {
+            "error": "balance bench failed"}
+    except json.JSONDecodeError as e:
+        payload["balance_rmat_4x4"] = {"error": f"unparseable output: {e}"}
+        raw = ""   # degrade like the empty-output case (exit 1 below)
+    # Smoke and error payloads go to sibling files so neither a quick CI
+    # pass nor a failed run can clobber the committed full-scale baseline.
+    if smoke:
+        name = "BENCH_kernels_smoke.json"
+    elif not raw:
+        name = "BENCH_kernels_error.json"
+    else:
+        name = "BENCH_kernels.json"
+    path = os.path.join(REPO_ROOT, name)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"wrote {path}")
+    if not raw:
+        # don't let CI record a baseline missing the headline experiment
+        sys.exit(1)
 
 
 def main() -> None:
-    which = set(sys.argv[1:]) or {"fig1", "fig2", "fig34", "fig5", "table2",
-                                  "kernels"}
+    argv = sys.argv[1:]
+    unknown = [a for a in argv if a.startswith("-")
+               and a not in ("--smoke", "--json")]
+    if unknown:
+        sys.exit(f"unknown flags {unknown}; supported: --smoke --json")
+    smoke = "--smoke" in argv
+    as_json = "--json" in argv
+    which = {a for a in argv if not a.startswith("-")}
+    if which and (smoke or as_json):
+        sys.exit(f"figure selectors {sorted(which)} cannot be combined "
+                 "with --smoke/--json (fixed payloads)")
+    if as_json:
+        _write_json(smoke)
+        return
+    if smoke:
+        # Quick self-contained pass for tools/run_tier1.sh: kernel oracle
+        # rows + one scale-8 balance check, no multi-minute figure sweeps.
+        from benchmarks import kernels_bench
+        kernels_bench.main(smoke=True)
+        raw = _run_subprocess("benchmarks.balance_bench", 16, "--smoke",
+                              quiet=True)
+        print(f"smoke,balance_bench,{'ok' if raw else 'FAILED'}")
+        if not raw:
+            sys.exit(1)
+        return
+    which = which or {"fig1", "fig2", "fig34", "fig5", "table2", "kernels"}
+    # fall through: full figure sweep (optionally filtered by name)
     if "fig1" in which:
         from benchmarks import fig1_load_imbalance
         fig1_load_imbalance.main()

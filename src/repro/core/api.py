@@ -25,12 +25,26 @@ TPU analogue of that design:
   output unskew and per-step wire traffic, so new schedules (work-stealing
   layouts, stationary-B, ...) plug in without touching the engine.
 
-The algorithm family itself is unchanged from the paper adaptation (see the
-body docstrings): ``summa_bcast`` / ``summa_ag`` are the bulk-synchronous
-baselines, ``ring_c`` / ``ring_a`` the RDMA-style stationary-C /
-stationary-A rings with placement-time ``k_offset`` skew and prefetch via
-early ``ppermute``.  The legacy free functions in ``core/spmm.py`` remain
-as deprecated shims delegating to the shared plan cache here.
+The algorithm family (see the body docstrings): ``summa_bcast`` /
+``summa_ag`` are the bulk-synchronous baselines, ``ring_c`` / ``ring_a``
+the RDMA-style stationary-C / stationary-A rings with placement-time
+``k_offset`` skew and prefetch via early ``ppermute``, and
+``ring_c_bidir`` a bidirectional stationary-C ring that splits the output
+into column half-panels circulating in opposite directions (full-duplex
+links).  ``plan_matmul(..., algorithm="auto")`` scores every registered
+schedule with the alpha-beta-gamma cost model (:func:`auto_select`) and
+builds the cheapest — the static analogue of Bharadwaj et al.'s
+observation that the best distributed sparse schedule flips with sparsity
+and aspect ratio.
+
+Two hot-loop invariants the bodies maintain (asserted by the jaxpr test in
+``tests/test_api.py``): sparse A tiles arrive *pre-augmented* from
+:class:`~repro.core.bsr.TiledBSR` (no coverage concat+sort inside the
+scanned step), and sparse B tiles are densified once per ring pass, before
+the scan (``_densify_b``), never inside it.
+
+The legacy free functions in ``core/spmm.py`` remain as deprecated shims
+delegating to the shared plan cache here.
 """
 from __future__ import annotations
 
@@ -57,7 +71,7 @@ __all__ = [
     "NATURAL", "SKEW_ROWS", "SKEW_COLS", "STATIONARY_A", "PLACEMENTS",
     "DistMatrix", "DistBSR", "DistDense",
     "Algorithm", "AlgorithmRegistry", "REGISTRY", "register_algorithm",
-    "algorithms",
+    "algorithms", "auto_select",
     "MatmulPlan", "plan_matmul", "matmul",
     "add_trace_hook", "remove_trace_hook",
     "clear_plan_cache", "plan_cache_size",
@@ -90,22 +104,35 @@ class _Geom:
 # ---------------------------------------------------------------------------
 # Local tile math (operand trees hold ONLY arrays)
 # ---------------------------------------------------------------------------
-def _local_mm(a: Dict, b: Dict, geom: _Geom) -> jnp.ndarray:
+def _densify_b(b: Dict, geom: _Geom) -> Dict:
+    """Densify a sparse B tile ONCE, before the scanned ring steps.
+
+    Every schedule consumes B as a dense tile; doing the scatter here means
+    each B tile is densified at most once per ring pass, and the scanned
+    step body stays free of scatter/sort work (asserted by the jaxpr test).
+    The densified tile is also what rides the wire — see ``_cost_model``.
+    """
     if "dense" in b:
-        b_dense = b["dense"]
-    else:
-        b_dense = kref.densify_raw(b["blocks"], b["rows"], b["cols"],
-                                   geom.b_nbr, geom.b_nbc)
+        return b
+    return {"dense": kref.densify_raw(b["blocks"], b["rows"], b["cols"],
+                                      geom.b_nbr, geom.b_nbc)}
+
+
+def _local_mm(a: Dict, b: Dict, geom: _Geom) -> jnp.ndarray:
+    b_dense = b["dense"]    # bodies pre-densify sparse B via _densify_b
     if "dense" in a:
         out = jnp.dot(a["dense"], b_dense, preferred_element_type=jnp.float32)
     else:
+        # TiledBSR tiles are pre-augmented/pre-sorted at tiling time, so the
+        # kernel wrapper must not redo coverage inside the compiled loop.
         out = kops.bsr_spmm_raw(a["blocks"], a["rows"], a["cols"], b_dense,
-                                n_block_rows=geom.a_nbr, impl=geom.impl)
+                                n_block_rows=geom.a_nbr, impl=geom.impl,
+                                augment=False)
     return out.astype(geom.out_dtype)
 
 
-def _tree_ppermute(tree: Dict, axis: str, g: int) -> Dict:
-    perm = [((d + 1) % g, d) for d in range(g)]
+def _tree_ppermute(tree: Dict, axis: str, g: int, sign: int = 1) -> Dict:
+    perm = [((d + sign) % g, d) for d in range(g)]
     return {k: lax.ppermute(v, axis, perm) for k, v in tree.items()}
 
 
@@ -148,18 +175,23 @@ class Algorithm:
     operand must be in before the body runs (the handle caches the
     transform); ``unskew_out`` names the inverse placement applied to the
     output; ``wire`` lists which tiles ride the network each inner step
-    (feeds :meth:`MatmulPlan.cost_model`); ``wire_amortized`` marks
-    schedules whose communication happens once up front (all-gather) rather
-    than per step.
+    (repeats allowed — ``ring_c_bidir`` ships A in both directions; feeds
+    :meth:`MatmulPlan.cost_model`); ``wire_amortized`` marks schedules whose
+    communication happens once up front (all-gather) rather than per step;
+    ``duplex=2`` marks schedules that split traffic over both directions of
+    the full-duplex links, halving serialized wire time.
     """
     name: str
     body: Callable
     a_placement: str = NATURAL
     b_placement: str = NATURAL
     unskew_out: Optional[str] = None        # None | "rows"
-    wire: Tuple[str, ...] = ("a", "b")      # subset of {"a", "b", "c"}
+    wire: Tuple[str, ...] = ("a", "b")      # tile names from {"a", "b", "c"}
     wire_amortized: bool = False
     style: str = "rdma"                     # "rdma" | "bsp"
+    duplex: int = 1                         # link directions used per step
+    msgs_per_step: Optional[int] = None     # alpha-term count; len(wire) if
+                                            # None (bidir splits B: 4 msgs)
 
 
 class AlgorithmRegistry:
@@ -213,13 +245,15 @@ def register_algorithm(name: str, *, a_placement: str = NATURAL,
                        unskew_out: Optional[str] = None,
                        wire: Tuple[str, ...] = ("a", "b"),
                        wire_amortized: bool = False, style: str = "rdma",
+                       duplex: int = 1, msgs_per_step: Optional[int] = None,
                        registry: AlgorithmRegistry = REGISTRY):
     """Decorator registering a shard_map body as a named algorithm."""
     def deco(body):
         registry.register(Algorithm(
             name=name, body=body, a_placement=a_placement,
             b_placement=b_placement, unskew_out=unskew_out, wire=wire,
-            wire_amortized=wire_amortized, style=style))
+            wire_amortized=wire_amortized, style=style, duplex=duplex,
+            msgs_per_step=msgs_per_step))
         return body
     return deco
 
@@ -235,6 +269,7 @@ def algorithms() -> Tuple[str, ...]:
 @register_algorithm("summa_bcast", style="bsp")
 def _body_summa_bcast(a, b, geom: _Geom):
     """Bulk-synchronous SUMMA (paper SS2.2): a broadcast per inner step."""
+    b = _densify_b(b, geom)
     my_row = lax.axis_index(geom.axr)
     my_col = lax.axis_index(geom.axc)
 
@@ -251,6 +286,7 @@ def _body_summa_bcast(a, b, geom: _Geom):
 @register_algorithm("summa_ag", style="bsp", wire_amortized=True)
 def _body_summa_ag(a, b, geom: _Geom):
     """All-gather SUMMA: one big up-front collective, g x tile footprint."""
+    b = _densify_b(b, geom)
     a_g = {k: lax.all_gather(v, geom.axc) for k, v in a.items()}
     b_g = {k: lax.all_gather(v, geom.axr) for k, v in b.items()}
 
@@ -267,6 +303,8 @@ def _body_summa_ag(a, b, geom: _Geom):
 @register_algorithm("ring_c", a_placement=SKEW_ROWS, b_placement=SKEW_COLS)
 def _body_ring_c(a, b, geom: _Geom):
     """Paper Alg 2 (stationary-C): skewed placement + neighbour ppermute."""
+    b = _densify_b(b, geom)
+
     def step(carry, _):
         a_t, b_t, c = carry
         # "async_get_tile" for step k+1, issued before the local matmul so
@@ -285,6 +323,7 @@ def _body_ring_c(a, b, geom: _Geom):
                     wire=("b", "c"))
 def _body_ring_a(a, b, geom: _Geom):
     """Paper Alg 1 (stationary-A): B rides the ring, partial C rides back."""
+    b = _densify_b(b, geom)
     acc0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
 
     def step(carry, _):
@@ -299,6 +338,46 @@ def _body_ring_a(a, b, geom: _Geom):
 
     (_, acc), _ = lax.scan(step, (b, acc0), None, length=geom.g)
     return acc
+
+
+@register_algorithm("ring_c_bidir", a_placement=SKEW_ROWS,
+                    b_placement=SKEW_COLS, wire=("a", "a", "b"), duplex=2,
+                    msgs_per_step=4)   # a_fwd, a_bwd, b_left, b_right
+def _body_ring_c_bidir(a, b, geom: _Geom):
+    """Bidirectional stationary-C ring: C split into column half-panels.
+
+    The left half-panel's operands (the full A tile + the left half of the
+    dense B tile) ride the +1 ring computing ``k = i+j+t``; the right
+    half-panel's ride the -1 ring computing ``k = i+j-t``.  Both start from
+    the same skewed placement as ``ring_c``, so no new placement state is
+    materialized.  The two streams use opposite directions of the
+    full-duplex torus links concurrently, halving B's serialized wire time
+    at the cost of shipping A both ways — a genuinely different
+    comm/compute trade for ``algorithm="auto"`` (wins for sparse-A x wide-B
+    SpMM, loses when A's tile bytes dominate).
+    """
+    b = _densify_b(b, geom)
+    half = geom.tn // 2
+    b_fwd = {"dense": b["dense"][:, :half]}
+    b_bwd = {"dense": b["dense"][:, half:]}
+
+    def step(carry, _):
+        a_f, a_b, b_f, b_b, c_l, c_r = carry
+        # prefetch both directions before the local matmuls (paper SS3.3)
+        a_fn = _tree_ppermute(a_f, geom.axc, geom.g, +1)
+        a_bn = _tree_ppermute(a_b, geom.axc, geom.g, -1)
+        b_fn = _tree_ppermute(b_f, geom.axr, geom.g, +1)
+        b_bn = _tree_ppermute(b_b, geom.axr, geom.g, -1)
+        c_l = c_l + _local_mm(a_f, b_f, geom)
+        c_r = c_r + _local_mm(a_b, b_b, geom)
+        return (a_fn, a_bn, b_fn, b_bn, c_l, c_r), None
+
+    c_l0 = _pvary(jnp.zeros((geom.tm, half), dtype=geom.out_dtype), geom)
+    c_r0 = _pvary(jnp.zeros((geom.tm, geom.tn - half), dtype=geom.out_dtype),
+                  geom)
+    (_, _, _, _, c_l, c_r), _ = lax.scan(
+        step, (a, a, b_fwd, b_bwd, c_l0, c_r0), None, length=geom.g)
+    return jnp.concatenate([c_l, c_r], axis=1)
 
 
 # ---------------------------------------------------------------------------
@@ -319,7 +398,7 @@ def _place_bsr(t: TiledBSR, placement: str) -> TiledBSR:
             blocks=take(t.blocks), rows=take(t.rows), cols=take(t.cols),
             counts=take(t.counts), shape=t.shape, block_size=t.block_size,
             grid_shape=t.grid_shape, capacity=t.capacity,
-            logical_shape=t.logical_shape)
+            logical_shape=t.logical_shape, row_block_perm=t.row_block_perm)
     raise ValueError(f"unknown placement {placement!r}; one of {PLACEMENTS}")
 
 
@@ -387,14 +466,50 @@ class DistBSR(DistMatrix):
         self._placed: Dict[str, Dict[str, jnp.ndarray]] = {}
 
     @classmethod
-    def from_tiled(cls, tiled: TiledBSR) -> "DistBSR":
+    def from_tiled(cls, tiled: TiledBSR, *, balance: str = "none",
+                   capacity="keep") -> "DistBSR":
+        """Wrap a TiledBSR; ``balance="rows"`` re-tiles with row balancing.
+
+        Re-balancing an already-tiled matrix goes through a dense round
+        trip (tiling is host-side construction, not a hot path); a tiled
+        matrix that already carries a ``row_block_perm`` is kept as-is.
+
+        ``capacity`` controls the rebuilt uniform capacity: ``"keep"``
+        (default) preserves the handle's existing value — a caller who
+        pinned it to unify abstract shapes across matrices (plan-cache
+        sharing) must not get a silently re-derived one — while ``None``
+        re-derives the minimal capacity, realizing the balancing shrink
+        (balancing never *increases* the needed capacity: the balancer
+        falls back to the identity layout when it would).  An int pins a
+        new value.  A non-``"keep"`` capacity on a call that does not
+        re-tile raises (it cannot be honored, and ignoring it would desync
+        abstract keys).
+        """
+        if balance not in ("none", "rows"):
+            raise ValueError(
+                f"unknown balance {balance!r}; one of ('none', 'rows')")
+        rebuilds = balance == "rows" and tiled.row_block_perm is None
+        if capacity != "keep" and not rebuilds:
+            raise ValueError(
+                "capacity can only be changed when from_tiled re-tiles "
+                "(balance='rows' on an unbalanced value); otherwise rebuild "
+                "with TiledBSR.from_dense(capacity=...)")
+        if rebuilds:
+            m, n = tiled.logical_shape or tiled.shape
+            dense = np.asarray(tiled.to_dense())[:m, :n]
+            cap = tiled.capacity if capacity == "keep" else capacity
+            tiled = TiledBSR.from_dense(
+                dense, ProcessGrid(*tiled.grid_shape), tiled.block_size,
+                capacity=cap, dtype=tiled.dtype, balance="rows")
         return cls(tiled)
 
     @classmethod
     def from_dense(cls, dense, *, g: int, block_size: int,
-                   capacity: Optional[int] = None, dtype=None) -> "DistBSR":
+                   capacity: Optional[int] = None, dtype=None,
+                   balance: str = "none") -> "DistBSR":
         return cls(TiledBSR.from_dense(dense, ProcessGrid(g, g), block_size,
-                                       capacity=capacity, dtype=dtype))
+                                       capacity=capacity, dtype=dtype,
+                                       balance=balance))
 
     @property
     def g(self) -> int:
@@ -423,6 +538,23 @@ class DistBSR(DistMatrix):
     @property
     def counts(self):
         return self.tiled.counts
+
+    @property
+    def row_block_perm(self) -> Optional[Tuple[int, ...]]:
+        """Row-block balance permutation (None unless ``balance="rows"``)."""
+        return self.tiled.row_block_perm
+
+    def inv_row_perm(self) -> Optional[jnp.ndarray]:
+        """Device array of the inverse balance permutation, cached on the
+        handle so repeated plan calls don't recompute/re-upload it."""
+        if self.tiled.row_block_perm is None:
+            return None
+        inv = getattr(self, "_inv_row_perm", None)
+        if inv is None:
+            inv = jnp.asarray(
+                _schedule.invert_perm(self.tiled.row_block_perm))
+            self._inv_row_perm = inv
+        return inv
 
     def placed(self, placement: str) -> Dict[str, jnp.ndarray]:
         tree = self._placed.get(placement)
@@ -591,12 +723,73 @@ def _local_view(tree: Dict) -> Dict:
     return {k: (v if k == "dense" else v[0, 0]) for k, v in tree.items()}
 
 
-def _tile_bytes(abstract_key: tuple) -> int:
-    if abstract_key[0] == "bsr":
-        _, _, _, bs, cap, dt = abstract_key
-        return cap * bs * bs * np.dtype(dt).itemsize + cap * 2 * 4
-    _, shape, g, dt = abstract_key
-    return (shape[0] // g) * (shape[1] // g) * np.dtype(dt).itemsize
+def _key_dtype(abstract_key: tuple):
+    return abstract_key[5] if abstract_key[0] == "bsr" else abstract_key[3]
+
+
+def _cost_model(alg: Algorithm, geom: _Geom, a_key: tuple,
+                b_key: tuple) -> Dict[str, float]:
+    """Per-step wire volume / executed flops of one plan execution.
+
+    Reflects what the bodies actually move and execute: the A tile rides in
+    its stored *pre-augmented* BSR form (``capacity + tile block-rows``
+    block products per step, padding included — the quantity the static
+    scheduler balances); the B tile rides *densified* regardless of kind
+    (``_densify_b`` hoists the scatter out of the scanned step); ``wire``
+    may name a tile twice (bidirectional schedules) and ``duplex`` credits
+    full-duplex links in :func:`_predicted_time`, not here.
+    """
+    g = geom.g
+    if a_key[0] == "bsr":
+        bs, cap = a_key[3], a_key[4]
+        store = cap + geom.a_nbr            # pre-augmented stored slots
+        a_bytes = store * bs * bs * np.dtype(_key_dtype(a_key)).itemsize \
+            + store * 2 * 4                 # + rows/cols int32
+        flops_step = 2 * store * bs * bs * geom.tn
+    else:
+        tk = a_key[1][1] // g
+        a_bytes = geom.tm * tk * np.dtype(_key_dtype(a_key)).itemsize
+        flops_step = 2 * geom.tm * tk * geom.tn
+    tk_b = b_key[1][0] // g
+    b_bytes = tk_b * geom.tn * np.dtype(_key_dtype(b_key)).itemsize
+    c_bytes = geom.tm * geom.tn * np.dtype(geom.out_dtype).itemsize
+    tiles = {"a": a_bytes, "b": b_bytes, "c": c_bytes}
+    step_bytes = sum(tiles[t] for t in alg.wire)
+    if alg.wire_amortized:
+        step_bytes = step_bytes * (g - 1) / g
+    total_flops = float(flops_step * g)
+    total_bytes = float(step_bytes * g)
+    return {
+        "steps": float(g),
+        "flops_per_step": float(flops_step),
+        "net_bytes_per_step": float(step_bytes),
+        "total_flops": total_flops,
+        "total_net_bytes": total_bytes,
+        "ai_net": total_flops / total_bytes if total_bytes else float("inf"),
+        "ai_local": total_flops / (g * (a_bytes + b_bytes) + c_bytes),
+    }
+
+
+def _predicted_time(cm: Dict[str, float], alg: Algorithm,
+                    machine: "_roofline.Machine") -> float:
+    """Alpha-beta-gamma seconds for one execution — the auto-select score.
+
+    Compute time is capped by the local roofline; wire time is serialized
+    bytes over the per-chip link share (credited for ``duplex``) plus a
+    per-message alpha term (``machine.hop_latency``).  Bulk-synchronous
+    schedules pay compute + comm (a barrier per stage forbids overlap);
+    the RDMA-style rings prefetch, so they pay max(compute, comm) — the
+    paper's SS3.3 overlap claim, encoded as a scheduling preference.
+    """
+    t_comp = cm["total_flops"] / _roofline.local_peak(cm["ai_local"], machine)
+    n_msgs = alg.msgs_per_step if alg.msgs_per_step is not None \
+        else len(alg.wire)
+    msgs = n_msgs * (1.0 if alg.wire_amortized else cm["steps"])
+    t_comm = cm["total_net_bytes"] / (machine.net_bw * alg.duplex) \
+        + msgs * machine.hop_latency
+    if alg.style == "bsp":
+        return t_comp + t_comm
+    return max(t_comp, t_comm)
 
 
 class MatmulPlan:
@@ -609,13 +802,23 @@ class MatmulPlan:
     """
 
     def __init__(self, algorithm: Algorithm, geom: _Geom, mesh,
-                 a_key: tuple, b_key: tuple, allow_pad: bool = False):
+                 a_key: tuple, b_key: tuple, allow_pad: bool = False,
+                 requested: Optional[str] = None,
+                 auto_scores: Optional[Dict[str, float]] = None):
         self.algorithm = algorithm
         self.geom = geom
         self.mesh = mesh
         self._a_key = a_key
         self._b_key = b_key
         self._allow_pad = allow_pad
+        # Introspection: what the request that FIRST BUILT this plan asked
+        # for ("auto" or a name) and, if auto ever selected this plan, the
+        # candidate scores from that selection.  Cached plans are shared
+        # across requests, so these describe the plan's provenance, not
+        # necessarily the current call (auto re-scores on every call; see
+        # plan_matmul).
+        self.requested = requested or algorithm.name
+        self.auto_scores = auto_scores
         self.traces = 0
         body = algorithm.body
 
@@ -659,59 +862,51 @@ class MatmulPlan:
 
     def _epilogue(self, c: jnp.ndarray, a_h: DistMatrix,
                   b_h: DistMatrix) -> jnp.ndarray:
-        """Shared output fix-up: invert the output skew, crop padding.
+        """Shared output fix-up: unskew, un-balance, crop padding.
 
         One copy for all operand kinds — the sparse and dense paths get
-        identical ``logical_shape`` cropping semantics.
+        identical ``logical_shape`` cropping semantics.  A balanced left
+        operand permuted its global row blocks before tiling; C inherits
+        that permutation, so it is inverted here (after the tile-grid
+        unskew, before the crop) to keep balanced and unbalanced plans
+        bit-compatible.
         """
         if self.algorithm.unskew_out == "rows":
             c = unskew_c_rows(c, self.geom.g)
         elif self.algorithm.unskew_out is not None:
             raise ValueError(
                 f"unknown unskew_out {self.algorithm.unskew_out!r}")
+        perm = getattr(a_h, "row_block_perm", None)
+        if perm:
+            bs = a_h.block_size
+            inv = a_h.inv_row_perm()   # cached on the handle
+            c = c.reshape(len(perm), bs, -1)[inv].reshape(c.shape)
         return c[:a_h.logical_shape[0], :b_h.logical_shape[1]]
 
     # ------------------------------------------------------------- analysis
     def cost_model(self, a: Optional[DistBSR] = None) -> Dict[str, float]:
         """Per-step volume / flops of one plan execution (per device).
 
-        Flop counts are the *executed* (padding included) MXU work, the
-        quantity the static scheduler balances.  Pass the sparse left-hand
-        handle to also get the paper's Fig-1 per-stage vs end-to-end
-        imbalance from its tile counts (feeds ``core/schedule.py``).
+        Flop counts are the *executed* (padding and coverage included) MXU
+        work, the quantity the static scheduler balances.  Pass the sparse
+        left-hand handle to also get the paper's Fig-1 per-stage vs
+        end-to-end imbalance from its tile counts (feeds
+        ``core/schedule.py``).
         """
-        geom, alg = self.geom, self.algorithm
-        g = geom.g
-        a_bytes = _tile_bytes(self._a_key)
-        b_bytes = _tile_bytes(self._b_key)
-        c_bytes = geom.tm * geom.tn * np.dtype(geom.out_dtype).itemsize
-        if self._a_key[0] == "bsr":
-            bs, cap = self._a_key[3], self._a_key[4]
-            flops_step = 2 * cap * bs * bs * geom.tn
-        else:
-            tk = self._a_key[1][1] // g
-            flops_step = 2 * geom.tm * tk * geom.tn
-        tiles = {"a": a_bytes, "b": b_bytes, "c": c_bytes}
-        step_bytes = sum(tiles[t] for t in alg.wire)
-        if alg.wire_amortized:
-            step_bytes = step_bytes * (g - 1) / g
-        total_flops = float(flops_step * g)
-        total_bytes = float(step_bytes * g)
-        out = {
-            "steps": float(g),
-            "flops_per_step": float(flops_step),
-            "net_bytes_per_step": float(step_bytes),
-            "total_flops": total_flops,
-            "total_net_bytes": total_bytes,
-            "ai_net": total_flops / total_bytes if total_bytes else float("inf"),
-            "ai_local": total_flops / (g * (a_bytes + b_bytes) + c_bytes),
-        }
+        out = _cost_model(self.algorithm, self.geom, self._a_key,
+                          self._b_key)
         if isinstance(a, DistBSR):
             per_stage, end_to_end = _schedule.stage_imbalance(
                 np.asarray(a.counts, dtype=np.float64))
             out["per_stage_imbalance"] = per_stage
             out["end_to_end_imbalance"] = end_to_end
         return out
+
+    def predicted_cost(self, machine: Optional["_roofline.Machine"] = None
+                       ) -> float:
+        """Predicted seconds per execution (the ``algorithm="auto"`` score)."""
+        machine = machine or _roofline.TPU_V5E
+        return _predicted_time(self.cost_model(), self.algorithm, machine)
 
     def predicted_perf(self, machine: "_roofline.Machine") -> Dict[str, float]:
         """Paper SS4 inter-node roofline prediction for this plan."""
@@ -753,6 +948,12 @@ def _coerce_pair(a, b, *, g: Optional[int] = None, allow_pad: bool = False
     else:
         b_h = DistDense.for_rhs(jnp.asarray(b), a_h, allow_pad=allow_pad)
 
+    if getattr(b_h, "row_block_perm", None):
+        raise ValueError(
+            "the right operand carries a balance='rows' row-block "
+            "permutation, which would permute the contraction dimension; "
+            "balanced matrices may only be the left operand (the epilogue "
+            "inverts the permutation on output rows)")
     if isinstance(a_h, DistDense) and isinstance(b_h, DistBSR):
         raise NotImplementedError(
             "dense x sparse is not supported; compute the transposed "
@@ -789,18 +990,56 @@ def _mesh_key(mesh):
         return id(mesh)
 
 
+def auto_select(a, b, *, machine: Optional["_roofline.Machine"] = None,
+                g: Optional[int] = None, allow_pad: bool = False,
+                axis_row: str = "row", axis_col: str = "col",
+                registry: Optional[AlgorithmRegistry] = None
+                ) -> Tuple[str, Dict[str, float]]:
+    """Score every registered schedule for ``a @ b``; pick the cheapest.
+
+    Returns ``(name, scores)`` where ``scores`` maps every algorithm to its
+    predicted seconds (:func:`_predicted_time` on its cost model).  Pure
+    planning — no mesh or devices needed, so large grids can be scored on
+    a single host.  Ties resolve to registration order.
+    """
+    a_h, b_h = _coerce_pair(a, b, g=g, allow_pad=allow_pad)
+    machine = machine or _roofline.TPU_V5E
+    registry = registry or REGISTRY
+    geom = _geometry(a_h, b_h, impl=None, axis_row=axis_row,
+                     axis_col=axis_col)
+    a_key, b_key = a_h.abstract_key(), b_h.abstract_key()
+    scores = {alg.name: _predicted_time(_cost_model(alg, geom, a_key, b_key),
+                                        alg, machine)
+              for alg in registry}
+    if not scores:
+        raise ValueError("no algorithms registered")
+    return min(scores, key=scores.get), scores
+
+
 def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
                 impl: Optional[str] = None, g: Optional[int] = None,
                 axis_row: str = "row", axis_col: str = "col",
-                allow_pad: bool = False, cache: bool = True) -> MatmulPlan:
+                allow_pad: bool = False, cache: bool = True,
+                machine: Optional["_roofline.Machine"] = None) -> MatmulPlan:
     """Build (or fetch from the shared cache) a plan for ``a @ b``.
 
     ``a`` / ``b`` may be :class:`DistMatrix` handles (preferred — placement
     caches live on the handle), raw :class:`TiledBSR` values, or plain dense
     arrays (``g`` required when both are dense).  ``cache=False`` forces a
     fresh plan — i.e. the legacy per-call behaviour, retracing every time.
+
+    ``algorithm="auto"`` scores every registered schedule with
+    :func:`auto_select` (against ``machine``, default TPU v5e) and builds
+    the min-predicted-cost one; the choice and all candidate scores are
+    recorded on the plan (``plan.requested``, ``plan.auto_scores``).
     """
     a_h, b_h = _coerce_pair(a, b, g=g, allow_pad=allow_pad)
+    requested = algorithm
+    auto_scores = None
+    if algorithm == "auto":
+        algorithm, auto_scores = auto_select(
+            a_h, b_h, machine=machine, axis_row=axis_row, axis_col=axis_col,
+            allow_pad=allow_pad)
     alg = REGISTRY.get(algorithm)
     mesh = _prep_mesh(mesh, a_h.g, axis_row, axis_col)
     key = (alg.name, impl, axis_row, axis_col, allow_pad, _mesh_key(mesh),
@@ -808,11 +1047,14 @@ def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
     if cache:
         plan = _PLAN_CACHE.get(key)
         if plan is not None:
+            if auto_scores is not None and plan.auto_scores is None:
+                plan.auto_scores = auto_scores   # record for introspection
             return plan
     plan = MatmulPlan(alg, _geometry(a_h, b_h, impl=impl, axis_row=axis_row,
                                      axis_col=axis_col),
                       mesh, a_h.abstract_key(), b_h.abstract_key(),
-                      allow_pad=allow_pad)
+                      allow_pad=allow_pad, requested=requested,
+                      auto_scores=auto_scores)
     if cache:
         _PLAN_CACHE[key] = plan
     return plan
@@ -821,15 +1063,18 @@ def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
 def matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
            impl: Optional[str] = None, g: Optional[int] = None,
            axis_row: str = "row", axis_col: str = "col",
-           allow_pad: bool = False) -> jnp.ndarray:
+           allow_pad: bool = False,
+           machine: Optional["_roofline.Machine"] = None) -> jnp.ndarray:
     """Polymorphic distributed ``a @ b``.
 
     Dispatches sparse x dense -> SpMM, sparse x sparse -> SpGEMM, and
     dense x dense -> the dense engine, all through the shared plan cache:
     repeated calls with the same abstract shapes never re-trace.
+    ``algorithm="auto"`` cost-model-selects the schedule (see
+    :func:`plan_matmul`).
     """
     a_h, b_h = _coerce_pair(a, b, g=g, allow_pad=allow_pad)
     plan = plan_matmul(a_h, b_h, algorithm=algorithm, mesh=mesh, impl=impl,
                        axis_row=axis_row, axis_col=axis_col,
-                       allow_pad=allow_pad)
+                       allow_pad=allow_pad, machine=machine)
     return plan(a_h, b_h)

@@ -18,6 +18,23 @@ Two layouts:
   static shape; the *padding itself* is the TPU manifestation of the paper's
   load imbalance (zero blocks still burn MXU cycles), which is exactly what
   the static rebalancing scheduler (``core/schedule.py``) shrinks.
+
+Two tiling-time optimizations live here (see DESIGN.md "Sparsity-aware
+capacity planning"):
+
+* ``balance="rows"`` applies :func:`repro.core.schedule.balance_row_perm`
+  to the global row blocks before tiling, spreading nonzero blocks evenly
+  over grid rows so the uniform tile capacity (= executed MXU work per
+  device) shrinks.  The permutation is carried on the result
+  (``row_block_perm``) and inverted by the plan epilogue, so balanced and
+  unbalanced plans produce identical outputs.
+* TiledBSR tiles are stored *pre-augmented*: one zero block per block-row is
+  merged (stably sorted) into each tile's block list at construction, so the
+  SpMM kernel's coverage requirement (every output block-row visited) is met
+  without any per-step concat + argsort inside the compiled ring loop.
+  Stored per-tile length is therefore ``capacity + tile block-rows``
+  (:attr:`TiledBSR.store_capacity`); ``capacity``/``counts`` keep counting
+  *real* blocks only.
 """
 from __future__ import annotations
 
@@ -48,6 +65,13 @@ class BSR:
     cols   : i32[capacity]        — block-col of each stored block
     shape  : (m, n) logical shape (multiple of bs after construction padding)
     nnzb   : number of *valid* blocks (static Python int; <= capacity)
+
+    Contract: blocks beyond the valid ones are ZERO (constructors guarantee
+    it), so scatter-add consumers need no masking.  For a BSR built by
+    :meth:`from_dense` the valid blocks are the prefix ``[:nnzb]``; a BSR
+    extracted via :meth:`TiledBSR.tile` instead interleaves zero *coverage*
+    blocks among the real ones (sorted merge), so there ``nnzb`` counts
+    real blocks but is NOT a prefix length — do not slice ``[:nnzb]``.
     """
 
     blocks: jnp.ndarray
@@ -76,10 +100,16 @@ class BSR:
         return self.blocks.dtype
 
     def block_fill_ratio(self) -> float:
-        """Fraction of stored block entries that are nonzero (1.0 = perfect)."""
-        nz = np.count_nonzero(np.asarray(self.blocks[: self.nnzb]))
-        denom = max(self.nnzb, 1) * self.block_size**2
-        return float(nz) / float(denom)
+        """Fraction of stored block entries that are nonzero (1.0 = perfect).
+
+        Computed over blocks with any nonzero data (prefix-free, so it is
+        also correct for the interleaved tiles of :meth:`TiledBSR.tile`);
+        zero padding/coverage blocks never count against the ratio.
+        """
+        b = np.asarray(self.blocks)
+        nz_blocks = int((np.abs(b).sum(axis=(1, 2)) != 0).sum())
+        denom = max(nz_blocks, 1) * self.block_size**2
+        return float(np.count_nonzero(b)) / float(denom)
 
     def flops(self, n_cols_dense: int) -> int:
         """MXU flops of BSR @ dense-with-n_cols (2*nnzb*bs^2*n)."""
@@ -137,25 +167,30 @@ class BSR:
         return cls.from_dense(sp_mat.toarray(), block_size, capacity, dtype)
 
     def to_dense(self) -> jnp.ndarray:
+        # Padding / coverage blocks are zero by construction (from_dense,
+        # with_capacity and the TiledBSR augmenter all guarantee it), so a
+        # plain scatter-add is exact even when valid blocks are interleaved
+        # with zero coverage blocks (the pre-augmented tile layout).
         bs = self.block_size
         nbr, nbc = self.n_block_rows, self.n_block_cols
         out = jnp.zeros((nbr, nbc, bs, bs), dtype=self.dtype)
-        valid = (jnp.arange(self.capacity) < self.nnzb)[:, None, None]
-        contrib = jnp.where(valid, self.blocks, 0)
-        out = out.at[self.rows, self.cols].add(contrib)
+        out = out.at[self.rows, self.cols].add(self.blocks)
         return out.transpose(0, 2, 1, 3).reshape(nbr * bs, nbc * bs)
 
     def with_capacity(self, capacity: int) -> "BSR":
-        """Re-pad to a new (>= nnzb) capacity — used to unify tile shapes."""
-        if capacity < self.nnzb:
-            raise ValueError(f"capacity {capacity} < nnzb {self.nnzb}")
+        """Re-pad to a new (>= current) capacity — used to unify tile shapes.
+
+        Shrinking is refused: valid blocks are not necessarily a prefix
+        (see the class contract), so truncation could silently drop data.
+        """
         pad = capacity - self.capacity
         if pad == 0:
             return self
         if pad < 0:
-            return BSR(self.blocks[:capacity], self.rows[:capacity],
-                       self.cols[:capacity], self.shape, self.block_size,
-                       self.nnzb, self.logical_shape)
+            raise ValueError(
+                f"cannot shrink capacity {self.capacity} -> {capacity}: "
+                "stored blocks are not necessarily a prefix; rebuild with "
+                "from_dense(capacity=...) instead")
         last_r = self.rows[-1] if self.capacity else jnp.zeros((), jnp.int32)
         last_c = self.cols[-1] if self.capacity else jnp.zeros((), jnp.int32)
         blocks = jnp.concatenate(
@@ -167,20 +202,52 @@ class BSR:
                    self.logical_shape)
 
 
+def _augment_tile(blocks: np.ndarray, rows: np.ndarray, cols: np.ndarray,
+                  n_block_rows: int):
+    """Merge one zero block per block-row into a tile's block list (sorted).
+
+    This is the SpMM kernel's coverage requirement — every output block-row
+    must be visited so the first-visit zeroing initializes the whole C tile —
+    precomputed at tiling time instead of per ring step.  The stable sort
+    keeps real blocks in row order and the appended zero blocks inert.
+    """
+    cov = np.arange(n_block_rows, dtype=rows.dtype)
+    rows_aug = np.concatenate([rows, cov])
+    order = np.argsort(rows_aug, kind="stable")
+    bs = blocks.shape[1]
+    blocks_aug = np.concatenate(
+        [blocks, np.zeros((n_block_rows, bs, bs), blocks.dtype)])[order]
+    cols_aug = np.concatenate(
+        [cols, np.zeros((n_block_rows,), cols.dtype)])[order]
+    return blocks_aug, rows_aug[order], cols_aug
+
+
 @functools.partial(
     jax.tree_util.register_dataclass,
     data_fields=["blocks", "rows", "cols", "counts"],
     meta_fields=["shape", "block_size", "grid_shape", "capacity",
-                 "logical_shape"],
+                 "logical_shape", "row_block_perm"],
 )
 @dataclasses.dataclass
 class TiledBSR:
-    """A grid of uniformly-padded BSR tiles (the distributed data structure).
+    """A grid of uniformly-padded, coverage-augmented BSR tiles.
 
-    blocks : f[gr, gc, cap, bs, bs]
-    rows   : i32[gr, gc, cap]   block-row *within the tile*
-    cols   : i32[gr, gc, cap]   block-col *within the tile*
-    counts : i32[gr, gc]        valid blocks per tile (the load-imbalance map)
+    blocks : f[gr, gc, store_cap, bs, bs]  (store_cap = capacity + tile nbr)
+    rows   : i32[gr, gc, store_cap]  block-row *within the tile*, sorted;
+                                     every block-row present at least once
+    cols   : i32[gr, gc, store_cap]  block-col *within the tile*
+    counts : i32[gr, gc]    *real* blocks per tile (the load-imbalance map)
+
+    Stored arrays are pre-augmented for kernel coverage (zero block per
+    block-row, merged in sorted order — see :func:`_augment_tile`), so the
+    distributed hot loop consumes them as-is.  ``capacity`` counts real
+    block slots only; zero padding/coverage blocks are inert under the
+    scatter-add consumers (``to_dense``, ``densify_raw``, the ref SpMM).
+
+    ``row_block_perm`` (optional) records a load-balancing permutation of
+    the *global* row blocks applied before tiling (``balance="rows"``):
+    position ``t`` holds original row block ``row_block_perm[t]``.  The plan
+    epilogue inverts it on the output, so results match unbalanced plans.
     """
 
     blocks: jnp.ndarray
@@ -192,6 +259,7 @@ class TiledBSR:
     grid_shape: Tuple[int, int]
     capacity: int
     logical_shape: Optional[Tuple[int, int]] = None
+    row_block_perm: Optional[Tuple[int, ...]] = None
 
     @property
     def tile_shape(self) -> Tuple[int, int]:
@@ -199,12 +267,21 @@ class TiledBSR:
                 self.shape[1] // self.grid_shape[1])
 
     @property
+    def store_capacity(self) -> int:
+        """Stored block slots per tile: capacity + coverage augmentation."""
+        return self.blocks.shape[2]
+
+    @property
     def dtype(self):
         return self.blocks.dtype
 
     @classmethod
     def from_dense(cls, dense, grid: ProcessGrid, block_size: int,
-                   capacity: Optional[int] = None, dtype=None) -> "TiledBSR":
+                   capacity: Optional[int] = None, dtype=None,
+                   balance: str = "none") -> "TiledBSR":
+        if balance not in ("none", "rows"):
+            raise ValueError(
+                f"unknown balance {balance!r}; one of ('none', 'rows')")
         dense = np.asarray(dense)
         m, n = dense.shape
         tm = pad_to_multiple(ceil_div(m, grid.rows), block_size)
@@ -212,6 +289,32 @@ class TiledBSR:
         mp, np_ = tm * grid.rows, tn * grid.cols
         padded = np.zeros((mp, np_), dtype=dense.dtype)
         padded[:m, :n] = dense
+        perm = None
+        if balance == "rows":
+            from .schedule import balance_row_perm
+            nbr_global = mp // block_size
+            nbc_global = np_ // block_size
+            mask = np.abs(
+                padded.reshape(nbr_global, block_size, nbc_global,
+                               block_size)).sum(axis=(1, 3)) != 0
+            perm = balance_row_perm(mask.sum(axis=1), grid.rows)
+
+            def tile_cap(m):
+                per_tile = m.reshape(grid.rows, nbr_global // grid.rows,
+                                     grid.cols, nbc_global // grid.cols)
+                return int(per_tile.sum(axis=(1, 3)).max())
+
+            # balance_row_perm equalizes grid-ROW totals; the uniform
+            # capacity is the per-TILE max, which a row permutation can
+            # occasionally worsen (column mass re-concentrating in one
+            # tile).  Fall back to the identity layout whenever balancing
+            # does not strictly shrink the capacity.
+            if tile_cap(mask[np.asarray(perm)]) < tile_cap(mask):
+                padded = padded.reshape(nbr_global, block_size, np_)[perm]
+                padded = padded.reshape(mp, np_)
+                perm = tuple(int(p) for p in perm)
+            else:
+                perm = None
         tiles = []
         for i in range(grid.rows):
             row = []
@@ -220,19 +323,28 @@ class TiledBSR:
                     padded[i * tm:(i + 1) * tm, j * tn:(j + 1) * tn],
                     block_size, dtype=dtype))
             tiles.append(row)
-        cap = capacity if capacity is not None else max(
-            max(t.nnzb for t in row) for row in tiles)
-        cap = max(cap, 1)
-        tiles = [[t.with_capacity(cap) for t in row] for row in tiles]
-        blocks = jnp.stack([jnp.stack([t.blocks for t in row]) for row in tiles])
-        rows_ = jnp.stack([jnp.stack([t.rows for t in row]) for row in tiles])
-        cols_ = jnp.stack([jnp.stack([t.cols for t in row]) for row in tiles])
+        max_nnzb = max(max(t.nnzb for t in row) for row in tiles)
+        if capacity is not None and capacity < max_nnzb:
+            raise ValueError(
+                f"capacity {capacity} < max tile nnzb {max_nnzb}")
+        cap = max(capacity if capacity is not None else max_nnzb, 1)
+        tile_nbr = tm // block_size
+        aug = [[_augment_tile(np.asarray(t.blocks), np.asarray(t.rows),
+                              np.asarray(t.cols), tile_nbr)
+                for t in (u.with_capacity(cap) for u in row)]
+               for row in tiles]
+        blocks = jnp.asarray(np.stack(
+            [np.stack([a[0] for a in row]) for row in aug]))
+        rows_ = jnp.asarray(np.stack(
+            [np.stack([a[1] for a in row]) for row in aug]))
+        cols_ = jnp.asarray(np.stack(
+            [np.stack([a[2] for a in row]) for row in aug]))
         counts = jnp.asarray(
             [[t.nnzb for t in row] for row in tiles], dtype=jnp.int32)
         return cls(blocks=blocks, rows=rows_, cols=cols_, counts=counts,
                    shape=(mp, np_), block_size=block_size,
                    grid_shape=(grid.rows, grid.cols), capacity=cap,
-                   logical_shape=(m, n))
+                   logical_shape=(m, n), row_block_perm=perm)
 
     def to_dense(self) -> jnp.ndarray:
         gr, gc = self.grid_shape
@@ -247,6 +359,13 @@ class TiledBSR:
         return jnp.asarray(out)
 
     def tile(self, i: int, j: int) -> BSR:
+        """View tile (i, j) as a flat BSR.
+
+        The returned BSR shares the stored *pre-augmented* arrays: zero
+        coverage blocks are interleaved with the real ones, so its ``nnzb``
+        counts real blocks but is not a prefix length (safe for zero-inert
+        consumers like ``to_dense``/``flops``; do not slice ``[:nnzb]``).
+        """
         return BSR(self.blocks[i, j], self.rows[i, j], self.cols[i, j],
                    self.tile_shape, self.block_size, int(self.counts[i, j]))
 

@@ -36,6 +36,7 @@ class Machine:
     mem_bw: float           # HBM bytes/s
     net_bw: float           # per-chip share of injection bandwidth, bytes/s
     word_bytes: int = 4
+    hop_latency: float = 1e-6   # per-message latency (the alpha term), s
 
 
 # Paper SS4/SS6: V100 16 TF fp32; Summit dual-rail EDR = 23 GB/s per node,

@@ -28,9 +28,21 @@ from typing import Sequence, Tuple
 import numpy as np
 
 __all__ = [
-    "lpt_assign", "makespan", "balance_row_perm", "stage_imbalance",
-    "steal_simulation",
+    "lpt_assign", "makespan", "balance_row_perm", "invert_perm",
+    "stage_imbalance", "steal_simulation",
 ]
+
+
+def invert_perm(perm: Sequence[int]) -> np.ndarray:
+    """Inverse of a permutation: ``invert_perm(p)[p[t]] == t``.
+
+    Used by the plan epilogue to undo a ``balance="rows"`` row-block
+    permutation on the output (C rows inherit A's row permutation).
+    """
+    perm = np.asarray(perm, dtype=np.int64)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(len(perm), dtype=np.int64)
+    return inv
 
 
 def lpt_assign(costs: Sequence[float], n_workers: int) -> np.ndarray:

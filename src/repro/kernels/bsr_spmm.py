@@ -52,7 +52,11 @@ def bsr_spmm_pallas(blocks, rows, cols, dense, *, n_block_rows: int,
     """C = BSR @ dense via pallas_call.
 
     blocks : f[cap, bs, bs] — zero-padded stored blocks, ``rows`` sorted
-    rows, cols : i32[cap]
+    rows, cols : i32[cap] — every output block-row must appear in ``rows``
+                 (coverage contract: the kernel zeroes an output block on
+                 first visit only; uncovered rows would return garbage).
+                 ``ops.bsr_spmm_raw(augment=True)`` establishes this per
+                 call; ``TiledBSR`` stores tiles pre-augmented.
     dense  : f[n_block_cols*bs, n] with n % block_n == 0
     """
     cap, bs, _ = blocks.shape

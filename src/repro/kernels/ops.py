@@ -37,27 +37,42 @@ def _resolve(impl: Optional[str]) -> str:
 # SpMM
 # ---------------------------------------------------------------------------
 def bsr_spmm_raw(blocks, rows, cols, dense, *, n_block_rows: int,
-                 impl: Optional[str] = None, block_n: int = 256):
-    """C = BSR(blocks, rows, cols) @ dense — raw-array form (shard_map-safe)."""
+                 impl: Optional[str] = None, block_n: int = 256,
+                 augment: bool = True):
+    """C = BSR(blocks, rows, cols) @ dense — raw-array form (shard_map-safe).
+
+    ``augment=False`` asserts the caller's arrays are already
+    coverage-augmented and row-sorted (every output block-row present —
+    the :class:`repro.core.bsr.TiledBSR` storage contract), skipping the
+    concat + stable-argsort below.  The distributed ring bodies rely on
+    this: augmentation must not be re-traced into every scanned step.
+    """
     impl = _resolve(impl)
+    bs = blocks.shape[1]
+    n = dense.shape[1]
+    if n == 0:  # half-panel schedules can produce empty panels at tiny tn;
+        # impl-independent (the ref path's reshape(-1, bs, 0) divides by 0)
+        return jnp.zeros((n_block_rows * bs, 0),
+                         jnp.promote_types(blocks.dtype, dense.dtype))
     if impl == "ref":
         return _ref.bsr_spmm_raw_ref(blocks, rows, cols, dense, n_block_rows)
-    n = dense.shape[1]
     bn = min(block_n, n)
     while n % bn:
         bn //= 2
-    # Coverage augmentation: append one zero block per block-row so that every
-    # output block is visited (and therefore zero-initialized) by the kernel,
-    # even for rows with no stored blocks.  Stable sort keeps row order.
-    bs = blocks.shape[1]
-    cov = jnp.arange(n_block_rows, dtype=rows.dtype)
-    rows_aug = jnp.concatenate([rows, cov])
-    order = jnp.argsort(rows_aug, stable=True)
-    blocks_aug = jnp.concatenate(
-        [blocks, jnp.zeros((n_block_rows, bs, bs), blocks.dtype)])[order]
-    cols_aug = jnp.concatenate(
-        [cols, jnp.zeros((n_block_rows,), cols.dtype)])[order]
-    return bsr_spmm_pallas(blocks_aug, rows_aug[order], cols_aug, dense,
+    if augment:
+        # Coverage augmentation: append one zero block per block-row so that
+        # every output block is visited (and therefore zero-initialized) by
+        # the kernel, even for rows with no stored blocks.  Stable sort keeps
+        # row order.
+        cov = jnp.arange(n_block_rows, dtype=rows.dtype)
+        rows_aug = jnp.concatenate([rows, cov])
+        order = jnp.argsort(rows_aug, stable=True)
+        blocks = jnp.concatenate(
+            [blocks, jnp.zeros((n_block_rows, bs, bs), blocks.dtype)])[order]
+        cols = jnp.concatenate(
+            [cols, jnp.zeros((n_block_rows,), cols.dtype)])[order]
+        rows = rows_aug[order]
+    return bsr_spmm_pallas(blocks, rows, cols, dense,
                            n_block_rows=n_block_rows, block_n=max(bn, 1),
                            interpret=(impl == "interpret"))
 
@@ -87,32 +102,54 @@ def build_pair_lists(a_rows, a_cols, a_nnzb: int, b_rows, b_cols, b_nnzb: int,
     Returns (pair_a, pair_b, pair_rows, pair_cols, n_real_pairs); index
     ``len(a_blocks)`` / ``len(b_blocks)`` denotes the appended zero slot.
     """
-    a_rows = np.asarray(a_rows)[:a_nnzb]
-    a_cols = np.asarray(a_cols)[:a_nnzb]
-    b_rows = np.asarray(b_rows)[:b_nnzb]
-    b_cols = np.asarray(b_cols)[:b_nnzb]
-    by_brow = {}
-    for j, (br, bc) in enumerate(zip(b_rows, b_cols)):
-        by_brow.setdefault(int(br), []).append((j, int(bc)))
-    pairs = []
-    for i, (ar, ac) in enumerate(zip(a_rows, a_cols)):
-        for j, bc in by_brow.get(int(ac), ()):
-            pairs.append((int(ar), bc, i, j))
-    covered = {(r, c) for (r, c, _, _) in pairs}
+    a_rows = np.asarray(a_rows)[:a_nnzb].astype(np.int64)
+    a_cols = np.asarray(a_cols)[:a_nnzb].astype(np.int64)
+    b_rows = np.asarray(b_rows)[:b_nnzb].astype(np.int64)
+    b_cols = np.asarray(b_cols)[:b_nnzb].astype(np.int64)
+    # Vectorized sort-merge join on a_cols == b_rows (replaces the python
+    # dict-of-lists construction; ~11x faster at 5k stored blocks, growing
+    # with the pair count — see benchmarks/kernels_bench.py).  The stable
+    # argsort keeps B blocks in original order within each block-row,
+    # matching the insertion order of the old dict version.
+    b_order = np.argsort(b_rows, kind="stable")
+    b_rows_sorted = b_rows[b_order]
+    starts = np.searchsorted(b_rows_sorted, a_cols, side="left")
+    ends = np.searchsorted(b_rows_sorted, a_cols, side="right")
+    deg = ends - starts
+    ai = np.repeat(np.arange(a_nnzb, dtype=np.int64), deg)
+    offs = np.arange(deg.sum(), dtype=np.int64) - np.repeat(
+        np.cumsum(deg) - deg, deg)
+    bj = b_order[np.repeat(starts, deg) + offs]
+    rows = a_rows[ai]
+    cols = b_cols[bj]
+    # Coverage: dummy pairs (referencing the appended zero slots) for output
+    # blocks no real product touches, in row-major order like the real pairs.
     zslot_a, zslot_b = a_nnzb, b_nnzb  # remapped to zero slot by the wrapper
-    for r in range(n_block_rows):
-        for c in range(n_block_cols):
-            if (r, c) not in covered:
-                pairs.append((r, c, zslot_a, zslot_b))
-    pairs.sort(key=lambda t: (t[0], t[1]))
-    n_real = len(pairs)
+    covered = np.zeros((n_block_rows, n_block_cols), dtype=bool)
+    covered[rows, cols] = True
+    ur, uc = np.nonzero(~covered)
+    pair_rows = np.concatenate([rows, ur])
+    pair_cols = np.concatenate([cols, uc])
+    pair_a = np.concatenate([ai, np.full(len(ur), zslot_a, np.int64)])
+    pair_b = np.concatenate([bj, np.full(len(ur), zslot_b, np.int64)])
+    # Final stable sort by output block (row, col); the trailing position key
+    # pins tie order to construction order (lexsort alone is stable, but be
+    # explicit — the kernel's first-visit zeroing depends only on grouping,
+    # the exact tie order is part of the legacy output contract).
+    order = np.lexsort((np.arange(len(pair_rows)), pair_cols, pair_rows))
+    pair_a, pair_b = pair_a[order], pair_b[order]
+    pair_rows, pair_cols = pair_rows[order], pair_cols[order]
+    n_real = len(pair_rows)
     cap = capacity if capacity is not None else n_real
     if n_real > cap:
         raise ValueError(f"pair capacity {cap} < required {n_real}")
-    last = pairs[-1]
-    pairs.extend([(last[0], last[1], zslot_a, zslot_b)] * (cap - n_real))
-    arr = np.asarray(pairs, dtype=np.int32)
-    return arr[:, 2], arr[:, 3], arr[:, 0], arr[:, 1], n_real
+    pad = cap - n_real
+    pair_rows = np.concatenate([pair_rows, np.full(pad, pair_rows[-1])])
+    pair_cols = np.concatenate([pair_cols, np.full(pad, pair_cols[-1])])
+    pair_a = np.concatenate([pair_a, np.full(pad, zslot_a, np.int64)])
+    pair_b = np.concatenate([pair_b, np.full(pad, zslot_b, np.int64)])
+    return (pair_a.astype(np.int32), pair_b.astype(np.int32),
+            pair_rows.astype(np.int32), pair_cols.astype(np.int32), n_real)
 
 
 def bsr_pair_matmul(a_blocks, b_blocks, pair_a, pair_b, pair_rows, pair_cols,

@@ -24,8 +24,8 @@ def _parse():
     p = argparse.ArgumentParser()
     p.add_argument("--devices", type=int, default=4)
     p.add_argument("--check", default="all",
-                   choices=["all", "spmm", "spgemm", "dense", "api", "moe",
-                            "train_parallel"])
+                   choices=["all", "spmm", "spgemm", "dense", "api",
+                            "balance", "moe", "train_parallel"])
     p.add_argument("--seed", type=int, default=0)
     return p.parse_args()
 
@@ -44,7 +44,8 @@ def main() -> int:
     from repro.core.bsr import random_sparse
     from repro.core.dist import make_grid_mesh
 
-    needs_grid = args.check in ("all", "dense", "spmm", "spgemm", "api")
+    needs_grid = args.check in ("all", "dense", "spmm", "spgemm", "api",
+                                "balance")
     g = int(np.sqrt(args.devices))
     mesh = None
     if needs_grid:
@@ -101,6 +102,32 @@ def main() -> int:
         for alg in api.algorithms():
             got = api.matmul(a_h, b_h, mesh=mesh, algorithm=alg, impl="ref")
             check(f"spgemm/{alg}", got, want)
+
+    if args.check in ("all", "balance"):
+        print(f"== balanced tiling + auto-scheduling on {g}x{g} mesh ==")
+        from repro.core.bsr import rmat_matrix
+        a_d = rmat_matrix(scale=6, edgefactor=8, seed=args.seed)  # skewed
+        b = rng.standard_normal((64, 8)).astype(np.float32)
+        b_j = jnp.asarray(b)
+        h_none = DistBSR.from_dense(a_d, g=g, block_size=4)
+        h_rows = DistBSR.from_dense(a_d, g=g, block_size=4, balance="rows")
+        check_flag(
+            f"balance/capacity ({h_rows.capacity} <= {h_none.capacity})",
+            h_rows.capacity <= h_none.capacity)
+        want = a_d @ b
+        b_h = DistDense.for_rhs(b_j, h_rows)
+        for alg in api.algorithms():
+            got = api.matmul(h_rows, b_h, mesh=mesh, algorithm=alg,
+                             impl="ref")
+            check(f"balance/{alg}", got, want)
+        plan = api.plan_matmul(h_rows, b_h, mesh=mesh, algorithm="auto",
+                               impl="ref")
+        check(f"balance/auto[{plan.algorithm.name}]", plan(h_rows, b_h),
+              want)
+        check_flag("balance/auto_scores_recorded",
+                   plan.auto_scores is not None and
+                   plan.algorithm.name == min(plan.auto_scores,
+                                              key=plan.auto_scores.get))
 
     if args.check in ("all", "api"):
         print(f"== plan-based API invariants on {g}x{g} mesh ==")

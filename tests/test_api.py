@@ -302,7 +302,7 @@ def test_legacy_algorithms_tuple_matches_registry():
     from repro.core import spmm as legacy
     assert legacy.ALGORITHMS == api.algorithms()
     assert set(legacy.ALGORITHMS) == {"summa_bcast", "summa_ag", "ring_c",
-                                      "ring_a"}
+                                      "ring_a", "ring_c_bidir"}
 
 
 # ---------------------------------------------------------------------------
@@ -332,6 +332,250 @@ def test_cost_model_ring_a_ships_c_not_a(operands):
 
 
 # ---------------------------------------------------------------------------
+# Balanced tiling (balance="rows"): capacity shrink + epilogue inversion
+# ---------------------------------------------------------------------------
+def _skewed_rmat(scale=8):
+    from repro.core.bsr import rmat_matrix
+    return rmat_matrix(scale=scale, edgefactor=8, seed=3)  # unpermuted: skewed
+
+
+def _manual_balanced_handle(d, block_size, seed=0):
+    """A DistBSR carrying an explicit row-block permutation.
+
+    On a 1x1 grid the balancer correctly falls back to the identity (one
+    tile — no capacity to shrink), so epilogue-inversion tests manufacture
+    the permuted value the way balance="rows" would on a real grid.
+    """
+    import dataclasses
+    nbr = d.shape[0] // block_size
+    perm = np.random.default_rng(seed).permutation(nbr)
+    dp = d.reshape(nbr, block_size, -1)[perm].reshape(d.shape)
+    t = TiledBSR.from_dense(dp, ProcessGrid(1, 1), block_size)
+    t = dataclasses.replace(t, row_block_perm=tuple(int(p) for p in perm))
+    return DistBSR.from_tiled(t)
+
+
+def test_balance_rows_shrinks_capacity_and_waste():
+    """R-MAT row-block balancing reduces uniform capacity on a 4x4 grid.
+
+    Pure construction — no mesh needed, so the real multi-device geometry
+    can be checked in-process.
+    """
+    d = _skewed_rmat()
+    none = TiledBSR.from_dense(d, ProcessGrid(4, 4), block_size=8)
+    rows = TiledBSR.from_dense(d, ProcessGrid(4, 4), block_size=8,
+                               balance="rows")
+    assert rows.capacity < none.capacity
+    assert rows.padded_flop_waste() < none.padded_flop_waste()
+    assert none.row_block_perm is None
+    assert sorted(rows.row_block_perm) == list(range(d.shape[0] // 8))
+    # the balanced matrix is a pure row-block permutation of the original
+    inv = np.argsort(np.asarray(rows.row_block_perm))
+    back = np.asarray(rows.to_dense()).reshape(-1, 8, d.shape[1])[inv]
+    np.testing.assert_array_equal(back.reshape(d.shape), d)
+
+
+@pytest.mark.parametrize("alg", ["ring_c", "ring_a", "ring_c_bidir"])
+def test_balanced_plan_matches_unbalanced(alg):
+    """Epilogue inverts the carried row permutation: results are allclose.
+
+    (Real-grid balance="rows" plans are checked the same way by selftest
+    --check balance on 2x2/3x3 meshes.)"""
+    d = _skewed_rmat()
+    b = np.random.default_rng(2).standard_normal((256, 16)).astype(np.float32)
+    h_none = DistBSR.from_dense(d, g=G, block_size=8)
+    h_rows = _manual_balanced_handle(d, 8)
+    assert list(h_rows.row_block_perm) != sorted(h_rows.row_block_perm)
+    c_none = np.asarray(matmul(h_none, jnp.asarray(b), algorithm=alg,
+                               impl="ref"))
+    c_rows = np.asarray(matmul(h_rows, jnp.asarray(b), algorithm=alg,
+                               impl="ref"))
+    np.testing.assert_allclose(c_rows, c_none, atol=1e-4)
+    np.testing.assert_allclose(c_rows, d @ b, atol=1e-3)
+
+
+def test_balance_identity_fallback_on_1x1_grid():
+    """One tile -> no capacity to shrink: the balancer must return the
+    identity layout (no carried perm) instead of a useless permutation."""
+    h = DistBSR.from_dense(_skewed_rmat(), g=1, block_size=8,
+                           balance="rows")
+    assert h.row_block_perm is None
+
+
+def test_balanced_spgemm_left_operand(operands):
+    a_d, _, b_sp, _, _, b_sph = operands
+    a_bal = _manual_balanced_handle(a_d, 4)
+    got = np.asarray(matmul(a_bal, b_sph, algorithm="ring_c", impl="ref"))
+    np.testing.assert_allclose(got, a_d @ b_sp, atol=1e-5)
+
+
+def test_balanced_right_operand_rejected(operands):
+    _, _, b_sp, a_h, _, _ = operands
+    b_bal = _manual_balanced_handle(b_sp, 4)
+    with pytest.raises(ValueError, match="right operand"):
+        matmul(a_h, b_bal, impl="ref")
+
+
+def test_from_tiled_balance_keeps_explicit_capacity():
+    """Rebuilding with balance must not silently re-derive a capacity the
+    caller pinned (abstract keys would stop matching cached plans)."""
+    d = _skewed_rmat()
+    pinned = TiledBSR.from_dense(d, ProcessGrid(4, 4), block_size=8,
+                                 capacity=64)
+    h = DistBSR.from_tiled(pinned, balance="rows")
+    assert h.capacity == 64
+
+
+def test_from_tiled_capacity_rejected_when_not_rebuilding():
+    """capacity= is only honored on the re-tiling path; silently ignoring
+    it would desync abstract keys from sibling pinned handles."""
+    t = TiledBSR.from_dense(_skewed_rmat(), ProcessGrid(4, 4), block_size=8)
+    with pytest.raises(ValueError, match="capacity"):
+        DistBSR.from_tiled(t, capacity=256)
+
+
+def test_from_tiled_balance_roundtrip():
+    d = _skewed_rmat()
+    plain = TiledBSR.from_dense(d, ProcessGrid(4, 4), block_size=8)
+    h = DistBSR.from_tiled(plain, balance="rows", capacity=None)
+    assert h.row_block_perm is not None        # skewed R-MAT: perm kept
+    assert h.capacity < plain.capacity         # capacity=None: re-derived
+    np.testing.assert_array_equal(
+        np.asarray(h.tiled.to_dense()).reshape(-1, 8, 256)[
+            np.argsort(np.asarray(h.row_block_perm))].reshape(256, 256), d)
+    with pytest.raises(ValueError, match="balance"):
+        DistBSR.from_tiled(plain, balance="columns")
+
+
+# ---------------------------------------------------------------------------
+# Auto-scheduling: algorithm="auto" picks the min-cost schedule
+# ---------------------------------------------------------------------------
+def test_auto_plan_picks_min_score_and_is_correct(operands):
+    a_d, b, _, a_h, b_h, _ = operands
+    # plan.requested reflects the request that FIRST built the plan; start
+    # from an empty cache so earlier tests' explicit-name plans can't alias
+    api.clear_plan_cache()
+    plan = plan_matmul(a_h, b_h, algorithm="auto", impl="ref")
+    assert plan.requested == "auto"
+    assert set(plan.auto_scores) == set(api.algorithms())
+    best = min(plan.auto_scores, key=plan.auto_scores.get)
+    assert plan.algorithm.name == best
+    assert plan.auto_scores[plan.algorithm.name] == min(
+        plan.auto_scores.values())
+    got = np.asarray(plan(a_h, b_h))
+    np.testing.assert_allclose(got, a_d @ b, atol=1e-5)
+
+
+def test_auto_choice_differs_with_sparsity_and_shape():
+    """The cost model flips the schedule across operand regimes (the
+    Bharadwaj-et-al observation auto-scheduling encodes).  No mesh is
+    needed: auto_select scores plans abstractly, so 4x4 grids work
+    in-process."""
+    from repro.core.bsr import random_sparse
+    # tiny, hypersparse A with a wide dense B: communication-dominated
+    a_sp = TiledBSR.from_dense(random_sparse(64, 64, 0.05, seed=0),
+                               ProcessGrid(4, 4), 8)
+    comm_choice, comm_scores = api.auto_select(
+        a_sp, jnp.ones((64, 512), jnp.float32))
+    # huge dense x dense: compute-dominated
+    comp_choice, comp_scores = api.auto_select(
+        jnp.ones((4096, 4096), jnp.float32),
+        jnp.ones((4096, 4096), jnp.float32), g=4)
+    assert comm_choice != comp_choice
+    for scores in (comm_scores, comp_scores):
+        assert set(scores) == set(api.algorithms())
+        assert all(s > 0 for s in scores.values())
+
+
+def test_auto_select_respects_registration(operands):
+    """A (temporarily) registered free-comm algorithm must win auto."""
+    _, _, _, a_h, b_h, _ = operands
+    ring_c = REGISTRY.get("ring_c")
+    REGISTRY.register(Algorithm(
+        name="freebie", body=ring_c.body, a_placement=ring_c.a_placement,
+        b_placement=ring_c.b_placement, wire=(), wire_amortized=True))
+    try:
+        choice, scores = api.auto_select(a_h, b_h)
+        assert "freebie" in scores
+        assert scores["freebie"] == min(scores.values())
+    finally:
+        REGISTRY.unregister("freebie")
+
+
+def test_bidir_with_unit_width_tiles(operands):
+    """tn == 1 makes one bidir half-panel zero-width; the kernel wrapper
+    must short-circuit n == 0 on every impl path."""
+    a_d, _, _, a_h, _, _ = operands
+    b_thin = np.random.default_rng(11).standard_normal(
+        (16, 1)).astype(np.float32)
+    for impl in ("ref", "interpret"):
+        got = np.asarray(matmul(a_h, jnp.asarray(b_thin),
+                                algorithm="ring_c_bidir", impl=impl))
+        np.testing.assert_allclose(got, a_d @ b_thin, atol=1e-5)
+
+
+def test_predicted_cost_positive(operands):
+    _, _, _, a_h, b_h, _ = operands
+    from repro.core.roofline import TPU_V5E
+    for alg in api.algorithms():
+        plan = plan_matmul(a_h, b_h, algorithm=alg, impl="ref")
+        assert plan.predicted_cost(TPU_V5E) > 0
+
+
+# ---------------------------------------------------------------------------
+# Hot-loop hygiene: no coverage sort / B densification inside the scan
+# ---------------------------------------------------------------------------
+def _subjaxprs(v):
+    from jax import core as jcore
+    if isinstance(v, jcore.ClosedJaxpr):
+        yield v.jaxpr
+    elif isinstance(v, jcore.Jaxpr):
+        yield v
+    elif isinstance(v, (list, tuple)):
+        for x in v:
+            yield from _subjaxprs(x)
+
+
+def _iter_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from _iter_eqns(sub)
+
+
+def _scan_body_primitives(plan, a_h, b_h):
+    import jax
+    pa = a_h.placed(plan.algorithm.a_placement)
+    pb = b_h.placed(plan.algorithm.b_placement)
+    jaxpr = jax.make_jaxpr(lambda a, b: plan._exec(a, b))(pa, pb).jaxpr
+    prims = set()
+    seen_scan = False
+    for eqn in _iter_eqns(jaxpr):
+        if eqn.primitive.name == "scan":
+            seen_scan = True
+            for sub in _iter_eqns(eqn.params["jaxpr"].jaxpr):
+                prims.add(sub.primitive.name)
+    assert seen_scan, "expected a scanned ring loop in the plan executable"
+    return prims
+
+
+@pytest.mark.parametrize("alg", ["ring_c", "ring_a", "ring_c_bidir"])
+@pytest.mark.parametrize("kind", ["spmm", "spgemm"])
+def test_scan_step_free_of_augment_and_densify(operands, alg, kind):
+    """The scanned ring step must contain no coverage augmentation (sort /
+    concatenate of the block lists) and no B-tile densification
+    (scatter-add): both are hoisted to tiling / pre-scan time."""
+    _, _, _, a_h, b_h, b_sph = operands
+    rhs = b_h if kind == "spmm" else b_sph
+    plan = plan_matmul(a_h, rhs, algorithm=alg, impl="interpret")
+    prims = _scan_body_primitives(plan, a_h, rhs)
+    offenders = {p for p in prims if "sort" in p or "scatter" in p}
+    assert not offenders, (
+        f"hot-loop bloat in {alg}/{kind} scan step: {sorted(offenders)}")
+
+
+# ---------------------------------------------------------------------------
 # API-hygiene guard (tools/check_api.py rides tier-1 via this test)
 # ---------------------------------------------------------------------------
 def _load_check_api():
@@ -354,3 +598,20 @@ def test_check_api_flags_deprecated_import(tmp_path):
         "from repro.core.spmm import spmm\n")
     found = _load_check_api().violations(str(tmp_path))
     assert len(found) == 1 and "bad.py" in found[0]
+
+
+def test_check_api_flags_kernel_bypass(tmp_path):
+    """examples/benchmarks must not bypass plan_matmul by importing the
+    Pallas kernel module directly."""
+    (tmp_path / "examples").mkdir()
+    (tmp_path / "benchmarks").mkdir()
+    (tmp_path / "benchmarks" / "bad1.py").write_text(
+        "from repro.kernels.bsr_spmm import bsr_spmm_pallas\n")
+    (tmp_path / "benchmarks" / "bad2.py").write_text(
+        "from repro.kernels import bsr_spmm\n")
+    (tmp_path / "benchmarks" / "ok.py").write_text(
+        "from repro.kernels import ops\n")
+    found = _load_check_api().violations(str(tmp_path))
+    assert len(found) == 2
+    assert any("bad1.py" in f for f in found)
+    assert any("bad2.py" in f for f in found)

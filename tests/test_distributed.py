@@ -27,7 +27,8 @@ def _run_selftest(devices: int, check: str) -> str:
     return proc.stdout
 
 
-@pytest.mark.parametrize("check", ["dense", "spmm", "spgemm", "api"])
+@pytest.mark.parametrize("check", ["dense", "spmm", "spgemm", "api",
+                                   "balance"])
 def test_selftest_2x2(check):
     out = _run_selftest(4, check)
     assert "SELFTEST PASSED" in out

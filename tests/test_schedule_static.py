@@ -1,0 +1,119 @@
+"""Static scheduler tests that run without hypothesis (tier-1 everywhere).
+
+``tests/test_schedule.py`` carries the property-based suite but is skipped
+on containers without hypothesis; the ISSUE-2 coverage contract for
+``core/schedule.py`` — permutation validity, the LPT 4/3 makespan bound
+against brute-force optima, and stage_imbalance vs an explicit device loop
+— lives here so it always rides tier-1.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.schedule import (balance_row_perm, invert_perm, lpt_assign,
+                                 makespan, stage_imbalance)
+
+
+# ---------------------------------------------------------------------------
+# balance_row_perm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,grid_rows,seed", [
+    (16, 4, 0), (32, 4, 1), (24, 3, 2), (8, 8, 3), (12, 1, 4),
+])
+def test_balance_row_perm_is_valid_permutation(n, grid_rows, seed):
+    rng = np.random.default_rng(seed)
+    nnz = rng.pareto(1.2, size=n) + 0.01        # heavy-tailed like R-MAT
+    perm = balance_row_perm(nnz, grid_rows)
+    assert sorted(perm.tolist()) == list(range(n))
+
+
+@pytest.mark.parametrize("n,grid_rows,seed", [(16, 4, 0), (24, 3, 5)])
+def test_balance_row_perm_preserves_per_grid_row_counts(n, grid_rows, seed):
+    """Each grid row receives exactly n/grid_rows row blocks, and the
+    balanced max grid-row load never exceeds the identity layout's."""
+    rng = np.random.default_rng(seed)
+    nnz = rng.pareto(1.2, size=n) + 0.01
+    perm = balance_row_perm(nnz, grid_rows)
+    per = n // grid_rows
+    loads = nnz[perm].reshape(grid_rows, per).sum(axis=1)
+    identity = nnz.reshape(grid_rows, per).sum(axis=1)
+    assert all(len(perm[g * per:(g + 1) * per]) == per
+               for g in range(grid_rows))
+    assert loads.max() <= identity.max() + 1e-9
+    # total work is conserved
+    assert loads.sum() == pytest.approx(nnz.sum())
+
+
+def test_balance_row_perm_rejects_indivisible():
+    with pytest.raises(ValueError, match="divide"):
+        balance_row_perm(np.ones(10), 4)
+
+
+def test_invert_perm_roundtrip():
+    rng = np.random.default_rng(9)
+    perm = rng.permutation(17)
+    inv = invert_perm(perm)
+    assert (inv[perm] == np.arange(17)).all()
+    assert (perm[inv] == np.arange(17)).all()
+
+
+# ---------------------------------------------------------------------------
+# LPT: the 4/3 bound against brute-force optima
+# ---------------------------------------------------------------------------
+def _opt_makespan(costs, n_workers):
+    """Exact optimal makespan by exhaustive assignment (small n only)."""
+    best = float("inf")
+    for assign in itertools.product(range(n_workers), repeat=len(costs)):
+        loads = np.zeros(n_workers)
+        np.add.at(loads, np.asarray(assign), costs)
+        best = min(best, loads.max())
+    return best
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_lpt_within_four_thirds_of_optimal(seed):
+    rng = np.random.default_rng(seed)
+    n_items = int(rng.integers(4, 9))
+    n_workers = int(rng.integers(2, 4))
+    costs = rng.pareto(1.3, size=n_items) + 0.05
+    assign = lpt_assign(costs, n_workers)
+    lpt_max, _ = makespan(costs, assign, n_workers)
+    opt = _opt_makespan(costs, n_workers)
+    # Graham: LPT <= (4/3 - 1/(3m)) OPT
+    assert lpt_max <= (4.0 / 3.0 - 1.0 / (3 * n_workers)) * opt + 1e-9
+    assert lpt_max >= opt - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# stage_imbalance vs explicit brute-force device loop
+# ---------------------------------------------------------------------------
+def _stage_imbalance_bruteforce(tile_costs):
+    g = tile_costs.shape[0]
+    totals = np.zeros((g, g))
+    per_stage = 0.0
+    for t in range(g):
+        stage = np.zeros((g, g))
+        for i in range(g):
+            for j in range(g):
+                stage[i, j] = tile_costs[i, (i + j + t) % g]
+        per_stage += stage.max()
+        totals += stage
+    avg = totals.mean()
+    if avg == 0:
+        return 1.0, 1.0
+    return per_stage / avg, totals.max() / avg
+
+
+@pytest.mark.parametrize("g,seed", [(2, 0), (4, 1), (8, 2)])
+def test_stage_imbalance_matches_bruteforce(g, seed):
+    rng = np.random.default_rng(seed)
+    costs = rng.pareto(1.0, size=(g, g)) + 0.05
+    got = stage_imbalance(costs)
+    want = _stage_imbalance_bruteforce(costs)
+    assert got[0] == pytest.approx(want[0])
+    assert got[1] == pytest.approx(want[1])
+
+
+def test_stage_imbalance_zero_costs():
+    assert stage_imbalance(np.zeros((4, 4))) == (1.0, 1.0)

@@ -1,12 +1,19 @@
 #!/usr/bin/env python
 """API-hygiene guard: examples/ and benchmarks/ must use the plan-based API.
 
-The free functions in ``repro.core.spmm`` (``spmm`` / ``spgemm`` /
-``dense_matmul``) are deprecated shims kept only for downstream
-compatibility; first-party code must go through ``repro.core.api``
-(``matmul`` / ``plan_matmul`` / ``DistBSR`` / ``DistDense``).  This script
-AST-scans ``examples/`` and ``benchmarks/`` for imports of the deprecated
-module and exits non-zero on any hit.  It is also run by
+Two classes of violation:
+
+* The free functions in ``repro.core.spmm`` (``spmm`` / ``spgemm`` /
+  ``dense_matmul``) are deprecated shims kept only for downstream
+  compatibility; first-party code must go through ``repro.core.api``
+  (``matmul`` / ``plan_matmul`` / ``DistBSR`` / ``DistDense``).
+* The Pallas kernel module ``repro.kernels.bsr_spmm`` is an internal
+  implementation detail behind ``repro.kernels.ops`` and the planner;
+  importing it directly bypasses impl dispatch, the coverage contract and
+  the plan cache.
+
+This script AST-scans ``examples/`` and ``benchmarks/`` for imports of
+either module and exits non-zero on any hit.  It is also run by
 ``tests/test_api.py`` so the guard rides tier-1.
 
 Usage:  python tools/check_api.py  [repo_root]
@@ -18,7 +25,11 @@ import pathlib
 import sys
 from typing import List, Optional
 
-DEPRECATED_MODULE = "repro.core.spmm"
+# module -> (parent package, submodule name) for `from parent import name`
+FORBIDDEN_MODULES = {
+    "repro.core.spmm": ("repro.core", "spmm"),
+    "repro.kernels.bsr_spmm": ("repro.kernels", "bsr_spmm"),
+}
 SCANNED_DIRS = ("examples", "benchmarks")
 
 
@@ -34,22 +45,22 @@ def violations(root: Optional[str] = None) -> List[str]:
                 if isinstance(node, ast.Import):
                     for alias in node.names:
                         name = alias.name
-                        if name == DEPRECATED_MODULE or name.startswith(
-                                DEPRECATED_MODULE + "."):
-                            out.append(f"{rel}:{node.lineno}: "
-                                       f"import {name}")
+                        for mod in FORBIDDEN_MODULES:
+                            if name == mod or name.startswith(mod + "."):
+                                out.append(f"{rel}:{node.lineno}: "
+                                           f"import {name}")
                 elif isinstance(node, ast.ImportFrom):
                     mod = node.module or ""
-                    if mod == DEPRECATED_MODULE or mod.startswith(
-                            DEPRECATED_MODULE + "."):
-                        out.append(f"{rel}:{node.lineno}: "
-                                   f"from {mod} import ...")
-                    elif mod == "repro.core":
-                        for alias in node.names:
-                            if alias.name == "spmm":
-                                out.append(
-                                    f"{rel}:{node.lineno}: "
-                                    "from repro.core import spmm")
+                    for bad, (parent, leaf) in FORBIDDEN_MODULES.items():
+                        if mod == bad or mod.startswith(bad + "."):
+                            out.append(f"{rel}:{node.lineno}: "
+                                       f"from {mod} import ...")
+                        elif mod == parent:
+                            for alias in node.names:
+                                if alias.name == leaf:
+                                    out.append(
+                                        f"{rel}:{node.lineno}: "
+                                        f"from {parent} import {leaf}")
     return out
 
 
@@ -57,7 +68,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     found = violations(argv[0] if argv else None)
     if found:
-        print("deprecated repro.core.spmm usage (use repro.core.api):")
+        print("deprecated/internal module usage (use repro.core.api):")
         for v in found:
             print(f"  {v}")
         return 1
