@@ -9,11 +9,12 @@ rest run in-process.
   PYTHONPATH=src python -m benchmarks.run --smoke    # quick CI pass
   PYTHONPATH=src python -m benchmarks.run --json     # write BENCH_kernels.json
 
-``--json`` runs the kernel micro-bench plus the balanced-tiling experiment
-(R-MAT scale-10, 4x4 grid, in a 16-device subprocess) and writes
-``BENCH_kernels.json`` at the repo root: plan build time, per-multiply
-time, padded-flop waste and predicted-vs-measured cost per algorithm — the
-perf-trajectory baseline for future PRs.
+``--json`` runs the kernel micro-bench plus the balanced-tiling and
+dense-vs-sparse-output SpGEMM experiments (R-MAT on a 4x4 grid, each in a
+16-device subprocess) and writes ``BENCH_kernels.json`` at the repo root:
+plan build time, per-multiply time, padded-flop waste, output footprint
+and predicted-vs-measured cost per algorithm — the perf-trajectory
+baseline for future PRs.
 """
 from __future__ import annotations
 
@@ -55,8 +56,9 @@ def _write_json(smoke: bool) -> None:
     # mistake a quick CI pass for the full baseline.
     payload = {"smoke": smoke,
                "kernels": kernels_bench.run_json(smoke=smoke)}
-    # The balance experiment configures 16 fake devices before importing
-    # jax, so it must run in its own process; it prints one JSON object.
+    # The balance and spgemm experiments configure 16 fake devices before
+    # importing jax, so each runs in its own process printing one JSON
+    # object.
     extra = ("--smoke",) if smoke else ()
     raw = _run_subprocess("benchmarks.balance_bench", 16, *extra, quiet=True)
     try:
@@ -65,6 +67,15 @@ def _write_json(smoke: bool) -> None:
     except json.JSONDecodeError as e:
         payload["balance_rmat_4x4"] = {"error": f"unparseable output: {e}"}
         raw = ""   # degrade like the empty-output case (exit 1 below)
+    raw_sp = _run_subprocess("benchmarks.spgemm_bench", 16, *extra,
+                             quiet=True)
+    try:
+        payload["spgemm_rmat_4x4"] = json.loads(raw_sp) if raw_sp else {
+            "error": "spgemm bench failed"}
+    except json.JSONDecodeError as e:
+        payload["spgemm_rmat_4x4"] = {"error": f"unparseable output: {e}"}
+        raw_sp = ""
+    raw = raw and raw_sp   # both experiments must land in the baseline
     # Smoke and error payloads go to sibling files so neither a quick CI
     # pass nor a failed run can clobber the committed full-scale baseline.
     if smoke:
@@ -100,13 +111,17 @@ def main() -> None:
         return
     if smoke:
         # Quick self-contained pass for tools/run_tier1.sh: kernel oracle
-        # rows + one scale-8 balance check, no multi-minute figure sweeps.
+        # rows + one scale-8 balance check + one scale-9 sparse-output
+        # spgemm check, no multi-minute figure sweeps.
         from benchmarks import kernels_bench
         kernels_bench.main(smoke=True)
-        raw = _run_subprocess("benchmarks.balance_bench", 16, "--smoke",
-                              quiet=True)
-        print(f"smoke,balance_bench,{'ok' if raw else 'FAILED'}")
-        if not raw:
+        ok = True
+        for module in ("benchmarks.balance_bench", "benchmarks.spgemm_bench"):
+            raw = _run_subprocess(module, 16, "--smoke", quiet=True)
+            name = module.rsplit(".", 1)[1]
+            print(f"smoke,{name},{'ok' if raw else 'FAILED'}")
+            ok = ok and bool(raw)
+        if not ok:
             sys.exit(1)
         return
     which = which or {"fig1", "fig2", "fig34", "fig5", "table2", "kernels"}

@@ -4,11 +4,13 @@
 #
 # Public surface: the plan-based distributed-matmul API (see DESIGN.md).
 from .api import (REGISTRY, AlgorithmRegistry, DistBSR, DistDense,
-                  DistMatrix, MatmulPlan, algorithms, clear_plan_cache,
-                  matmul, plan_matmul, register_algorithm)
+                  DistMatrix, MatmulPlan, SymbolicProduct, algorithms,
+                  clear_plan_cache, matmul, plan_matmul, register_algorithm,
+                  sparse_algorithms, symbolic_spgemm)
 
 __all__ = [
     "REGISTRY", "AlgorithmRegistry", "DistBSR", "DistDense", "DistMatrix",
-    "MatmulPlan", "algorithms", "clear_plan_cache", "matmul", "plan_matmul",
-    "register_algorithm",
+    "MatmulPlan", "SymbolicProduct", "algorithms", "clear_plan_cache",
+    "matmul", "plan_matmul", "register_algorithm", "sparse_algorithms",
+    "symbolic_spgemm",
 ]

@@ -37,6 +37,16 @@ builds the cheapest — the static analogue of Bharadwaj et al.'s
 observation that the best distributed sparse schedule flips with sparsity
 and aspect ratio.
 
+SpGEMM additionally supports **sparse outputs** (``output="sparse"`` /
+``"auto"``): a host-side symbolic phase (:mod:`repro.core.symbolic`,
+re-exported here as :func:`symbolic_spgemm`) predicts C's block structure
+from the operands' structures, allocates a capacity-bounded packed layout,
+and the numeric phase (``ops.bsr_pair_accumulate``) scatter-accumulates
+matched block products straight into it — no dense C tile, no B
+densification, and the plan returns a :class:`DistBSR` so chained
+multiplies ``matmul(matmul(A, A), A)`` stay packed end to end.  See
+DESIGN.md "Symbolic/numeric SpGEMM".
+
 Two hot-loop invariants the bodies maintain (asserted by the jaxpr test in
 ``tests/test_api.py``): sparse A tiles arrive *pre-augmented* from
 :class:`~repro.core.bsr.TiledBSR` (no coverage concat+sort inside the
@@ -62,17 +72,21 @@ from ..kernels import ops as kops
 from ..kernels import ref as kref
 from . import roofline as _roofline
 from . import schedule as _schedule
+from . import symbolic as _symbolic
 from .bsr import TiledBSR
 from .dist import (make_grid_mesh, place_b_for_stationary_a, skew_bsr,
                    skew_dense, unskew_c_rows)
 from .grid import ProcessGrid, pad_to_multiple
+from .symbolic import (SymbolicProduct, predicted_density,  # re-export
+                       symbolic_spgemm)                     # (public)
 
 __all__ = [
     "NATURAL", "SKEW_ROWS", "SKEW_COLS", "STATIONARY_A", "PLACEMENTS",
     "DistMatrix", "DistBSR", "DistDense",
     "Algorithm", "AlgorithmRegistry", "REGISTRY", "register_algorithm",
-    "algorithms", "auto_select",
+    "algorithms", "sparse_algorithms", "auto_select", "recommended_balance",
     "MatmulPlan", "plan_matmul", "matmul",
+    "SymbolicProduct", "symbolic_spgemm", "predicted_density",
     "add_trace_hook", "remove_trace_hook",
     "clear_plan_cache", "plan_cache_size",
     "validate_mesh",
@@ -99,6 +113,7 @@ class _Geom:
     axr: str
     axc: str
     out_dtype: object
+    c_store: int = 0  # packed C slots per tile (sparse-output plans only)
 
 
 # ---------------------------------------------------------------------------
@@ -152,10 +167,19 @@ def _pvary(x, geom: _Geom):
 # Shared plan cache (defined before the registry: registering over an
 # existing algorithm name must evict that name's cached plans).
 _PLAN_CACHE: Dict[tuple, "MatmulPlan"] = {}
+# Symbolic-phase results, keyed on the operands' structure fingerprints
+# (sparsity structure, not values): repeated sparse-output plans for the
+# same structures skip the host-side pair-list construction.  Density-only
+# results (the cheap prefix consulted by output="auto") cache separately so
+# auto decisions that resolve to dense never build pair lists.
+_SYMBOLIC_CACHE: Dict[tuple, "SymbolicProduct"] = {}
+_DENSITY_CACHE: Dict[tuple, float] = {}
 
 
 def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
+    _SYMBOLIC_CACHE.clear()
+    _DENSITY_CACHE.clear()
 
 
 def plan_cache_size() -> int:
@@ -192,6 +216,13 @@ class Algorithm:
     duplex: int = 1                         # link directions used per step
     msgs_per_step: Optional[int] = None     # alpha-term count; len(wire) if
                                             # None (bidir splits B: 4 msgs)
+    sparse_body: Optional[Callable] = None  # packed-output SpGEMM body
+    k_order: Optional[Callable] = None      # (i, j, t, g) -> inner index k
+                                            # of step t on device (i, j);
+                                            # schedules the symbolic phase's
+                                            # pair lists (sparse_body only)
+    balance_axis: str = "rows"              # operand balance this schedule
+                                            # benefits from (planner hint)
 
 
 class AlgorithmRegistry:
@@ -246,6 +277,9 @@ def register_algorithm(name: str, *, a_placement: str = NATURAL,
                        wire: Tuple[str, ...] = ("a", "b"),
                        wire_amortized: bool = False, style: str = "rdma",
                        duplex: int = 1, msgs_per_step: Optional[int] = None,
+                       sparse_body: Optional[Callable] = None,
+                       k_order: Optional[Callable] = None,
+                       balance_axis: str = "rows",
                        registry: AlgorithmRegistry = REGISTRY):
     """Decorator registering a shard_map body as a named algorithm."""
     def deco(body):
@@ -253,7 +287,8 @@ def register_algorithm(name: str, *, a_placement: str = NATURAL,
             name=name, body=body, a_placement=a_placement,
             b_placement=b_placement, unskew_out=unskew_out, wire=wire,
             wire_amortized=wire_amortized, style=style, duplex=duplex,
-            msgs_per_step=msgs_per_step))
+            msgs_per_step=msgs_per_step, sparse_body=sparse_body,
+            k_order=k_order, balance_axis=balance_axis))
         return body
     return deco
 
@@ -263,10 +298,104 @@ def algorithms() -> Tuple[str, ...]:
     return REGISTRY.names()
 
 
+def sparse_algorithms() -> Tuple[str, ...]:
+    """Names of algorithms with a sparse-output (packed SpGEMM) body."""
+    return tuple(a.name for a in REGISTRY if a.sparse_body is not None)
+
+
+def recommended_balance(algorithm: str) -> str:
+    """The operand balance axis the named schedule benefits from.
+
+    Stationary-C schedules are dominated by the A tiles streamed each step,
+    so spreading nonzero blocks over grid *rows* shrinks their capacity;
+    the stationary-A ring's cost is dominated by B/C traffic and its output
+    rides a reverse ring, so a *column* balance (compensated on the B side,
+    leaving C unpermuted) composes better.  Feed the result to
+    ``DistBSR.from_dense(balance=...)``.
+    """
+    return REGISTRY.get(algorithm).balance_axis
+
+
+# ---------------------------------------------------------------------------
+# Sparse-output bodies (packed SpGEMM; see plan_matmul(output="sparse"))
+# ---------------------------------------------------------------------------
+# The numeric phase of symbolic/numeric SpGEMM: both operands stay in their
+# stored block form (only ``blocks`` rides the wire — the pair lists encode
+# all structure, so rows/cols never leave the host), and each step
+# scatter-accumulates matched block products into the packed output slots
+# allocated by the symbolic phase.  No dense C tile, and no B densification,
+# ever materializes on a device.
+def _sparse_step(a_t: Dict, b_t: Dict, pa, pb, ps, geom: _Geom):
+    return kops.bsr_pair_accumulate(
+        a_t["blocks"], b_t["blocks"], pa, pb, ps, n_slots=geom.c_store,
+        out_dtype=jnp.float32, impl=geom.impl)
+
+
+def _sparse_c0(a: Dict, geom: _Geom):
+    bs = a["blocks"].shape[-1]
+    return _pvary(jnp.zeros((geom.c_store, bs, bs), jnp.float32), geom)
+
+
+def _sparse_body_summa_bcast(a, b, pairs, geom: _Geom):
+    """Bulk-synchronous SUMMA with packed sparse output."""
+    my_row = lax.axis_index(geom.axr)
+    my_col = lax.axis_index(geom.axc)
+
+    def step(c, xs):
+        k, pa, pb, ps = xs
+        a_k = _tree_bcast(a, geom.axc, k, my_col)
+        b_k = _tree_bcast(b, geom.axr, k, my_row)
+        return c + _sparse_step(a_k, b_k, pa, pb, ps, geom), None
+
+    c, _ = lax.scan(step, _sparse_c0(a, geom),
+                    (jnp.arange(geom.g), pairs["pa"], pairs["pb"],
+                     pairs["ps"]))
+    return c.astype(geom.out_dtype)
+
+
+def _sparse_body_summa_ag(a, b, pairs, geom: _Geom):
+    """All-gather SUMMA with packed sparse output."""
+    a_g = {k: lax.all_gather(v, geom.axc) for k, v in a.items()}
+    b_g = {k: lax.all_gather(v, geom.axr) for k, v in b.items()}
+
+    def step(c, xs):
+        k, pa, pb, ps = xs
+        a_k = {kk: v[k] for kk, v in a_g.items()}
+        b_k = {kk: v[k] for kk, v in b_g.items()}
+        return c + _sparse_step(a_k, b_k, pa, pb, ps, geom), None
+
+    c, _ = lax.scan(step, _sparse_c0(a, geom),
+                    (jnp.arange(geom.g), pairs["pa"], pairs["pb"],
+                     pairs["ps"]))
+    return c.astype(geom.out_dtype)
+
+
+def _sparse_body_ring_c(a, b, pairs, geom: _Geom):
+    """Stationary-C ring with packed sparse output.
+
+    Same skewed placement and prefetch structure as ``ring_c``; B rides the
+    ring in stored block form (its densified tile never exists), and the
+    scanned step consumes the step-scheduled pair lists as scan inputs.
+    """
+    def step(carry, xs):
+        a_t, b_t, c = carry
+        pa, pb, ps = xs
+        a_n = _tree_ppermute(a_t, geom.axc, geom.g)   # prefetch (paper SS3.3)
+        b_n = _tree_ppermute(b_t, geom.axr, geom.g)
+        c = c + _sparse_step(a_t, b_t, pa, pb, ps, geom)
+        return (a_n, b_n, c), None
+
+    (_, _, c), _ = lax.scan(step, (a, b, _sparse_c0(a, geom)),
+                            (pairs["pa"], pairs["pb"], pairs["ps"]))
+    return c.astype(geom.out_dtype)
+
+
 # ---------------------------------------------------------------------------
 # Algorithm bodies (run inside shard_map on local tile views)
 # ---------------------------------------------------------------------------
-@register_algorithm("summa_bcast", style="bsp")
+@register_algorithm("summa_bcast", style="bsp",
+                    sparse_body=_sparse_body_summa_bcast,
+                    k_order=lambda i, j, t, g: t + 0 * (i + j))
 def _body_summa_bcast(a, b, geom: _Geom):
     """Bulk-synchronous SUMMA (paper SS2.2): a broadcast per inner step."""
     b = _densify_b(b, geom)
@@ -283,7 +412,9 @@ def _body_summa_bcast(a, b, geom: _Geom):
     return c
 
 
-@register_algorithm("summa_ag", style="bsp", wire_amortized=True)
+@register_algorithm("summa_ag", style="bsp", wire_amortized=True,
+                    sparse_body=_sparse_body_summa_ag,
+                    k_order=lambda i, j, t, g: t + 0 * (i + j))
 def _body_summa_ag(a, b, geom: _Geom):
     """All-gather SUMMA: one big up-front collective, g x tile footprint."""
     b = _densify_b(b, geom)
@@ -300,7 +431,9 @@ def _body_summa_ag(a, b, geom: _Geom):
     return c
 
 
-@register_algorithm("ring_c", a_placement=SKEW_ROWS, b_placement=SKEW_COLS)
+@register_algorithm("ring_c", a_placement=SKEW_ROWS, b_placement=SKEW_COLS,
+                    sparse_body=_sparse_body_ring_c,
+                    k_order=lambda i, j, t, g: (i + j + t) % g)
 def _body_ring_c(a, b, geom: _Geom):
     """Paper Alg 2 (stationary-C): skewed placement + neighbour ppermute."""
     b = _densify_b(b, geom)
@@ -320,7 +453,7 @@ def _body_ring_c(a, b, geom: _Geom):
 
 
 @register_algorithm("ring_a", b_placement=STATIONARY_A, unskew_out="rows",
-                    wire=("b", "c"))
+                    wire=("b", "c"), balance_axis="cols")
 def _body_ring_a(a, b, geom: _Geom):
     """Paper Alg 1 (stationary-A): B rides the ring, partial C rides back."""
     b = _densify_b(b, geom)
@@ -398,7 +531,8 @@ def _place_bsr(t: TiledBSR, placement: str) -> TiledBSR:
             blocks=take(t.blocks), rows=take(t.rows), cols=take(t.cols),
             counts=take(t.counts), shape=t.shape, block_size=t.block_size,
             grid_shape=t.grid_shape, capacity=t.capacity,
-            logical_shape=t.logical_shape, row_block_perm=t.row_block_perm)
+            logical_shape=t.logical_shape, row_block_perm=t.row_block_perm,
+            col_block_perm=t.col_block_perm)
     raise ValueError(f"unknown placement {placement!r}; one of {PLACEMENTS}")
 
 
@@ -468,11 +602,11 @@ class DistBSR(DistMatrix):
     @classmethod
     def from_tiled(cls, tiled: TiledBSR, *, balance: str = "none",
                    capacity="keep") -> "DistBSR":
-        """Wrap a TiledBSR; ``balance="rows"`` re-tiles with row balancing.
+        """Wrap a TiledBSR; ``balance != "none"`` re-tiles with balancing.
 
         Re-balancing an already-tiled matrix goes through a dense round
         trip (tiling is host-side construction, not a hot path); a tiled
-        matrix that already carries a ``row_block_perm`` is kept as-is.
+        matrix that already carries a balance permutation is kept as-is.
 
         ``capacity`` controls the rebuilt uniform capacity: ``"keep"``
         (default) preserves the handle's existing value — a caller who
@@ -480,19 +614,21 @@ class DistBSR(DistMatrix):
         sharing) must not get a silently re-derived one — while ``None``
         re-derives the minimal capacity, realizing the balancing shrink
         (balancing never *increases* the needed capacity: the balancer
-        falls back to the identity layout when it would).  An int pins a
-        new value.  A non-``"keep"`` capacity on a call that does not
-        re-tile raises (it cannot be honored, and ignoring it would desync
+        falls back to the identity layout when it would), and ``"bucket"``
+        re-derives it rounded up to a 1.25x bucket.  An int pins a new
+        value.  A non-``"keep"`` capacity on a call that does not re-tile
+        raises (it cannot be honored, and ignoring it would desync
         abstract keys).
         """
-        if balance not in ("none", "rows"):
-            raise ValueError(
-                f"unknown balance {balance!r}; one of ('none', 'rows')")
-        rebuilds = balance == "rows" and tiled.row_block_perm is None
+        if balance not in ("none", "rows", "cols", "auto"):
+            raise ValueError(f"unknown balance {balance!r}; one of "
+                             "('none', 'rows', 'cols', 'auto')")
+        rebuilds = balance != "none" and tiled.row_block_perm is None \
+            and tiled.col_block_perm is None
         if capacity != "keep" and not rebuilds:
             raise ValueError(
                 "capacity can only be changed when from_tiled re-tiles "
-                "(balance='rows' on an unbalanced value); otherwise rebuild "
+                "(balance= on an unbalanced value); otherwise rebuild "
                 "with TiledBSR.from_dense(capacity=...)")
         if rebuilds:
             m, n = tiled.logical_shape or tiled.shape
@@ -500,13 +636,21 @@ class DistBSR(DistMatrix):
             cap = tiled.capacity if capacity == "keep" else capacity
             tiled = TiledBSR.from_dense(
                 dense, ProcessGrid(*tiled.grid_shape), tiled.block_size,
-                capacity=cap, dtype=tiled.dtype, balance="rows")
+                capacity=cap, dtype=tiled.dtype, balance=balance)
         return cls(tiled)
 
     @classmethod
     def from_dense(cls, dense, *, g: int, block_size: int,
-                   capacity: Optional[int] = None, dtype=None,
+                   capacity="bucket", dtype=None,
                    balance: str = "none") -> "DistBSR":
+        """Tile + wrap a dense array.
+
+        Unlike raw ``TiledBSR.from_dense``, the default capacity here is
+        ``"bucket"``: the minimal capacity rounded up to the next 1.25x
+        bucket, so handles for near-identical sparsity patterns share
+        abstract shapes — and therefore cached, jitted plans.  Pass
+        ``capacity=None`` for the exact minimum or an int to pin.
+        """
         return cls(TiledBSR.from_dense(dense, ProcessGrid(g, g), block_size,
                                        capacity=capacity, dtype=dtype,
                                        balance=balance))
@@ -544,6 +688,11 @@ class DistBSR(DistMatrix):
         """Row-block balance permutation (None unless ``balance="rows"``)."""
         return self.tiled.row_block_perm
 
+    @property
+    def col_block_perm(self) -> Optional[Tuple[int, ...]]:
+        """Column-block balance permutation (``balance="cols"``)."""
+        return self.tiled.col_block_perm
+
     def inv_row_perm(self) -> Optional[jnp.ndarray]:
         """Device array of the inverse balance permutation, cached on the
         handle so repeated plan calls don't recompute/re-upload it."""
@@ -555,6 +704,54 @@ class DistBSR(DistMatrix):
                 _schedule.invert_perm(self.tiled.row_block_perm))
             self._inv_row_perm = inv
         return inv
+
+    def inv_col_perm(self) -> Optional[jnp.ndarray]:
+        """Cached inverse of ``col_block_perm`` (see :meth:`inv_row_perm`)."""
+        if self.tiled.col_block_perm is None:
+            return None
+        inv = getattr(self, "_inv_col_perm", None)
+        if inv is None:
+            inv = jnp.asarray(
+                _schedule.invert_perm(self.tiled.col_block_perm))
+            self._inv_col_perm = inv
+        return inv
+
+    def structure_key(self) -> str:
+        """Fingerprint of the block *structure* (which slots hold data).
+
+        Sparse-output plans are specialized to the operands' structures
+        (the symbolic phase bakes pair lists into the executable), so this
+        joins the plan-cache key the way ``abstract_key`` does for shapes.
+        Cached on the handle: one device read per handle lifetime.
+        """
+        key = getattr(self, "_structure_key", None)
+        if key is None:
+            key = _symbolic.structure_fingerprint(self.tiled)
+            self._structure_key = key
+        return key
+
+    def densify(self) -> jnp.ndarray:
+        """Dense logical-shape value (inverts balance perms, crops padding).
+
+        Host-side convenience for tests/benchmarks — the whole point of
+        sparse-output plans is that chained multiplies never need this.
+        """
+        d = self.tiled.to_dense()
+        bs = self.block_size
+        if self.tiled.row_block_perm is not None:
+            inv = np.asarray(self.inv_row_perm())
+            d = d.reshape(-1, bs, d.shape[1])[inv].reshape(d.shape)
+        if self.tiled.col_block_perm is not None:
+            inv = np.asarray(self.inv_col_perm())
+            d = d.reshape(d.shape[0], -1, bs)[:, inv].reshape(d.shape)
+        m, n = self.logical_shape
+        return d[:m, :n]
+
+    def footprint_bytes(self) -> int:
+        """Bytes of the packed representation (blocks + structure arrays)."""
+        t = self.tiled
+        return int(t.blocks.nbytes + t.rows.nbytes + t.cols.nbytes
+                   + t.counts.nbytes)
 
     def placed(self, placement: str) -> Dict[str, jnp.ndarray]:
         tree = self._placed.get(placement)
@@ -727,8 +924,9 @@ def _key_dtype(abstract_key: tuple):
     return abstract_key[5] if abstract_key[0] == "bsr" else abstract_key[3]
 
 
-def _cost_model(alg: Algorithm, geom: _Geom, a_key: tuple,
-                b_key: tuple) -> Dict[str, float]:
+def _cost_model(alg: Algorithm, geom: _Geom, a_key: tuple, b_key: tuple,
+                symbolic: Optional["SymbolicProduct"] = None
+                ) -> Dict[str, float]:
     """Per-step wire volume / executed flops of one plan execution.
 
     Reflects what the bodies actually move and execute: the A tile rides in
@@ -738,8 +936,27 @@ def _cost_model(alg: Algorithm, geom: _Geom, a_key: tuple,
     (``_densify_b`` hoists the scatter out of the scanned step); ``wire``
     may name a tile twice (bidirectional schedules) and ``duplex`` credits
     full-duplex links in :func:`_predicted_time`, not here.
+
+    With ``symbolic`` (a sparse-output plan), the model charges what the
+    sparse path actually does instead: B rides in stored block form (never
+    densified), the step executes ``pair_capacity`` block-pair products
+    (padding included), and C is the packed slot array — so sparse-output
+    schedules are scored on their true output traffic, which is what makes
+    ``output="auto"`` flip for hypersparse products.
     """
     g = geom.g
+    if symbolic is not None:
+        bs = symbolic.block_size
+        store_a = a_key[4] + geom.a_nbr
+        store_b = b_key[4] + geom.b_nbr
+        a_bytes = store_a * bs * bs * np.dtype(_key_dtype(a_key)).itemsize
+        b_bytes = store_b * bs * bs * np.dtype(_key_dtype(b_key)).itemsize
+        c_bytes = symbolic.store_capacity * bs * bs \
+            * np.dtype(geom.out_dtype).itemsize
+        flops_step = 2 * symbolic.pair_capacity * bs ** 3
+        tiles = {"a": a_bytes, "b": b_bytes, "c": c_bytes}
+        return _assemble_cost(alg, g, a_bytes, b_bytes, c_bytes, flops_step,
+                              tiles)
     if a_key[0] == "bsr":
         bs, cap = a_key[3], a_key[4]
         store = cap + geom.a_nbr            # pre-augmented stored slots
@@ -754,6 +971,12 @@ def _cost_model(alg: Algorithm, geom: _Geom, a_key: tuple,
     b_bytes = tk_b * geom.tn * np.dtype(_key_dtype(b_key)).itemsize
     c_bytes = geom.tm * geom.tn * np.dtype(geom.out_dtype).itemsize
     tiles = {"a": a_bytes, "b": b_bytes, "c": c_bytes}
+    return _assemble_cost(alg, g, a_bytes, b_bytes, c_bytes, flops_step,
+                          tiles)
+
+
+def _assemble_cost(alg: Algorithm, g: int, a_bytes, b_bytes, c_bytes,
+                   flops_step, tiles) -> Dict[str, float]:
     step_bytes = sum(tiles[t] for t in alg.wire)
     if alg.wire_amortized:
         step_bytes = step_bytes * (g - 1) / g
@@ -804,7 +1027,8 @@ class MatmulPlan:
     def __init__(self, algorithm: Algorithm, geom: _Geom, mesh,
                  a_key: tuple, b_key: tuple, allow_pad: bool = False,
                  requested: Optional[str] = None,
-                 auto_scores: Optional[Dict[str, float]] = None):
+                 auto_scores: Optional[Dict[str, float]] = None,
+                 symbolic: Optional["SymbolicProduct"] = None):
         self.algorithm = algorithm
         self.geom = geom
         self.mesh = mesh
@@ -819,20 +1043,60 @@ class MatmulPlan:
         # plan_matmul).
         self.requested = requested or algorithm.name
         self.auto_scores = auto_scores
+        self.symbolic = symbolic
         self.traces = 0
-        body = algorithm.body
+        specs = (_specs_for_keys(_tree_keys(a_key), geom.axr, geom.axc),
+                 _specs_for_keys(_tree_keys(b_key), geom.axr, geom.axc))
 
-        def fn(a, b):
-            self.traces += 1          # runs at trace time only
-            for hook in list(_TRACE_HOOKS):
-                hook(self)
-            return body(_local_view(a), _local_view(b), geom)
+        if symbolic is None:
+            body = algorithm.body
+
+            def fn(a, b):
+                self.traces += 1          # runs at trace time only
+                for hook in list(_TRACE_HOOKS):
+                    hook(self)
+                return body(_local_view(a), _local_view(b), geom)
+
+            in_specs, out_specs = specs, P(geom.axr, geom.axc)
+        else:
+            # Sparse-output plan: the executable is specialized to the
+            # operands' structures — pair lists (scheduled per the
+            # algorithm's k_order) ride as a third operand tree, only the
+            # block data of A and B is sharded in, and the result is the
+            # packed per-tile slot array wrapped into a DistBSR by
+            # _epilogue_sparse.
+            sparse_body = algorithm.sparse_body
+            sched = symbolic.scheduled_pairs(algorithm.k_order)
+            # Pair lists are plan-lifetime constants; commit them in their
+            # mesh sharding once so repeated calls don't re-transfer them
+            # to every device (measurably dominates small multiplies).
+            pair_sharding = jax.sharding.NamedSharding(
+                mesh, P(geom.axr, geom.axc, None, None))
+            self._pairs = {k: jax.device_put(np.asarray(v, dtype=np.int32),
+                                             pair_sharding)
+                           for k, v in sched.items()}
+            self._c_rows = jnp.asarray(symbolic.c_rows, dtype=jnp.int32)
+            self._c_cols = jnp.asarray(symbolic.c_cols, dtype=jnp.int32)
+            self._c_counts = jnp.asarray(symbolic.c_counts, dtype=jnp.int32)
+
+            def fn(a, b, pairs):
+                self.traces += 1          # runs at trace time only
+                for hook in list(_TRACE_HOOKS):
+                    hook(self)
+                c = sparse_body(_local_view(a), _local_view(b),
+                                _local_view(pairs), geom)
+                return c[None, None]      # restore the (1, 1) grid dims
+
+            blocks_spec = {"blocks": P(geom.axr, geom.axc, None, None, None)}
+            pair_spec = {k: P(geom.axr, geom.axc, None, None)
+                         for k in ("pa", "pb", "ps")}
+            in_specs = (blocks_spec, blocks_spec, pair_spec)
+            out_specs = P(geom.axr, geom.axc, None, None, None)
 
         self._exec = jax.jit(shard_map(
             fn, mesh=mesh,
-            in_specs=(_specs_for_keys(_tree_keys(a_key), geom.axr, geom.axc),
-                      _specs_for_keys(_tree_keys(b_key), geom.axr, geom.axc)),
-            out_specs=P(geom.axr, geom.axc),
+            in_specs=in_specs,
+            out_specs=out_specs,
             # pallas_call's out_shape carries no vma annotation; the engine's
             # collectives are explicit, so skip the varying-axes checker.
             check_vma=False))
@@ -846,7 +1110,12 @@ class MatmulPlan:
             return "spgemm" if b_sparse else "spmm"
         return "dense"
 
-    def __call__(self, a, b) -> jnp.ndarray:
+    @property
+    def output(self) -> str:
+        """"sparse" (returns a DistBSR) or "dense" (returns an array)."""
+        return "dense" if self.symbolic is None else "sparse"
+
+    def __call__(self, a, b):
         a_h, b_h = _coerce_pair(a, b, g=self.geom.g,
                                 allow_pad=self._allow_pad)
         if (a_h.abstract_key(), b_h.abstract_key()) != (self._a_key,
@@ -856,9 +1125,41 @@ class MatmulPlan:
                 f"(plan: {self._a_key} @ {self._b_key}, got "
                 f"{a_h.abstract_key()} @ {b_h.abstract_key()}); build a new "
                 "plan with plan_matmul")
+        if self.symbolic is not None:
+            sym = self.symbolic
+            if (a_h.structure_key(), b_h.structure_key()) != \
+                    (sym.a_fingerprint, sym.b_fingerprint):
+                raise ValueError(
+                    "operands' sparsity structure does not match this "
+                    "sparse-output plan (pair lists are specialized to the "
+                    "structure); build a new plan with plan_matmul")
+            a_tree = {"blocks":
+                      a_h.placed(self.algorithm.a_placement)["blocks"]}
+            b_tree = {"blocks":
+                      b_h.placed(self.algorithm.b_placement)["blocks"]}
+            c_blocks = self._exec(a_tree, b_tree, self._pairs)
+            return self._epilogue_sparse(c_blocks, a_h, b_h)
         c = self._exec(a_h.placed(self.algorithm.a_placement),
                        b_h.placed(self.algorithm.b_placement))
         return self._epilogue(c, a_h, b_h)
+
+    def _epilogue_sparse(self, c_blocks: jnp.ndarray, a_h: DistBSR,
+                         b_h: DistBSR) -> DistBSR:
+        """Wrap the packed numeric result into a DistBSR handle.
+
+        The symbolic layout already satisfies the TiledBSR storage contract
+        (row-sorted, coverage-augmented, uniformly padded), so the handle
+        is immediately usable as an operand of further multiplies — chained
+        A @ A @ A never densifies or re-tiles.
+        """
+        sym = self.symbolic
+        tiled = TiledBSR(
+            blocks=c_blocks, rows=self._c_rows, cols=self._c_cols,
+            counts=self._c_counts, shape=sym.shape,
+            block_size=sym.block_size, grid_shape=(sym.g, sym.g),
+            capacity=sym.capacity,
+            logical_shape=(a_h.logical_shape[0], b_h.logical_shape[1]))
+        return DistBSR(tiled)
 
     def _epilogue(self, c: jnp.ndarray, a_h: DistMatrix,
                   b_h: DistMatrix) -> jnp.ndarray:
@@ -881,6 +1182,14 @@ class MatmulPlan:
             bs = a_h.block_size
             inv = a_h.inv_row_perm()   # cached on the handle
             c = c.reshape(len(perm), bs, -1)[inv].reshape(c.shape)
+        cperm = getattr(b_h, "col_block_perm", None)
+        if cperm:
+            # a cols-balanced RIGHT operand permutes C's column blocks
+            # (C = A (B P) = (A B) P); invert before the crop
+            bs = b_h.block_size
+            inv = b_h.inv_col_perm()
+            c = c.reshape(c.shape[0], len(cperm), bs)[:, inv]
+            c = c.reshape(c.shape[0], -1)
         return c[:a_h.logical_shape[0], :b_h.logical_shape[1]]
 
     # ------------------------------------------------------------- analysis
@@ -894,7 +1203,7 @@ class MatmulPlan:
         ``core/schedule.py``).
         """
         out = _cost_model(self.algorithm, self.geom, self._a_key,
-                          self._b_key)
+                          self._b_key, symbolic=self.symbolic)
         if isinstance(a, DistBSR):
             per_stage, end_to_end = _schedule.stage_imbalance(
                 np.asarray(a.counts, dtype=np.float64))
@@ -924,6 +1233,53 @@ class MatmulPlan:
 # ---------------------------------------------------------------------------
 # Operand coercion + plan cache + public entry points
 # ---------------------------------------------------------------------------
+def _compensate_rhs(b_h: DistMatrix, perm: Tuple[int, ...],
+                    block_size: int) -> DistMatrix:
+    """Undo a cols-balanced left operand on the right operand's row blocks.
+
+    A ``balance="cols"`` left operand stores ``A' = A P`` (column blocks
+    permuted), which permutes the contraction dimension; multiplying by
+    ``B' = P^T B`` (row blocks gathered by the same permutation) restores
+    ``A' B' = A B``, so the output needs no fix-up — the ROADMAP's "invert
+    on B instead".  The compensated handle is cached on the right operand,
+    keyed by the permutation, so repeated plans/calls reuse one transform
+    (and one abstract key).
+    """
+    cache = getattr(b_h, "_col_compensated", None)
+    if cache is None:
+        cache = b_h._col_compensated = {}
+    if getattr(b_h, "_compensated_for", None) == perm:
+        return b_h                       # already the compensated handle
+    got = cache.get(perm)
+    if got is not None:
+        return got
+    perm_arr = np.asarray(perm)
+    if isinstance(b_h, DistDense):
+        data = b_h.data
+        nbr = data.shape[0] // block_size
+        data = data.reshape(nbr, block_size, -1)[jnp.asarray(perm_arr)]
+        new = DistDense(data.reshape(b_h.shape), b_h.g,
+                        logical_shape=b_h.logical_shape)
+    else:
+        # sparse right operand: host-side dense round trip (construction
+        # time, like from_tiled re-balancing), preserving any carried
+        # column permutation of B itself (the epilogue inverts it on C)
+        t = b_h.tiled
+        d = np.asarray(t.to_dense())
+        nbr = d.shape[0] // block_size
+        d = d.reshape(nbr, block_size, -1)[perm_arr].reshape(d.shape)
+        m, n = t.logical_shape or t.shape
+        newt = TiledBSR.from_dense(d, ProcessGrid(*t.grid_shape),
+                                   t.block_size, capacity="bucket",
+                                   dtype=t.dtype)
+        newt = dataclasses.replace(newt, logical_shape=(m, n),
+                                   col_block_perm=t.col_block_perm)
+        new = DistBSR(newt)
+    new._compensated_for = perm          # idempotence marker (re-coercion)
+    cache[perm] = new
+    return new
+
+
 def _coerce_pair(a, b, *, g: Optional[int] = None, allow_pad: bool = False
                  ) -> Tuple[DistMatrix, DistMatrix]:
     if isinstance(a, DistMatrix):
@@ -966,11 +1322,15 @@ def _coerce_pair(a, b, *, g: Optional[int] = None, allow_pad: bool = False
             f"inner (padded) dimensions disagree: A is {a_h.shape}, B is "
             f"{b_h.shape}; build the right operand with "
             "DistDense.for_rhs(b, a) to match A's padding")
+    cperm = getattr(a_h, "col_block_perm", None)
+    if cperm:
+        # cols-balanced left operand: permute B's row blocks to compensate
+        b_h = _compensate_rhs(b_h, cperm, a_h.block_size)
     return a_h, b_h
 
 
 def _geometry(a_h: DistMatrix, b_h: DistMatrix, *, impl: Optional[str],
-              axis_row: str, axis_col: str) -> _Geom:
+              axis_row: str, axis_col: str, c_store: int = 0) -> _Geom:
     a_bsr = isinstance(a_h, DistBSR)
     b_bsr = isinstance(b_h, DistBSR)
     return _Geom(
@@ -979,7 +1339,45 @@ def _geometry(a_h: DistMatrix, b_h: DistMatrix, *, impl: Optional[str],
         b_nbr=(b_h.tile_shape[0] // b_h.block_size) if b_bsr else 0,
         b_nbc=(b_h.tile_shape[1] // b_h.block_size) if b_bsr else 0,
         impl=impl, axr=axis_row, axc=axis_col,
-        out_dtype=jnp.promote_types(a_h.dtype, b_h.dtype))
+        out_dtype=jnp.promote_types(a_h.dtype, b_h.dtype), c_store=c_store)
+
+
+def _symbolic_for(a_h: DistBSR, b_h: DistBSR) -> "SymbolicProduct":
+    """Memoized symbolic phase, keyed on the operands' structures."""
+    key = (a_h.structure_key(), b_h.structure_key())
+    sym = _SYMBOLIC_CACHE.get(key)
+    if sym is None:
+        sym = _symbolic.symbolic_spgemm(a_h.tiled, b_h.tiled)
+        _SYMBOLIC_CACHE[key] = sym
+    return sym
+
+
+def _predicted_density_for(a_h: DistBSR, b_h: DistBSR) -> float:
+    """Memoized structure-only density (the output="auto" decision input)."""
+    key = (a_h.structure_key(), b_h.structure_key())
+    sym = _SYMBOLIC_CACHE.get(key)
+    if sym is not None:
+        return sym.density()
+    d = _DENSITY_CACHE.get(key)
+    if d is None:
+        d = _symbolic.predicted_density(a_h.tiled, b_h.tiled)
+        _DENSITY_CACHE[key] = d
+    return d
+
+
+def _sparse_output_eligible(a_h: DistMatrix, b_h: DistMatrix) -> Optional[str]:
+    """None when output="sparse" can serve these operands, else the reason."""
+    if not (isinstance(a_h, DistBSR) and isinstance(b_h, DistBSR)):
+        return "sparse output needs two block-sparse (DistBSR) operands"
+    if a_h.block_size != b_h.block_size:
+        return (f"sparse output needs equal block sizes, got "
+                f"{a_h.block_size} and {b_h.block_size}")
+    for h, who in ((a_h, "left"), (b_h, "right")):
+        if h.row_block_perm or h.col_block_perm:
+            return (f"sparse output does not support balanced operands "
+                    f"({who} operand carries a balance permutation); "
+                    "rebuild with balance='none'")
+    return None
 
 
 def _mesh_key(mesh):
@@ -993,7 +1391,8 @@ def _mesh_key(mesh):
 def auto_select(a, b, *, machine: Optional["_roofline.Machine"] = None,
                 g: Optional[int] = None, allow_pad: bool = False,
                 axis_row: str = "row", axis_col: str = "col",
-                registry: Optional[AlgorithmRegistry] = None
+                registry: Optional[AlgorithmRegistry] = None,
+                output: str = "dense", _symbolic=None
                 ) -> Tuple[str, Dict[str, float]]:
     """Score every registered schedule for ``a @ b``; pick the cheapest.
 
@@ -1001,26 +1400,50 @@ def auto_select(a, b, *, machine: Optional["_roofline.Machine"] = None,
     predicted seconds (:func:`_predicted_time` on its cost model).  Pure
     planning — no mesh or devices needed, so large grids can be scored on
     a single host.  Ties resolve to registration order.
+
+    ``output="sparse"`` scores only the schedules with a sparse-output
+    body, against the symbolic-phase cost model: B rides in stored block
+    form and C is charged at its *actual* packed size, so the ranking can
+    differ from the dense-output one for the same operands.
     """
     a_h, b_h = _coerce_pair(a, b, g=g, allow_pad=allow_pad)
     machine = machine or _roofline.TPU_V5E
     registry = registry or REGISTRY
+    sym = None
+    candidates = list(registry)
+    if output == "sparse":
+        reason = _sparse_output_eligible(a_h, b_h)
+        if reason:
+            raise ValueError(reason)
+        sym = _symbolic if _symbolic is not None else _symbolic_for(a_h, b_h)
+        candidates = [alg for alg in candidates
+                      if alg.sparse_body is not None]
     geom = _geometry(a_h, b_h, impl=None, axis_row=axis_row,
-                     axis_col=axis_col)
+                     axis_col=axis_col,
+                     c_store=sym.store_capacity if sym else 0)
     a_key, b_key = a_h.abstract_key(), b_h.abstract_key()
-    scores = {alg.name: _predicted_time(_cost_model(alg, geom, a_key, b_key),
-                                        alg, machine)
-              for alg in registry}
+    scores = {alg.name: _predicted_time(
+        _cost_model(alg, geom, a_key, b_key, symbolic=sym), alg, machine)
+        for alg in candidates}
     if not scores:
-        raise ValueError("no algorithms registered")
+        raise ValueError("no algorithms registered" if output != "sparse"
+                         else "no sparse-output algorithms registered")
     return min(scores, key=scores.get), scores
+
+
+# output="auto" emits a sparse DistBSR when the symbolic phase predicts C's
+# block density at or below this threshold; above it, the packed form loses
+# its footprint advantage and scatter overhead dominates the dense MXU path.
+SPARSE_OUTPUT_DENSITY_THRESHOLD = 0.25
 
 
 def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
                 impl: Optional[str] = None, g: Optional[int] = None,
                 axis_row: str = "row", axis_col: str = "col",
                 allow_pad: bool = False, cache: bool = True,
-                machine: Optional["_roofline.Machine"] = None) -> MatmulPlan:
+                machine: Optional["_roofline.Machine"] = None,
+                output: str = "dense",
+                sparse_threshold: Optional[float] = None) -> MatmulPlan:
     """Build (or fetch from the shared cache) a plan for ``a @ b``.
 
     ``a`` / ``b`` may be :class:`DistMatrix` handles (preferred — placement
@@ -1032,18 +1455,55 @@ def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
     :func:`auto_select` (against ``machine``, default TPU v5e) and builds
     the min-predicted-cost one; the choice and all candidate scores are
     recorded on the plan (``plan.requested``, ``plan.auto_scores``).
+
+    ``output`` selects the SpGEMM output representation: ``"dense"`` (the
+    default — the plan returns a cropped dense array), ``"sparse"`` (two
+    DistBSR operands only; the symbolic phase predicts C's block structure,
+    the numeric phase accumulates straight into packed blocks, and the plan
+    returns a :class:`DistBSR` that chains into further multiplies without
+    a densify/re-tile round trip), or ``"auto"`` (sparse when the predicted
+    output block density is at or below ``sparse_threshold``, default
+    :data:`SPARSE_OUTPUT_DENSITY_THRESHOLD`).  Sparse-output plans are
+    specialized to the operands' sparsity *structure* (not values), which
+    joins the cache key.
     """
     a_h, b_h = _coerce_pair(a, b, g=g, allow_pad=allow_pad)
+    if output not in ("dense", "sparse", "auto"):
+        raise ValueError(f"unknown output {output!r}; one of "
+                         "('dense', 'sparse', 'auto')")
+    if output == "sparse":
+        reason = _sparse_output_eligible(a_h, b_h)
+        if reason:
+            raise ValueError(reason)
+    elif output == "auto":
+        if sparse_threshold is None:
+            sparse_threshold = SPARSE_OUTPUT_DENSITY_THRESHOLD
+        alg_can_sparse = algorithm == "auto" or \
+            REGISTRY.get(algorithm).sparse_body is not None
+        if alg_can_sparse and _sparse_output_eligible(a_h, b_h) is None \
+                and _predicted_density_for(a_h, b_h) <= sparse_threshold:
+            output = "sparse"
+        else:
+            output = "dense"
     requested = algorithm
     auto_scores = None
+    sym = _symbolic_for(a_h, b_h) if output == "sparse" else None
     if algorithm == "auto":
         algorithm, auto_scores = auto_select(
             a_h, b_h, machine=machine, axis_row=axis_row, axis_col=axis_col,
-            allow_pad=allow_pad)
+            allow_pad=allow_pad, output=output, _symbolic=sym)
     alg = REGISTRY.get(algorithm)
+    if sym is not None and alg.sparse_body is None:
+        raise ValueError(
+            f"algorithm {algorithm!r} has no sparse-output body; one of "
+            f"{sparse_algorithms()} (or use output='dense')")
     mesh = _prep_mesh(mesh, a_h.g, axis_row, axis_col)
     key = (alg.name, impl, axis_row, axis_col, allow_pad, _mesh_key(mesh),
            a_h.abstract_key(), b_h.abstract_key())
+    if sym is not None:
+        # pair lists are baked into the executable, so the structure is
+        # part of the plan's identity, not just its abstract shapes
+        key += ("sparse", a_h.structure_key(), b_h.structure_key())
     if cache:
         plan = _PLAN_CACHE.get(key)
         if plan is not None:
@@ -1051,10 +1511,12 @@ def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
                 plan.auto_scores = auto_scores   # record for introspection
             return plan
     plan = MatmulPlan(alg, _geometry(a_h, b_h, impl=impl, axis_row=axis_row,
-                                     axis_col=axis_col),
+                                     axis_col=axis_col,
+                                     c_store=sym.store_capacity if sym
+                                     else 0),
                       mesh, a_h.abstract_key(), b_h.abstract_key(),
                       allow_pad=allow_pad, requested=requested,
-                      auto_scores=auto_scores)
+                      auto_scores=auto_scores, symbolic=sym)
     if cache:
         _PLAN_CACHE[key] = plan
     return plan
@@ -1064,17 +1526,22 @@ def matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
            impl: Optional[str] = None, g: Optional[int] = None,
            axis_row: str = "row", axis_col: str = "col",
            allow_pad: bool = False,
-           machine: Optional["_roofline.Machine"] = None) -> jnp.ndarray:
+           machine: Optional["_roofline.Machine"] = None,
+           output: str = "dense",
+           sparse_threshold: Optional[float] = None):
     """Polymorphic distributed ``a @ b``.
 
     Dispatches sparse x dense -> SpMM, sparse x sparse -> SpGEMM, and
     dense x dense -> the dense engine, all through the shared plan cache:
     repeated calls with the same abstract shapes never re-trace.
-    ``algorithm="auto"`` cost-model-selects the schedule (see
-    :func:`plan_matmul`).
+    ``algorithm="auto"`` cost-model-selects the schedule and
+    ``output="sparse"|"auto"`` returns a :class:`DistBSR` for sparse
+    products, so chained multiplies ``matmul(matmul(a, a), a)`` stay packed
+    end to end (see :func:`plan_matmul`).
     """
     a_h, b_h = _coerce_pair(a, b, g=g, allow_pad=allow_pad)
     plan = plan_matmul(a_h, b_h, algorithm=algorithm, mesh=mesh, impl=impl,
                        axis_row=axis_row, axis_col=axis_col,
-                       allow_pad=allow_pad, machine=machine)
+                       allow_pad=allow_pad, machine=machine, output=output,
+                       sparse_threshold=sparse_threshold)
     return plan(a_h, b_h)

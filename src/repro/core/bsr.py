@@ -46,7 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .grid import ProcessGrid, ceil_div, pad_to_multiple
+from .grid import ProcessGrid, bucket_capacity, ceil_div, pad_to_multiple
 
 __all__ = ["BSR", "TiledBSR", "rmat_edges", "rmat_matrix", "random_sparse"]
 
@@ -226,7 +226,7 @@ def _augment_tile(blocks: np.ndarray, rows: np.ndarray, cols: np.ndarray,
     jax.tree_util.register_dataclass,
     data_fields=["blocks", "rows", "cols", "counts"],
     meta_fields=["shape", "block_size", "grid_shape", "capacity",
-                 "logical_shape", "row_block_perm"],
+                 "logical_shape", "row_block_perm", "col_block_perm"],
 )
 @dataclasses.dataclass
 class TiledBSR:
@@ -248,6 +248,12 @@ class TiledBSR:
     the *global* row blocks applied before tiling (``balance="rows"``):
     position ``t`` holds original row block ``row_block_perm[t]``.  The plan
     epilogue inverts it on the output, so results match unbalanced plans.
+    ``col_block_perm`` is the column-axis analogue (``balance="cols"``):
+    position ``t`` holds original column block ``col_block_perm[t]``.  A
+    column permutation of the *left* operand permutes the contraction
+    dimension, so the planner compensates by permuting the right operand's
+    row blocks before the multiply; on the *right* operand the output's
+    column blocks inherit the permutation and the epilogue inverts it.
     """
 
     blocks: jnp.ndarray
@@ -260,6 +266,7 @@ class TiledBSR:
     capacity: int
     logical_shape: Optional[Tuple[int, int]] = None
     row_block_perm: Optional[Tuple[int, ...]] = None
+    col_block_perm: Optional[Tuple[int, ...]] = None
 
     @property
     def tile_shape(self) -> Tuple[int, int]:
@@ -277,11 +284,26 @@ class TiledBSR:
 
     @classmethod
     def from_dense(cls, dense, grid: ProcessGrid, block_size: int,
-                   capacity: Optional[int] = None, dtype=None,
+                   capacity=None, dtype=None,
                    balance: str = "none") -> "TiledBSR":
-        if balance not in ("none", "rows"):
-            raise ValueError(
-                f"unknown balance {balance!r}; one of ('none', 'rows')")
+        """Tile a dense array into uniformly-padded BSR tiles.
+
+        ``capacity`` is the uniform real-block capacity: an int pins it,
+        ``None`` derives the minimum (max tile nnzb), and ``"bucket"``
+        derives the minimum and rounds it up to the next 1.25x bucket
+        (:func:`repro.core.grid.bucket_capacity`) so near-identical
+        sparsity patterns share abstract shapes — and therefore cached,
+        jitted plans.
+
+        ``balance`` permutes global row blocks (``"rows"``), column blocks
+        (``"cols"``) or whichever axis shrinks the capacity most
+        (``"auto"``) before tiling; the permutation is carried as
+        ``row_block_perm`` / ``col_block_perm`` and undone by the planner.
+        An axis is only kept when it *strictly* shrinks the capacity.
+        """
+        if balance not in ("none", "rows", "cols", "auto"):
+            raise ValueError(f"unknown balance {balance!r}; one of "
+                             "('none', 'rows', 'cols', 'auto')")
         dense = np.asarray(dense)
         m, n = dense.shape
         tm = pad_to_multiple(ceil_div(m, grid.rows), block_size)
@@ -289,32 +311,50 @@ class TiledBSR:
         mp, np_ = tm * grid.rows, tn * grid.cols
         padded = np.zeros((mp, np_), dtype=dense.dtype)
         padded[:m, :n] = dense
-        perm = None
-        if balance == "rows":
+        perm = col_perm = None
+        if balance != "none":
             from .schedule import balance_row_perm
             nbr_global = mp // block_size
             nbc_global = np_ // block_size
             mask = np.abs(
                 padded.reshape(nbr_global, block_size, nbc_global,
                                block_size)).sum(axis=(1, 3)) != 0
-            perm = balance_row_perm(mask.sum(axis=1), grid.rows)
 
             def tile_cap(m):
                 per_tile = m.reshape(grid.rows, nbr_global // grid.rows,
                                      grid.cols, nbc_global // grid.cols)
                 return int(per_tile.sum(axis=(1, 3)).max())
 
-            # balance_row_perm equalizes grid-ROW totals; the uniform
-            # capacity is the per-TILE max, which a row permutation can
-            # occasionally worsen (column mass re-concentrating in one
-            # tile).  Fall back to the identity layout whenever balancing
-            # does not strictly shrink the capacity.
-            if tile_cap(mask[np.asarray(perm)]) < tile_cap(mask):
+            # balance_row_perm equalizes grid-ROW (or grid-COL) totals; the
+            # uniform capacity is the per-TILE max, which a permutation can
+            # occasionally worsen (mass re-concentrating in one tile).
+            # Keep an axis only when it strictly shrinks the capacity;
+            # "auto" takes the axis with the larger shrink (rows on ties).
+            best_cap = tile_cap(mask)
+            best_axis = None
+            if balance in ("rows", "auto"):
+                p = balance_row_perm(mask.sum(axis=1), grid.rows)
+                c = tile_cap(mask[np.asarray(p)])
+                if c < best_cap:
+                    best_axis, best_cap, perm = "rows", c, p
+            if balance in ("cols", "auto"):
+                p = balance_row_perm(mask.sum(axis=0), grid.cols)
+                c = tile_cap(mask[:, np.asarray(p)])
+                if c < best_cap:
+                    best_axis, best_cap, col_perm = "cols", c, p
+            if best_axis == "rows":
+                col_perm = None
                 padded = padded.reshape(nbr_global, block_size, np_)[perm]
                 padded = padded.reshape(mp, np_)
                 perm = tuple(int(p) for p in perm)
-            else:
+            elif best_axis == "cols":
                 perm = None
+                padded = padded.reshape(mp, nbc_global,
+                                        block_size)[:, col_perm]
+                padded = padded.reshape(mp, np_)
+                col_perm = tuple(int(p) for p in col_perm)
+            else:
+                perm = col_perm = None
         tiles = []
         for i in range(grid.rows):
             row = []
@@ -324,10 +364,13 @@ class TiledBSR:
                     block_size, dtype=dtype))
             tiles.append(row)
         max_nnzb = max(max(t.nnzb for t in row) for row in tiles)
-        if capacity is not None and capacity < max_nnzb:
-            raise ValueError(
-                f"capacity {capacity} < max tile nnzb {max_nnzb}")
-        cap = max(capacity if capacity is not None else max_nnzb, 1)
+        if capacity == "bucket":
+            cap = bucket_capacity(max(max_nnzb, 1))
+        else:
+            if capacity is not None and capacity < max_nnzb:
+                raise ValueError(
+                    f"capacity {capacity} < max tile nnzb {max_nnzb}")
+            cap = max(capacity if capacity is not None else max_nnzb, 1)
         tile_nbr = tm // block_size
         aug = [[_augment_tile(np.asarray(t.blocks), np.asarray(t.rows),
                               np.asarray(t.cols), tile_nbr)
@@ -344,7 +387,8 @@ class TiledBSR:
         return cls(blocks=blocks, rows=rows_, cols=cols_, counts=counts,
                    shape=(mp, np_), block_size=block_size,
                    grid_shape=(grid.rows, grid.cols), capacity=cap,
-                   logical_shape=(m, n), row_block_perm=perm)
+                   logical_shape=(m, n), row_block_perm=perm,
+                   col_block_perm=col_perm)
 
     def to_dense(self) -> jnp.ndarray:
         gr, gc = self.grid_shape

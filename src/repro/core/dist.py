@@ -93,7 +93,8 @@ def skew_bsr(a: TiledBSR, kind: str) -> TiledBSR:
         blocks=take(a.blocks), rows=take(a.rows), cols=take(a.cols),
         counts=take(a.counts), shape=a.shape, block_size=a.block_size,
         grid_shape=a.grid_shape, capacity=a.capacity,
-        logical_shape=a.logical_shape, row_block_perm=a.row_block_perm)
+        logical_shape=a.logical_shape, row_block_perm=a.row_block_perm,
+        col_block_perm=a.col_block_perm)
 
 
 def place_b_for_stationary_a(b: jnp.ndarray, g: int) -> jnp.ndarray:

@@ -15,7 +15,7 @@ from typing import Tuple
 
 import numpy as np
 
-__all__ = ["ProcessGrid", "ceil_div", "pad_to_multiple"]
+__all__ = ["ProcessGrid", "ceil_div", "pad_to_multiple", "bucket_capacity"]
 
 
 def ceil_div(a: int, b: int) -> int:
@@ -24,6 +24,25 @@ def ceil_div(a: int, b: int) -> int:
 
 def pad_to_multiple(x: int, mult: int) -> int:
     return ceil_div(x, mult) * mult
+
+
+def bucket_capacity(c: int, ratio: float = 1.25) -> int:
+    """Round a block capacity up to the next 1.25x geometric bucket.
+
+    Plans are keyed on exact capacities, so two matrices with nearly equal
+    sparsity (say max tile nnzb 146 vs 150) would otherwise compile two
+    identical executables.  Rounding capacities up to a shared bucket at
+    handle construction makes their abstract shapes — and therefore their
+    cached plans — coincide, at the cost of at most ``ratio - 1`` extra
+    padding.  The bucket series is deterministic: 1, 2, 3, 4, 5, 7, 9, ...
+    (each bucket is ``max(prev + 1, ceil(prev * ratio))``).
+    """
+    if c < 0:
+        raise ValueError(f"capacity must be non-negative, got {c}")
+    b = 1
+    while b < c:
+        b = max(b + 1, math.ceil(b * ratio))
+    return b
 
 
 @dataclasses.dataclass(frozen=True)

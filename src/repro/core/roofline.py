@@ -17,11 +17,13 @@ compiled dry-runs.
 from __future__ import annotations
 
 import dataclasses
+import json
 import math
 from typing import Dict
 
 __all__ = [
     "Machine", "SUMMIT_V100", "DGX2_V100", "TPU_V5E",
+    "save_machine", "load_machine",
     "spmm_local_ai", "spmm_internode_ai", "spgemm_local_ai",
     "spgemm_internode_ai", "local_peak", "internode_roofline",
     "spmm_model", "spgemm_model",
@@ -45,6 +47,23 @@ SUMMIT_V100 = Machine("summit-v100", 16e12, 900e9, 3.83e9, 4)
 DGX2_V100 = Machine("dgx2-v100", 16e12, 900e9, 50e9, 4)
 # Harness constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
 TPU_V5E = Machine("tpu-v5e", 197e12, 819e9, 50e9, 2)
+
+
+def save_machine(m: Machine, path: str) -> None:
+    """Persist a Machine preset as JSON (see ``tools/fit_machine.py``)."""
+    with open(path, "w") as f:
+        json.dump(dataclasses.asdict(m), f, indent=1)
+        f.write("\n")
+
+
+def load_machine(path: str) -> Machine:
+    """Load a Machine preset saved by :func:`save_machine`.
+
+    Feed the result to ``plan_matmul(machine=...)`` / ``auto_select`` so
+    auto-scheduling tracks a *fitted* machine instead of nominal constants.
+    """
+    with open(path) as f:
+        return Machine(**json.load(f))
 
 
 # ---------------------------------------------------------------------------

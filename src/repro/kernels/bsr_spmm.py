@@ -8,11 +8,15 @@ innermost, so revisits of an output block are consecutive and accumulate in
 VMEM (classic grouped-matmul pattern); double-buffering of the streamed A
 blocks and B column panels is done by the Pallas pipeline automatically.
 
-Two kernels:
+Three kernels:
 
 * :func:`bsr_spmm_pallas`       — SpMM: BSR(A) @ dense(B).
 * :func:`bsr_pair_matmul_pallas`— SpGEMM inner: pre-matched A/B block pairs
   accumulated into a dense C tile (host-known sparsity structure).
+* :func:`bsr_pair_accumulate_pallas` — sparse-output SpGEMM inner: the same
+  pre-matched pairs accumulated into *packed* output block slots (the
+  symbolic phase's capacity-bounded layout), never materializing a dense C
+  tile.
 """
 from __future__ import annotations
 
@@ -23,7 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["bsr_spmm_pallas", "bsr_pair_matmul_pallas"]
+__all__ = ["bsr_spmm_pallas", "bsr_pair_matmul_pallas",
+           "bsr_pair_accumulate_pallas"]
 
 
 # ---------------------------------------------------------------------------
@@ -135,3 +140,55 @@ def bsr_pair_matmul_pallas(a_blocks, b_blocks, pair_a, pair_b, pair_rows,
         interpret=interpret,
     )(pair_a, pair_b, pair_rows, pair_cols, a_blocks, b_blocks)
     return out.astype(jnp.promote_types(a_blocks.dtype, b_blocks.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Sparse-output SpGEMM inner: C_blocks[ps[s]] += A_blocks[pa[s]] @ B_blocks[pb[s]]
+# ---------------------------------------------------------------------------
+def _pair_acc_kernel(pa_ref, pb_ref, ps_ref, a_ref, b_ref, c_ref):
+    s = pl.program_id(0)
+    prev = ps_ref[jnp.maximum(s - 1, 0)]
+    is_first = jnp.logical_or(s == 0, ps_ref[s] != prev)
+
+    @pl.when(is_first)
+    def _zero():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    c_ref[...] += jnp.dot(a_ref[0], b_ref[0],
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_slots", "interpret"),
+)
+def bsr_pair_accumulate_pallas(a_blocks, b_blocks, pair_a, pair_b, pair_slot,
+                               *, n_slots: int, interpret: bool = False):
+    """Packed C blocks from pre-matched sparse block pairs.
+
+    pair_slot : i32[P] — output slot per pair, NONDECREASING; every slot in
+                ``[0, n_slots)`` must appear at least once (the symbolic
+                phase emits one coverage pair per slot), because an output
+                block is zeroed on its first visit only.
+    Padding pairs must reference zero blocks and repeat the final slot.
+    Returns f32[n_slots, bs, bs]; the caller casts to the output dtype.
+    """
+    npairs = pair_a.shape[0]
+    bs = a_blocks.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,        # pair_a, pair_b, pair_slot
+        grid=(npairs,),
+        in_specs=[
+            pl.BlockSpec((1, bs, bs), lambda s, pa, pb, ps: (pa[s], 0, 0)),
+            pl.BlockSpec((1, bs, bs), lambda s, pa, pb, ps: (pb[s], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bs),
+                               lambda s, pa, pb, ps: (ps[s], 0, 0)),
+    )
+    return pl.pallas_call(
+        _pair_acc_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_slots, bs, bs), jnp.float32),
+        interpret=interpret,
+    )(pair_a, pair_b, pair_slot, a_blocks, b_blocks)

@@ -16,11 +16,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref as _ref
-from .bsr_spmm import bsr_pair_matmul_pallas, bsr_spmm_pallas
+from .bsr_spmm import (bsr_pair_accumulate_pallas, bsr_pair_matmul_pallas,
+                       bsr_spmm_pallas)
 
 __all__ = [
-    "default_impl", "bsr_spmm", "bsr_spmm_raw", "build_pair_lists",
-    "bsr_pair_matmul", "densify",
+    "default_impl", "bsr_spmm", "bsr_spmm_raw", "match_block_pairs",
+    "build_pair_lists", "bsr_pair_matmul", "bsr_pair_accumulate", "densify",
 ]
 
 
@@ -87,6 +88,31 @@ def bsr_spmm(a_bsr, dense, *, impl: Optional[str] = None, block_n: int = 256):
 # ---------------------------------------------------------------------------
 # SpGEMM (host-known structure): pair-list construction + kernel
 # ---------------------------------------------------------------------------
+def match_block_pairs(a_cols, b_rows):
+    """Vectorized sort-merge join on ``a_cols[i] == b_rows[j]`` (host numpy).
+
+    The core of the SpGEMM symbolic phase: every (A block, B block) pair
+    whose product contributes to C.  Returns ``(ai, bj)`` index arrays into
+    the given lists; within one A block, matched B blocks keep their
+    original order (the stable argsort), matching the insertion order of
+    the legacy dict-of-lists construction.  Shared by
+    :func:`build_pair_lists` (dense-tile SpGEMM) and
+    ``repro.core.symbolic`` (distributed sparse-output SpGEMM).
+    """
+    a_cols = np.asarray(a_cols, dtype=np.int64)
+    b_rows = np.asarray(b_rows, dtype=np.int64)
+    b_order = np.argsort(b_rows, kind="stable")
+    b_rows_sorted = b_rows[b_order]
+    starts = np.searchsorted(b_rows_sorted, a_cols, side="left")
+    ends = np.searchsorted(b_rows_sorted, a_cols, side="right")
+    deg = ends - starts
+    ai = np.repeat(np.arange(len(a_cols), dtype=np.int64), deg)
+    offs = np.arange(deg.sum(), dtype=np.int64) - np.repeat(
+        np.cumsum(deg) - deg, deg)
+    bj = b_order[np.repeat(starts, deg) + offs]
+    return ai, bj
+
+
 def build_pair_lists(a_rows, a_cols, a_nnzb: int, b_rows, b_cols, b_nnzb: int,
                      n_block_rows: int, n_block_cols: int,
                      capacity: Optional[int] = None
@@ -108,18 +134,8 @@ def build_pair_lists(a_rows, a_cols, a_nnzb: int, b_rows, b_cols, b_nnzb: int,
     b_cols = np.asarray(b_cols)[:b_nnzb].astype(np.int64)
     # Vectorized sort-merge join on a_cols == b_rows (replaces the python
     # dict-of-lists construction; ~11x faster at 5k stored blocks, growing
-    # with the pair count — see benchmarks/kernels_bench.py).  The stable
-    # argsort keeps B blocks in original order within each block-row,
-    # matching the insertion order of the old dict version.
-    b_order = np.argsort(b_rows, kind="stable")
-    b_rows_sorted = b_rows[b_order]
-    starts = np.searchsorted(b_rows_sorted, a_cols, side="left")
-    ends = np.searchsorted(b_rows_sorted, a_cols, side="right")
-    deg = ends - starts
-    ai = np.repeat(np.arange(a_nnzb, dtype=np.int64), deg)
-    offs = np.arange(deg.sum(), dtype=np.int64) - np.repeat(
-        np.cumsum(deg) - deg, deg)
-    bj = b_order[np.repeat(starts, deg) + offs]
+    # with the pair count — see benchmarks/kernels_bench.py).
+    ai, bj = match_block_pairs(a_cols, b_rows)
     rows = a_rows[ai]
     cols = b_cols[bj]
     # Coverage: dummy pairs (referencing the appended zero slots) for output
@@ -169,6 +185,32 @@ def bsr_pair_matmul(a_blocks, b_blocks, pair_a, pair_b, pair_rows, pair_cols,
         a_ext, b_ext, pair_a, pair_b, pair_rows, pair_cols,
         n_block_rows=n_block_rows, n_block_cols=n_block_cols,
         interpret=(impl == "interpret"))
+
+
+def bsr_pair_accumulate(a_blocks, b_blocks, pair_a, pair_b, pair_slot, *,
+                        n_slots: int, out_dtype=None,
+                        impl: Optional[str] = None):
+    """Packed C blocks from matched pairs — the sparse-output SpGEMM inner.
+
+    Unlike :func:`bsr_pair_matmul`, products accumulate into a flat
+    ``[n_slots, bs, bs]`` slot array (the symbolic phase's capacity-bounded
+    output layout) instead of a dense C tile.  Contract (established by
+    ``repro.core.symbolic``): ``pair_slot`` is nondecreasing, every slot is
+    visited at least once (coverage pairs), and dummy pairs reference zero
+    blocks.  No zero slot is appended here — the operand tiles' own zero
+    (coverage) blocks serve as the dummy targets, keeping the scanned ring
+    step concat-free.
+    """
+    impl = _resolve(impl)
+    out_dtype = out_dtype or jnp.promote_types(a_blocks.dtype, b_blocks.dtype)
+    if impl == "ref":
+        out = _ref.bsr_pair_accumulate_raw_ref(
+            a_blocks, b_blocks, pair_a, pair_b, pair_slot, n_slots)
+    else:
+        out = bsr_pair_accumulate_pallas(
+            a_blocks, b_blocks, pair_a, pair_b, pair_slot, n_slots=n_slots,
+            interpret=(impl == "interpret"))
+    return out.astype(out_dtype)
 
 
 def densify(blocks, rows, cols, *, n_block_rows: int, n_block_cols: int):

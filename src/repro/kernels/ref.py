@@ -12,6 +12,7 @@ __all__ = [
     "bsr_spmm_ref",
     "bsr_spmm_raw_ref",
     "bsr_pair_matmul_raw_ref",
+    "bsr_pair_accumulate_raw_ref",
     "densify_raw",
 ]
 
@@ -63,6 +64,27 @@ def bsr_pair_matmul_raw_ref(a_blocks, b_blocks, pair_a, pair_b, pair_rows,
     out = out.transpose(0, 2, 1, 3).reshape(n_block_rows * bs, n_block_cols * bs)
     out_dtype = out_dtype or jnp.promote_types(a_blocks.dtype, b_blocks.dtype)
     return out.astype(out_dtype)
+
+
+def bsr_pair_accumulate_raw_ref(a_blocks, b_blocks, pair_a, pair_b,
+                                pair_slot, n_slots: int):
+    """Sparse x sparse block-pair products, accumulated into PACKED blocks.
+
+    The sparse-output sibling of :func:`bsr_pair_matmul_raw_ref`: instead
+    of scattering into a dense ``(nbr, nbc)`` block grid, products land in
+    a flat slot array of length ``n_slots`` — the symbolic phase's
+    capacity-bounded output layout.  ``pair_slot`` must be nondecreasing
+    and pairs referencing zero blocks must be inert (both guaranteed by
+    ``repro.core.symbolic``).  Returns f32[n_slots, bs, bs]; the caller
+    casts to the output dtype.
+    """
+    prods = jnp.einsum(
+        "kab,kbc->kac", a_blocks[pair_a], b_blocks[pair_b],
+        preferred_element_type=jnp.float32)                        # [P, bs, bs]
+    # pair_slot is nondecreasing by contract: a sorted segment reduction
+    # beats a general scatter-add on CPU/GPU backends
+    return jax.ops.segment_sum(prods, pair_slot, num_segments=n_slots,
+                               indices_are_sorted=True)
 
 
 def densify_raw(blocks, rows, cols, n_block_rows: int, n_block_cols: int):

@@ -24,8 +24,9 @@ def _parse():
     p = argparse.ArgumentParser()
     p.add_argument("--devices", type=int, default=4)
     p.add_argument("--check", default="all",
-                   choices=["all", "spmm", "spgemm", "dense", "api",
-                            "balance", "moe", "train_parallel"])
+                   choices=["all", "spmm", "spgemm", "spgemm_sparse",
+                            "dense", "api", "balance", "moe",
+                            "train_parallel"])
     p.add_argument("--seed", type=int, default=0)
     return p.parse_args()
 
@@ -44,8 +45,8 @@ def main() -> int:
     from repro.core.bsr import random_sparse
     from repro.core.dist import make_grid_mesh
 
-    needs_grid = args.check in ("all", "dense", "spmm", "spgemm", "api",
-                                "balance")
+    needs_grid = args.check in ("all", "dense", "spmm", "spgemm",
+                                "spgemm_sparse", "api", "balance")
     g = int(np.sqrt(args.devices))
     mesh = None
     if needs_grid:
@@ -102,6 +103,33 @@ def main() -> int:
         for alg in api.algorithms():
             got = api.matmul(a_h, b_h, mesh=mesh, algorithm=alg, impl="ref")
             check(f"spgemm/{alg}", got, want)
+
+    if args.check in ("all", "spgemm_sparse"):
+        print(f"== sparse-output spgemm on {g}x{g} mesh ==")
+        a_d = random_sparse(32, 32, 0.15, seed=args.seed + 4)
+        b_d = random_sparse(32, 32, 0.2, seed=args.seed + 5)
+        a_h = DistBSR.from_dense(a_d, g=g, block_size=4)
+        b_h = DistBSR.from_dense(b_d, g=g, block_size=4)
+        want = a_d @ b_d
+        for alg in api.sparse_algorithms():
+            c = api.matmul(a_h, b_h, mesh=mesh, algorithm=alg, impl="ref",
+                           output="sparse")
+            check(f"spgemm_sparse/{alg}", c.densify(), want)
+        check_flag("spgemm_sparse/returns_handle",
+                   isinstance(api.matmul(a_h, b_h, mesh=mesh,
+                                         algorithm="ring_c", impl="ref",
+                                         output="sparse"), DistBSR))
+        # chained cube stays packed: the product handle is the operand
+        c2 = api.matmul(a_h, a_h, mesh=mesh, algorithm="ring_c", impl="ref",
+                        output="sparse")
+        c3 = api.matmul(c2, a_h, mesh=mesh, algorithm="ring_c", impl="ref",
+                        output="sparse")
+        check("spgemm_sparse/chain_cube", c3.densify(), a_d @ a_d @ a_d,
+              tol=1e-3)
+        # Pallas interpret path through the packed ring
+        c_i = api.matmul(a_h, b_h, mesh=mesh, algorithm="ring_c",
+                         impl="interpret", output="sparse")
+        check("spgemm_sparse/ring_c[interpret]", c_i.densify(), want)
 
     if args.check in ("all", "balance"):
         print(f"== balanced tiling + auto-scheduling on {g}x{g} mesh ==")

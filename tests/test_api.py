@@ -615,3 +615,131 @@ def test_check_api_flags_kernel_bypass(tmp_path):
     assert len(found) == 2
     assert any("bad1.py" in f for f in found)
     assert any("bad2.py" in f for f in found)
+
+
+# ---------------------------------------------------------------------------
+# Column balance (balance="cols"): B-side compensation + epilogue inversion
+# ---------------------------------------------------------------------------
+def _manual_cols_balanced_handle(d, block_size, seed=0):
+    """A DistBSR carrying an explicit column-block permutation (the 1x1
+    analogue of balance="cols"; see _manual_balanced_handle)."""
+    import dataclasses
+    nbc = d.shape[1] // block_size
+    perm = np.random.default_rng(seed).permutation(nbc)
+    dp = d.reshape(d.shape[0], nbc, block_size)[:, perm].reshape(d.shape)
+    t = TiledBSR.from_dense(dp, ProcessGrid(1, 1), block_size)
+    t = dataclasses.replace(t, col_block_perm=tuple(int(p) for p in perm))
+    return DistBSR.from_tiled(t)
+
+
+def test_balance_cols_shrinks_capacity_on_col_skew():
+    d = _skewed_rmat().T.copy()              # hubs in columns
+    none = TiledBSR.from_dense(d, ProcessGrid(4, 4), block_size=8)
+    cols = TiledBSR.from_dense(d, ProcessGrid(4, 4), block_size=8,
+                               balance="cols")
+    assert cols.capacity < none.capacity
+    assert cols.col_block_perm is not None and cols.row_block_perm is None
+    # the balanced matrix is a pure column-block permutation of the original
+    inv = np.argsort(np.asarray(cols.col_block_perm))
+    back = np.asarray(cols.to_dense()).reshape(d.shape[0], -1, 8)[:, inv]
+    np.testing.assert_array_equal(back.reshape(d.shape), d)
+
+
+def test_balance_auto_picks_the_shrinking_axis():
+    """Deterministically skewed inputs: all mass in a few row blocks ->
+    auto picks rows; transposed -> cols; uniform -> identity."""
+    d = np.zeros((64, 64), np.float32)
+    d[:16, :] = 1.0                          # grid row 0 owns everything
+    grid = ProcessGrid(4, 4)
+    rowy = TiledBSR.from_dense(d, grid, 4, balance="auto")
+    assert rowy.row_block_perm is not None and rowy.col_block_perm is None
+    coly = TiledBSR.from_dense(d.T.copy(), grid, 4, balance="auto")
+    assert coly.col_block_perm is not None and coly.row_block_perm is None
+    uniform = TiledBSR.from_dense(np.ones((64, 64), np.float32), grid, 4,
+                                  balance="auto")
+    assert uniform.row_block_perm is None and uniform.col_block_perm is None
+
+
+@pytest.mark.parametrize("alg", ["ring_c", "ring_a", "summa_bcast"])
+def test_cols_balanced_left_operand_compensated(alg):
+    """C = (A P)(P^T B) = A B: the planner permutes B's row blocks instead
+    of touching the output (the ROADMAP's 'invert on B')."""
+    d = _skewed_rmat()
+    b = np.random.default_rng(4).standard_normal((256, 16)).astype(
+        np.float32)
+    h = _manual_cols_balanced_handle(d, 8)
+    assert list(h.col_block_perm) != sorted(h.col_block_perm)
+    got = np.asarray(matmul(h, jnp.asarray(b), algorithm=alg, impl="ref"))
+    np.testing.assert_allclose(got, d @ b, atol=1e-3)
+
+
+def test_cols_balanced_left_with_sparse_rhs(operands):
+    a_d, _, b_sp, _, _, b_sph = operands
+    a_bal = _manual_cols_balanced_handle(a_d, 4)
+    got = np.asarray(matmul(a_bal, b_sph, algorithm="ring_c", impl="ref"))
+    np.testing.assert_allclose(got, a_d @ b_sp, atol=1e-4)
+
+
+def test_cols_balanced_right_operand_inverted_on_output(operands):
+    """A cols-balanced RIGHT operand permutes C's column blocks; the
+    shared epilogue inverts them before the crop."""
+    a_d, _, b_sp, a_h, _, _ = operands
+    b_bal = _manual_cols_balanced_handle(b_sp, 4)
+    got = np.asarray(matmul(a_h, b_bal, algorithm="ring_c", impl="ref"))
+    np.testing.assert_allclose(got, a_d @ b_sp, atol=1e-4)
+
+
+def test_cols_balance_compensation_cached(operands):
+    """The compensated right operand is materialized once per (handle,
+    permutation), like placement states."""
+    a_d, _, _, _, b_h, _ = operands
+    a_bal = _manual_cols_balanced_handle(a_d, 4, seed=3)
+    matmul(a_bal, b_h, algorithm="ring_c", impl="ref")
+    comp = b_h._col_compensated[a_bal.col_block_perm]
+    matmul(a_bal, b_h, algorithm="ring_c", impl="ref")
+    assert b_h._col_compensated[a_bal.col_block_perm] is comp
+
+
+def test_densify_inverts_balance_perms():
+    d = _skewed_rmat()
+    h_rows = _manual_balanced_handle(d, 8)
+    h_cols = _manual_cols_balanced_handle(d, 8)
+    np.testing.assert_array_equal(np.asarray(h_rows.densify()), d)
+    np.testing.assert_array_equal(np.asarray(h_cols.densify()), d)
+
+
+def test_from_tiled_balance_cols_roundtrip():
+    d = _skewed_rmat().T.copy()
+    plain = TiledBSR.from_dense(d, ProcessGrid(4, 4), block_size=8)
+    h = DistBSR.from_tiled(plain, balance="cols", capacity=None)
+    assert h.col_block_perm is not None
+    assert h.capacity < plain.capacity
+    np.testing.assert_array_equal(np.asarray(h.densify()), d)
+
+
+def test_recommended_balance_follows_algorithm():
+    assert api.recommended_balance("ring_a") == "cols"
+    assert api.recommended_balance("ring_c") == "rows"
+    assert api.recommended_balance("summa_bcast") == "rows"
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        api.recommended_balance("cannon")
+
+
+def test_check_api_flags_symbolic_outside_core(tmp_path):
+    """core.symbolic is internal to repro/core: imports in examples or
+    sibling src packages are flagged, core itself is allowed."""
+    (tmp_path / "examples").mkdir()
+    (tmp_path / "benchmarks").mkdir()
+    pkg = tmp_path / "src" / "repro"
+    (pkg / "kernels").mkdir(parents=True)
+    (pkg / "core").mkdir()
+    (pkg / "kernels" / "bad.py").write_text(
+        "from repro.core.symbolic import symbolic_spgemm\n")
+    (pkg / "core" / "ok.py").write_text(
+        "from repro.core import symbolic\n")
+    (tmp_path / "examples" / "bad2.py").write_text(
+        "import repro.core.symbolic\n")
+    found = _load_check_api().violations(str(tmp_path))
+    assert len(found) == 2
+    assert any("kernels" in f and "bad.py" in f for f in found)
+    assert any("bad2.py" in f for f in found)

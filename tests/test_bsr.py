@@ -90,7 +90,7 @@ def test_tiled_bsr_balance_rows_permutes_and_roundtrips():
     back = np.asarray(bal.to_dense()).reshape(-1, 4, 64)[np.argsort(perm)]
     np.testing.assert_array_equal(back.reshape(64, 64), d)
     with pytest.raises(ValueError, match="balance"):
-        TiledBSR.from_dense(d, g, block_size=4, balance="cols")
+        TiledBSR.from_dense(d, g, block_size=4, balance="diag")
 
 
 def test_tiled_bsr_balance_never_increases_capacity():

@@ -27,8 +27,8 @@ def _run_selftest(devices: int, check: str) -> str:
     return proc.stdout
 
 
-@pytest.mark.parametrize("check", ["dense", "spmm", "spgemm", "api",
-                                   "balance"])
+@pytest.mark.parametrize("check", ["dense", "spmm", "spgemm",
+                                   "spgemm_sparse", "api", "balance"])
 def test_selftest_2x2(check):
     out = _run_selftest(4, check)
     assert "SELFTEST PASSED" in out
@@ -36,7 +36,7 @@ def test_selftest_2x2(check):
 
 @pytest.mark.slow
 def test_selftest_3x3_all_core():
-    for check in ("dense", "spmm", "spgemm"):
+    for check in ("dense", "spmm", "spgemm", "spgemm_sparse"):
         out = _run_selftest(9, check)
         assert "SELFTEST PASSED" in out
 

@@ -70,3 +70,42 @@ def test_pair_lists_cover_every_output_block():
         a.rows, a.cols, a.nnzb, a.rows, a.cols, a.nnzb, 3, 3)
     covered = set(zip(pr.tolist(), pc.tolist()))
     assert covered == {(r, c) for r in range(3) for c in range(3)}
+
+
+def test_match_block_pairs_join():
+    """The extracted sort-merge join feeds both build_pair_lists and the
+    distributed symbolic phase; check it against a brute-force join."""
+    rng = np.random.default_rng(3)
+    a_cols = rng.integers(0, 6, 20)
+    b_rows = rng.integers(0, 6, 15)
+    ai, bj = ops.match_block_pairs(a_cols, b_rows)
+    want = {(i, j) for i in range(20) for j in range(15)
+            if a_cols[i] == b_rows[j]}
+    assert set(zip(ai.tolist(), bj.tolist())) == want
+    assert (a_cols[ai] == b_rows[bj]).all()
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_pair_accumulate_packed_slots(impl):
+    """Sparse-output SpGEMM inner: packed accumulation matches a dense
+    scatter oracle, and slots visited only by coverage pairs come out
+    exactly zero (the first-visit-zeroing contract)."""
+    rng = np.random.default_rng(7)
+    n_blocks, bs, n_slots = 12, 8, 5
+    blocks_a = rng.standard_normal((n_blocks, bs, bs)).astype(np.float32)
+    blocks_b = rng.standard_normal((n_blocks, bs, bs)).astype(np.float32)
+    blocks_a[-1] = 0.0                      # a guaranteed zero slot each
+    blocks_b[-1] = 0.0
+    zero = n_blocks - 1
+    # real pairs for slots {0, 2, 3}; slots 1 and 4 covered only by dummies
+    pa = np.array([0, 1, zero, 2, 3, 4, zero, zero], np.int32)
+    pb = np.array([1, 2, zero, 3, 4, 5, zero, zero], np.int32)
+    ps = np.array([0, 0, 1, 2, 3, 3, 4, 4], np.int32)
+    got = np.asarray(ops.bsr_pair_accumulate(
+        jnp.asarray(blocks_a), jnp.asarray(blocks_b), jnp.asarray(pa),
+        jnp.asarray(pb), jnp.asarray(ps), n_slots=n_slots, impl=impl))
+    want = np.zeros((n_slots, bs, bs), np.float32)
+    for a_i, b_i, s in zip(pa, pb, ps):
+        want[s] += blocks_a[a_i] @ blocks_b[b_i]
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    assert np.abs(got[1]).max() == 0.0 and np.abs(got[4]).max() == 0.0

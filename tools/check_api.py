@@ -1,7 +1,7 @@
 #!/usr/bin/env python
-"""API-hygiene guard: examples/ and benchmarks/ must use the plan-based API.
+"""API-hygiene guard: keep first-party code on the plan-based API.
 
-Two classes of violation:
+Three classes of violation:
 
 * The free functions in ``repro.core.spmm`` (``spmm`` / ``spgemm`` /
   ``dense_matmul``) are deprecated shims kept only for downstream
@@ -11,9 +11,14 @@ Two classes of violation:
   implementation detail behind ``repro.kernels.ops`` and the planner;
   importing it directly bypasses impl dispatch, the coverage contract and
   the plan cache.
+* The SpGEMM symbolic phase ``repro.core.symbolic`` is internal to
+  ``repro/core``: its public surface (``symbolic_spgemm`` /
+  ``SymbolicProduct``) is re-exported by ``repro.core.api``, and plans own
+  the pair-list -> executable coupling.  Importing it anywhere outside
+  ``src/repro/core`` bypasses the structure-keyed plan cache.
 
-This script AST-scans ``examples/`` and ``benchmarks/`` for imports of
-either module and exits non-zero on any hit.  It is also run by
+This script AST-scans each module's watched directories for imports and
+exits non-zero on any hit outside the allowed prefixes.  It is also run by
 ``tests/test_api.py`` so the guard rides tier-1.
 
 Usage:  python tools/check_api.py  [repo_root]
@@ -25,43 +30,66 @@ import pathlib
 import sys
 from typing import List, Optional
 
-# module -> (parent package, submodule name) for `from parent import name`
+# module -> scan config:
+#   parent/leaf  : detect `from parent import leaf`
+#   dirs         : repo-relative directories to scan
+#   allow        : path prefixes (relative, posix) where the import is fine
 FORBIDDEN_MODULES = {
-    "repro.core.spmm": ("repro.core", "spmm"),
-    "repro.kernels.bsr_spmm": ("repro.kernels", "bsr_spmm"),
+    "repro.core.spmm": {
+        "parent": "repro.core", "leaf": "spmm",
+        "dirs": ("examples", "benchmarks"), "allow": (),
+    },
+    "repro.kernels.bsr_spmm": {
+        "parent": "repro.kernels", "leaf": "bsr_spmm",
+        "dirs": ("examples", "benchmarks"), "allow": (),
+    },
+    "repro.core.symbolic": {
+        "parent": "repro.core", "leaf": "symbolic",
+        "dirs": ("examples", "benchmarks", "tools", "tests", "src/repro"),
+        "allow": ("src/repro/core",),
+    },
 }
-SCANNED_DIRS = ("examples", "benchmarks")
+
+
+def _module_hits(tree: ast.AST, mod: str, parent: str, leaf: str) -> List:
+    hits = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                name = alias.name
+                if name == mod or name.startswith(mod + "."):
+                    hits.append((node.lineno, f"import {name}"))
+        elif isinstance(node, ast.ImportFrom):
+            src = node.module or ""
+            if src == mod or src.startswith(mod + "."):
+                hits.append((node.lineno, f"from {src} import ..."))
+            elif src == parent:
+                for alias in node.names:
+                    if alias.name == leaf:
+                        hits.append((node.lineno,
+                                     f"from {parent} import {leaf}"))
+    return hits
 
 
 def violations(root: Optional[str] = None) -> List[str]:
     root_path = pathlib.Path(root) if root else \
         pathlib.Path(__file__).resolve().parents[1]
     out: List[str] = []
-    for sub in SCANNED_DIRS:
-        for path in sorted((root_path / sub).glob("**/*.py")):
-            rel = path.relative_to(root_path)
-            tree = ast.parse(path.read_text(), filename=str(path))
-            for node in ast.walk(tree):
-                if isinstance(node, ast.Import):
-                    for alias in node.names:
-                        name = alias.name
-                        for mod in FORBIDDEN_MODULES:
-                            if name == mod or name.startswith(mod + "."):
-                                out.append(f"{rel}:{node.lineno}: "
-                                           f"import {name}")
-                elif isinstance(node, ast.ImportFrom):
-                    mod = node.module or ""
-                    for bad, (parent, leaf) in FORBIDDEN_MODULES.items():
-                        if mod == bad or mod.startswith(bad + "."):
-                            out.append(f"{rel}:{node.lineno}: "
-                                       f"from {mod} import ...")
-                        elif mod == parent:
-                            for alias in node.names:
-                                if alias.name == leaf:
-                                    out.append(
-                                        f"{rel}:{node.lineno}: "
-                                        f"from {parent} import {leaf}")
-    return out
+    for mod, cfg in FORBIDDEN_MODULES.items():
+        for sub in cfg["dirs"]:
+            base = root_path / sub
+            if not base.is_dir():
+                continue
+            for path in sorted(base.glob("**/*.py")):
+                rel = path.relative_to(root_path)
+                if any(rel.as_posix().startswith(pre + "/") or
+                       rel.as_posix() == pre for pre in cfg["allow"]):
+                    continue
+                tree = ast.parse(path.read_text(), filename=str(path))
+                for lineno, desc in _module_hits(tree, mod, cfg["parent"],
+                                                 cfg["leaf"]):
+                    out.append(f"{rel}:{lineno}: {desc}")
+    return sorted(set(out))
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -72,7 +100,9 @@ def main(argv: Optional[List[str]] = None) -> int:
         for v in found:
             print(f"  {v}")
         return 1
-    print(f"check_api: OK ({', '.join(SCANNED_DIRS)} are plan-API clean)")
+    scanned = sorted({d for cfg in FORBIDDEN_MODULES.values()
+                      for d in cfg["dirs"]})
+    print(f"check_api: OK ({', '.join(scanned)} are plan-API clean)")
     return 0
 
 
