@@ -9,15 +9,19 @@ rest run in-process.
   PYTHONPATH=src python -m benchmarks.run --smoke    # quick CI pass
   PYTHONPATH=src python -m benchmarks.run --json     # write BENCH_kernels.json
 
-``--json`` runs the kernel micro-bench plus the balanced-tiling and
-dense-vs-sparse-output SpGEMM experiments (R-MAT on a 4x4 grid, each in a
-16-device subprocess) and writes ``BENCH_kernels.json`` at the repo root:
-plan build time, per-multiply time, padded-flop waste, output footprint
-and predicted-vs-measured cost per algorithm — the perf-trajectory
-baseline for future PRs.
+``--json`` runs the kernel micro-bench plus the balanced-tiling,
+dense-vs-sparse-output SpGEMM and static-work-stealing experiments (R-MAT
+on a 4x4 grid, each in a 16-device subprocess) and writes
+``BENCH_kernels.json`` at the repo root: plan build time, per-multiply
+time, padded-flop waste, output footprint and predicted-vs-measured cost
+per algorithm — the perf-trajectory baseline for future PRs.  Each
+baseline refresh also re-fits the network constants of the cost model
+(``tools/fit_machine.py``) from its own records and embeds the calibrated
+preset plus per-record predicted-vs-measured drift under ``machine_fit``.
 """
 from __future__ import annotations
 
+import importlib.util
 import json
 import os
 import subprocess
@@ -50,32 +54,73 @@ def _run_subprocess(module: str, devices: int, *extra_args: str,
     return out.stdout
 
 
+def _load_fit_machine():
+    """Import tools/fit_machine.py (tools/ is not a package)."""
+    path = os.path.join(REPO_ROOT, "tools", "fit_machine.py")
+    spec = importlib.util.spec_from_file_location("fit_machine", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _machine_fit_section(payload: dict) -> dict:
+    """Re-fit Machine.net_bw/hop_latency from this payload's records and
+    report per-record predicted-vs-measured drift (ROADMAP "Machine
+    fitting in CI").  Never raises: a failed fit is recorded, not fatal.
+    """
+    try:
+        from repro.core import roofline
+        from repro.core.api import _predicted_time
+        fm = _load_fit_machine()
+        records = fm.collect_records(payload)
+        fitted, diag = fm.fit(records, roofline.TPU_V5E)
+        drift = []
+        for rec in records:
+            pred_nominal = _predicted_time(rec["cm"], rec["alg"],
+                                           roofline.TPU_V5E)
+            pred_fit = _predicted_time(rec["cm"], rec["alg"], fitted)
+            drift.append({
+                "source": rec["source"],
+                "measured_s": rec["measured"],
+                "predicted_s_nominal": pred_nominal,
+                "predicted_s_fit": pred_fit,
+                "drift_nominal": rec["measured"] / pred_nominal
+                if pred_nominal else float("nan"),
+                "drift_fit": rec["measured"] / pred_fit
+                if pred_fit else float("nan"),
+            })
+        return {**diag, "records": drift}
+    except Exception as e:                     # noqa: BLE001 (diagnostic)
+        return {"error": f"{type(e).__name__}: {e}"}
+
+
 def _write_json(smoke: bool) -> None:
     from benchmarks import kernels_bench
     # "smoke" marks reduced-scale payloads so trajectory comparisons never
     # mistake a quick CI pass for the full baseline.
     payload = {"smoke": smoke,
                "kernels": kernels_bench.run_json(smoke=smoke)}
-    # The balance and spgemm experiments configure 16 fake devices before
-    # importing jax, so each runs in its own process printing one JSON
-    # object.
+    # The balance, spgemm and steal experiments configure 16 fake devices
+    # before importing jax, so each runs in its own process printing one
+    # JSON object.
     extra = ("--smoke",) if smoke else ()
-    raw = _run_subprocess("benchmarks.balance_bench", 16, *extra, quiet=True)
-    try:
-        payload["balance_rmat_4x4"] = json.loads(raw) if raw else {
-            "error": "balance bench failed"}
-    except json.JSONDecodeError as e:
-        payload["balance_rmat_4x4"] = {"error": f"unparseable output: {e}"}
-        raw = ""   # degrade like the empty-output case (exit 1 below)
-    raw_sp = _run_subprocess("benchmarks.spgemm_bench", 16, *extra,
-                             quiet=True)
-    try:
-        payload["spgemm_rmat_4x4"] = json.loads(raw_sp) if raw_sp else {
-            "error": "spgemm bench failed"}
-    except json.JSONDecodeError as e:
-        payload["spgemm_rmat_4x4"] = {"error": f"unparseable output: {e}"}
-        raw_sp = ""
-    raw = raw and raw_sp   # both experiments must land in the baseline
+    all_ok = True
+    for module, section in (
+            ("benchmarks.balance_bench", "balance_rmat_4x4"),
+            ("benchmarks.spgemm_bench", "spgemm_rmat_4x4"),
+            ("benchmarks.steal_bench", "steal_rmat_4x4")):
+        raw = _run_subprocess(module, 16, *extra, quiet=True)
+        try:
+            payload[section] = json.loads(raw) if raw else {
+                "error": f"{module} failed"}
+        except json.JSONDecodeError as e:
+            payload[section] = {"error": f"unparseable output: {e}"}
+            raw = ""   # degrade like the empty-output case (exit 1 below)
+        all_ok = all_ok and bool(raw)
+    # every baseline refresh re-fits the cost model's network constants
+    # from its own records and records the drift
+    payload["machine_fit"] = _machine_fit_section(payload)
+    raw = all_ok       # all experiments must land in the baseline
     # Smoke and error payloads go to sibling files so neither a quick CI
     # pass nor a failed run can clobber the committed full-scale baseline.
     if smoke:
@@ -112,15 +157,29 @@ def main() -> None:
     if smoke:
         # Quick self-contained pass for tools/run_tier1.sh: kernel oracle
         # rows + one scale-8 balance check + one scale-9 sparse-output
-        # spgemm check, no multi-minute figure sweeps.
+        # spgemm check + one scale-8 steal3d check, no multi-minute figure
+        # sweeps.
         from benchmarks import kernels_bench
         kernels_bench.main(smoke=True)
         ok = True
-        for module in ("benchmarks.balance_bench", "benchmarks.spgemm_bench"):
+        for module in ("benchmarks.balance_bench", "benchmarks.spgemm_bench",
+                       "benchmarks.steal_bench"):
             raw = _run_subprocess(module, 16, "--smoke", quiet=True)
             name = module.rsplit(".", 1)[1]
             print(f"smoke,{name},{'ok' if raw else 'FAILED'}")
             ok = ok and bool(raw)
+        # exercise the machine-fit wiring against the committed baseline
+        # (a full refresh re-fits from its own fresh records)
+        baseline = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+        if os.path.exists(baseline):
+            with open(baseline) as f:
+                fit = _machine_fit_section(json.load(f))
+            fit_ok = "error" not in fit
+            detail = (f"net_bw={fit['net_bw']:.2e}" if fit_ok
+                      else fit["error"])
+            print(f"smoke,fit_machine,{'ok' if fit_ok else 'FAILED'};"
+                  f"{detail}")
+            ok = ok and fit_ok
         if not ok:
             sys.exit(1)
         return

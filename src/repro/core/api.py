@@ -28,14 +28,17 @@ TPU analogue of that design:
 The algorithm family (see the body docstrings): ``summa_bcast`` /
 ``summa_ag`` are the bulk-synchronous baselines, ``ring_c`` / ``ring_a``
 the RDMA-style stationary-C / stationary-A rings with placement-time
-``k_offset`` skew and prefetch via early ``ppermute``, and
-``ring_c_bidir`` a bidirectional stationary-C ring that splits the output
-into column half-panels circulating in opposite directions (full-duplex
-links).  ``plan_matmul(..., algorithm="auto")`` scores every registered
-schedule with the alpha-beta-gamma cost model (:func:`auto_select`) and
-builds the cheapest — the static analogue of Bharadwaj et al.'s
-observation that the best distributed sparse schedule flips with sparsity
-and aspect ratio.
+``k_offset`` skew and prefetch via early ``ppermute``, ``ring_c_bidir`` a
+bidirectional stationary-C ring that splits the output into column
+half-panels circulating in opposite directions (full-duplex links), and
+``steal3d`` the static realization of the paper's SS3.4 locality-aware
+work stealing: a plan-time LPT assignment of the 3D (i, k, j) work grid
+(:mod:`repro.core.steal3d`) executed as per-device pair lists with static
+moved-tile and owner-reduction ppermute rounds.  ``plan_matmul(...,
+algorithm="auto")`` scores every registered schedule with the
+alpha-beta-gamma cost model (:func:`auto_select`) and builds the cheapest
+— the static analogue of Bharadwaj et al.'s observation that the best
+distributed sparse schedule flips with sparsity and aspect ratio.
 
 SpGEMM additionally supports **sparse outputs** (``output="sparse"`` /
 ``"auto"``): a host-side symbolic phase (:mod:`repro.core.symbolic`,
@@ -72,6 +75,7 @@ from ..kernels import ops as kops
 from ..kernels import ref as kref
 from . import roofline as _roofline
 from . import schedule as _schedule
+from . import steal3d as _steal3d
 from . import symbolic as _symbolic
 from .bsr import TiledBSR
 from .dist import (make_grid_mesh, place_b_for_stationary_a, skew_bsr,
@@ -174,12 +178,17 @@ _PLAN_CACHE: Dict[tuple, "MatmulPlan"] = {}
 # auto decisions that resolve to dense never build pair lists.
 _SYMBOLIC_CACHE: Dict[tuple, "SymbolicProduct"] = {}
 _DENSITY_CACHE: Dict[tuple, float] = {}
+# steal3d assignments + pair lists, keyed on abstract shapes and (for
+# sparse A) the structure fingerprint: repeated plans / auto_select scores
+# for the same operands skip the host-side LPT + list construction.
+_STEAL_CACHE: Dict[tuple, "_steal3d.StealPlan"] = {}
 
 
 def clear_plan_cache() -> None:
     _PLAN_CACHE.clear()
     _SYMBOLIC_CACHE.clear()
     _DENSITY_CACHE.clear()
+    _STEAL_CACHE.clear()
 
 
 def plan_cache_size() -> int:
@@ -223,6 +232,17 @@ class Algorithm:
                                             # pair lists (sparse_body only)
     balance_axis: str = "rows"              # operand balance this schedule
                                             # benefits from (planner hint)
+    static_planner: Optional[Callable] = None
+                                            # (a_h, b_h, geom) -> StealPlan:
+                                            # plan-time builder of a static
+                                            # work-grid dispatch; the body
+                                            # then runs as body(a, b, aux,
+                                            # geom, steal_plan)
+    cost_fn: Optional[Callable] = None      # (alg, geom, a_h, b_h) -> cost
+                                            # dict, replacing the generic
+                                            # _cost_model for schedules
+                                            # whose cost is structure-
+                                            # dependent (steal3d)
 
 
 class AlgorithmRegistry:
@@ -280,6 +300,8 @@ def register_algorithm(name: str, *, a_placement: str = NATURAL,
                        sparse_body: Optional[Callable] = None,
                        k_order: Optional[Callable] = None,
                        balance_axis: str = "rows",
+                       static_planner: Optional[Callable] = None,
+                       cost_fn: Optional[Callable] = None,
                        registry: AlgorithmRegistry = REGISTRY):
     """Decorator registering a shard_map body as a named algorithm."""
     def deco(body):
@@ -288,7 +310,8 @@ def register_algorithm(name: str, *, a_placement: str = NATURAL,
             b_placement=b_placement, unskew_out=unskew_out, wire=wire,
             wire_amortized=wire_amortized, style=style, duplex=duplex,
             msgs_per_step=msgs_per_step, sparse_body=sparse_body,
-            k_order=k_order, balance_axis=balance_axis))
+            k_order=k_order, balance_axis=balance_axis,
+            static_planner=static_planner, cost_fn=cost_fn))
         return body
     return deco
 
@@ -511,6 +534,104 @@ def _body_ring_c_bidir(a, b, geom: _Geom):
     (_, _, _, _, c_l, c_r), _ = lax.scan(
         step, (a, a, b_fwd, b_bwd, c_l0, c_r0), None, length=geom.g)
     return jnp.concatenate([c_l, c_r], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# steal3d: static 3D work-grid dispatch from the stealing equilibrium
+# ---------------------------------------------------------------------------
+def _steal_plan_for(a_h: "DistMatrix", b_h: "DistMatrix",
+                    geom: _Geom) -> "_steal3d.StealPlan":
+    """Memoized steal3d planner (LPT assignment + pair lists + rounds).
+
+    auto_select scoring shares this cache with plan construction: the one
+    full build per operand structure also serves the cost entry, and is
+    reused outright if steal3d wins the race.
+    """
+    skey = a_h.structure_key() if isinstance(a_h, DistBSR) else None
+    key = (a_h.abstract_key(), b_h.abstract_key(), skey)
+    sp = _STEAL_CACHE.get(key)
+    if sp is None:
+        sp = _steal3d.build_steal_plan(a_h, b_h, geom)
+        _STEAL_CACHE[key] = sp
+    return sp
+
+
+def _steal3d_cost(alg: "Algorithm", geom: _Geom, a_h: "DistMatrix",
+                  b_h: "DistMatrix") -> Dict[str, float]:
+    """auto_select cost entry: the *simulated equilibrium* made a score.
+
+    The flop term is the realized LPT makespan (pair capacity — executed
+    block products on the most-loaded device, padding included) and the
+    byte term counts panel gathers + moved tiles + owner reductions, so
+    ``algorithm="auto"`` picks steal3d exactly when the plan-time stealing
+    simulation says the equilibrium beats every owner-computes schedule's
+    capacity-padded uniform work.
+    """
+    return dict(_steal_plan_for(a_h, b_h, geom).cost)
+
+
+def _steal3d_perm(g: int, delta: int):
+    return [(d, (d + delta) % g) for d in range(g)]
+
+
+@register_algorithm("steal3d", style="bsp", wire=("a", "b", "c"),
+                    static_planner=_steal_plan_for, cost_fn=_steal3d_cost)
+def _body_steal3d(a, b, aux, geom: _Geom, splan: "_steal3d.StealPlan"):
+    """Static realization of the paper's SS3.4 locality-aware work stealing.
+
+    Executes the plan-time LPT assignment of (i, k, j) items: each device
+    all-gathers its A grid-row panel and (densified) B grid-column panel,
+    receives the moved tiles of its off-owner items in static ppermute
+    rounds, runs ONE packed pair-accumulate over its item list (length =
+    the stealing equilibrium's makespan, not the uniform g x capacity of
+    the owner-computes rings), and ships partial C tiles home in static
+    reduce rounds.  No scan: the whole dispatch is one flat program.
+    """
+    g = geom.g
+    if splan.a_kind == "bsr":
+        a_tiles = lax.all_gather(a["blocks"], geom.axc)  # [g, store, bs, bs]
+    else:
+        a_tiles = lax.all_gather(a["dense"], geom.axc)   # [g, tm, tk]
+    b_dense = _densify_b(b, geom)["dense"]
+    b_tiles = lax.all_gather(b_dense, geom.axr)          # [g, tk, tn]
+    # moved tiles: one ppermute round per hop distance, source-side static
+    # gather indices select what each source packs (paper's "one moving
+    # tile" for locality-constrained steals)
+    a_pool = [a_tiles]
+    for delta in splan.a_deltas:
+        buf = a_tiles[aux[f"amk{delta}"]]
+        a_pool.append(lax.ppermute(buf, geom.axr, _steal3d_perm(g, delta)))
+    b_pool = [b_tiles]
+    for delta in splan.b_deltas:
+        buf = b_tiles[aux[f"bmk{delta}"]]
+        b_pool.append(lax.ppermute(buf, geom.axc, _steal3d_perm(g, delta)))
+    a_pool = jnp.concatenate(a_pool) if len(a_pool) > 1 else a_pool[0]
+    b_pool = jnp.concatenate(b_pool) if len(b_pool) > 1 else b_pool[0]
+    zero_a = _pvary(jnp.zeros((1,) + a_pool.shape[1:], a_pool.dtype), geom)
+    a_pool = jnp.concatenate([a_pool, zero_a])
+    pa, pb, ps = aux["pa"], aux["pb"], aux["ps"]
+    if splan.a_kind == "bsr":
+        blocks = a_pool.reshape((-1,) + a_pool.shape[-2:])
+        b_flat = b_pool.reshape(-1, b_pool.shape[-1])
+        c = kops.steal_pair_accumulate(blocks, b_flat, pa, pb, ps,
+                                       n_slots=splan.n_slots,
+                                       impl=geom.impl)
+        c = c.reshape(splan.n_out, geom.tm, geom.tn)
+    else:
+        prods = jnp.einsum("pij,pjk->pik", a_pool[pa], b_pool[pb],
+                           preferred_element_type=jnp.float32)
+        c = jax.ops.segment_sum(prods, ps, num_segments=splan.n_out,
+                                indices_are_sorted=True)
+    own = c[0]
+    # reduce rounds: partial C tiles ride home to their owners; idle
+    # senders point at the guaranteed-zero dummy slot
+    for delta in splan.row_deltas:
+        part = jnp.take(c, aux[f"rsend{delta}"], axis=0)
+        own = own + lax.ppermute(part, geom.axc, _steal3d_perm(g, delta))
+    for delta in splan.col_deltas:
+        part = jnp.take(c, aux[f"csend{delta}"], axis=0)
+        own = own + lax.ppermute(part, geom.axr, _steal3d_perm(g, delta))
+    return own.astype(geom.out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -1005,9 +1126,14 @@ def _predicted_time(cm: Dict[str, float], alg: Algorithm,
     paper's SS3.3 overlap claim, encoded as a scheduling preference.
     """
     t_comp = cm["total_flops"] / _roofline.local_peak(cm["ai_local"], machine)
-    n_msgs = alg.msgs_per_step if alg.msgs_per_step is not None \
-        else len(alg.wire)
-    msgs = n_msgs * (1.0 if alg.wire_amortized else cm["steps"])
+    if "n_msgs" in cm:
+        # structure-dependent schedules (steal3d) count their actual
+        # collective rounds in the cost model instead of wire x steps
+        msgs = cm["n_msgs"]
+    else:
+        n_msgs = alg.msgs_per_step if alg.msgs_per_step is not None \
+            else len(alg.wire)
+        msgs = n_msgs * (1.0 if alg.wire_amortized else cm["steps"])
     t_comm = cm["total_net_bytes"] / (machine.net_bw * alg.duplex) \
         + msgs * machine.hop_latency
     if alg.style == "bsp":
@@ -1028,7 +1154,8 @@ class MatmulPlan:
                  a_key: tuple, b_key: tuple, allow_pad: bool = False,
                  requested: Optional[str] = None,
                  auto_scores: Optional[Dict[str, float]] = None,
-                 symbolic: Optional["SymbolicProduct"] = None):
+                 symbolic: Optional["SymbolicProduct"] = None,
+                 steal: Optional["_steal3d.StealPlan"] = None):
         self.algorithm = algorithm
         self.geom = geom
         self.mesh = mesh
@@ -1044,11 +1171,39 @@ class MatmulPlan:
         self.requested = requested or algorithm.name
         self.auto_scores = auto_scores
         self.symbolic = symbolic
+        self.steal = steal
         self.traces = 0
         specs = (_specs_for_keys(_tree_keys(a_key), geom.axr, geom.axc),
                  _specs_for_keys(_tree_keys(b_key), geom.axr, geom.axc))
 
-        if symbolic is None:
+        if steal is not None:
+            # steal3d plan: the executable is specialized to the LPT
+            # assignment — pair lists, move-round gather indices and
+            # reduce-round slot selectors ride as a third operand tree
+            # (committed in their mesh sharding once, like sparse-output
+            # pair lists); only A's block data is sharded in for sparse A.
+            body = algorithm.body
+            aux_specs = {k: P(geom.axr, geom.axc, *(None,) * (v.ndim - 2))
+                         for k, v in steal.aux.items()}
+            self._aux = {
+                k: jax.device_put(
+                    np.ascontiguousarray(v),
+                    jax.sharding.NamedSharding(mesh, aux_specs[k]))
+                for k, v in steal.aux.items()}
+
+            def fn(a, b, aux):
+                self.traces += 1          # runs at trace time only
+                for hook in list(_TRACE_HOOKS):
+                    hook(self)
+                return body(_local_view(a), _local_view(b),
+                            {k: v[0, 0] for k, v in aux.items()}, geom,
+                            steal)
+
+            a_keys = ("blocks",) if a_key[0] == "bsr" else ("dense",)
+            in_specs = (_specs_for_keys(a_keys, geom.axr, geom.axc),
+                        specs[1], aux_specs)
+            out_specs = P(geom.axr, geom.axc)
+        elif symbolic is None:
             body = algorithm.body
 
             def fn(a, b):
@@ -1125,6 +1280,22 @@ class MatmulPlan:
                 f"(plan: {self._a_key} @ {self._b_key}, got "
                 f"{a_h.abstract_key()} @ {b_h.abstract_key()}); build a new "
                 "plan with plan_matmul")
+        if self.steal is not None:
+            if self._a_key[0] == "bsr":
+                if a_h.structure_key() != self.steal.a_fingerprint:
+                    raise ValueError(
+                        "left operand's sparsity structure does not match "
+                        "this steal3d plan (the LPT assignment and pair "
+                        "lists are specialized to the structure); build a "
+                        "new plan with plan_matmul")
+                a_tree = {"blocks":
+                          a_h.placed(self.algorithm.a_placement)["blocks"]}
+            else:
+                a_tree = a_h.placed(self.algorithm.a_placement)
+            c = self._exec(a_tree,
+                           b_h.placed(self.algorithm.b_placement),
+                           self._aux)
+            return self._epilogue(c, a_h, b_h)
         if self.symbolic is not None:
             sym = self.symbolic
             if (a_h.structure_key(), b_h.structure_key()) != \
@@ -1202,8 +1373,13 @@ class MatmulPlan:
         end-to-end imbalance from its tile counts (feeds
         ``core/schedule.py``).
         """
-        out = _cost_model(self.algorithm, self.geom, self._a_key,
-                          self._b_key, symbolic=self.symbolic)
+        if self.steal is not None:
+            # structure-true cost precomputed by the steal3d planner
+            # (makespan flops + gather/moved/reduce traffic)
+            out = dict(self.steal.cost)
+        else:
+            out = _cost_model(self.algorithm, self.geom, self._a_key,
+                              self._b_key, symbolic=self.symbolic)
         if isinstance(a, DistBSR):
             per_stage, end_to_end = _schedule.stage_imbalance(
                 np.asarray(a.counts, dtype=np.float64))
@@ -1373,10 +1549,15 @@ def _sparse_output_eligible(a_h: DistMatrix, b_h: DistMatrix) -> Optional[str]:
         return (f"sparse output needs equal block sizes, got "
                 f"{a_h.block_size} and {b_h.block_size}")
     for h, who in ((a_h, "left"), (b_h, "right")):
-        if h.row_block_perm or h.col_block_perm:
-            return (f"sparse output does not support balanced operands "
-                    f"({who} operand carries a balance permutation); "
-                    "rebuild with balance='none'")
+        if getattr(h, "row_block_perm", None) or \
+                getattr(h, "col_block_perm", None):
+            return (
+                f"sparse output does not support balanced operands: the "
+                f"{who} operand carries a balance permutation, which the "
+                "symbolic phase cannot compose into its pair lists yet; "
+                'either keep a dense output for this multiply '
+                '(output="dense") or rebuild the operand without balancing '
+                '(balance="none")')
     return None
 
 
@@ -1422,9 +1603,13 @@ def auto_select(a, b, *, machine: Optional["_roofline.Machine"] = None,
                      axis_col=axis_col,
                      c_store=sym.store_capacity if sym else 0)
     a_key, b_key = a_h.abstract_key(), b_h.abstract_key()
-    scores = {alg.name: _predicted_time(
-        _cost_model(alg, geom, a_key, b_key, symbolic=sym), alg, machine)
-        for alg in candidates}
+    scores = {}
+    for alg in candidates:
+        if alg.cost_fn is not None:       # structure-dependent (steal3d)
+            cm = alg.cost_fn(alg, geom, a_h, b_h)
+        else:
+            cm = _cost_model(alg, geom, a_key, b_key, symbolic=sym)
+        scores[alg.name] = _predicted_time(cm, alg, machine)
     if not scores:
         raise ValueError("no algorithms registered" if output != "sparse"
                          else "no sparse-output algorithms registered")
@@ -1504,19 +1689,26 @@ def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
         # pair lists are baked into the executable, so the structure is
         # part of the plan's identity, not just its abstract shapes
         key += ("sparse", a_h.structure_key(), b_h.structure_key())
+    if alg.static_planner is not None:
+        # the LPT assignment (and therefore the executable's pair lists
+        # and rounds) is a function of A's sparsity structure
+        key += ("steal", a_h.structure_key()
+                if isinstance(a_h, DistBSR) else None)
     if cache:
         plan = _PLAN_CACHE.get(key)
         if plan is not None:
             if auto_scores is not None and plan.auto_scores is None:
                 plan.auto_scores = auto_scores   # record for introspection
             return plan
-    plan = MatmulPlan(alg, _geometry(a_h, b_h, impl=impl, axis_row=axis_row,
-                                     axis_col=axis_col,
-                                     c_store=sym.store_capacity if sym
-                                     else 0),
+    geom = _geometry(a_h, b_h, impl=impl, axis_row=axis_row,
+                     axis_col=axis_col,
+                     c_store=sym.store_capacity if sym else 0)
+    steal = alg.static_planner(a_h, b_h, geom) \
+        if alg.static_planner is not None else None
+    plan = MatmulPlan(alg, geom,
                       mesh, a_h.abstract_key(), b_h.abstract_key(),
                       allow_pad=allow_pad, requested=requested,
-                      auto_scores=auto_scores, symbolic=sym)
+                      auto_scores=auto_scores, symbolic=sym, steal=steal)
     if cache:
         _PLAN_CACHE[key] = plan
     return plan

@@ -134,7 +134,9 @@ class BSR:
         mask = np.abs(view).sum(axis=(2, 3)) != 0
         rr, cc = np.nonzero(mask)  # np.nonzero returns row-major (sorted by row)
         nnzb = len(rr)
-        cap = capacity if capacity is not None else max(nnzb, 1)
+        # an all-zero matrix legitimately has capacity 0 (coverage blocks
+        # added by the TiledBSR augmenter keep kernels well-defined)
+        cap = capacity if capacity is not None else nnzb
         if nnzb > cap:
             raise ValueError(f"capacity {cap} < nnzb {nnzb}")
         bs = block_size
@@ -365,12 +367,14 @@ class TiledBSR:
             tiles.append(row)
         max_nnzb = max(max(t.nnzb for t in row) for row in tiles)
         if capacity == "bucket":
-            cap = bucket_capacity(max(max_nnzb, 1))
+            cap = bucket_capacity(max_nnzb)
         else:
             if capacity is not None and capacity < max_nnzb:
                 raise ValueError(
                     f"capacity {capacity} < max tile nnzb {max_nnzb}")
-            cap = max(capacity if capacity is not None else max_nnzb, 1)
+            # an all-zero matrix keeps capacity 0: store_capacity is then
+            # just the coverage blocks — the cheap empty fast path
+            cap = capacity if capacity is not None else max_nnzb
         tile_nbr = tm // block_size
         aug = [[_augment_tile(np.asarray(t.blocks), np.asarray(t.rows),
                               np.asarray(t.cols), tile_nbr)

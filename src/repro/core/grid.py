@@ -34,11 +34,18 @@ def bucket_capacity(c: int, ratio: float = 1.25) -> int:
     identical executables.  Rounding capacities up to a shared bucket at
     handle construction makes their abstract shapes — and therefore their
     cached plans — coincide, at the cost of at most ``ratio - 1`` extra
-    padding.  The bucket series is deterministic: 1, 2, 3, 4, 5, 7, 9, ...
-    (each bucket is ``max(prev + 1, ceil(prev * ratio))``).
+    padding.  The bucket series is deterministic: 0, 1, 2, 3, 4, 5, 7, 9,
+    ... (each positive bucket is ``max(prev + 1, ceil(prev * ratio))``).
+
+    ``bucket_capacity(0) == 0``: a genuinely empty operand must not
+    inflate to capacity 1 — zero real slots is its own (cheapest) bucket,
+    so empty DistBSR handles allocate no phantom block storage and their
+    plans execute only the coverage blocks.
     """
     if c < 0:
         raise ValueError(f"capacity must be non-negative, got {c}")
+    if c == 0:
+        return 0
     b = 1
     while b < c:
         b = max(b + 1, math.ceil(b * ratio))

@@ -22,11 +22,12 @@ import math
 from typing import Dict
 
 __all__ = [
-    "Machine", "SUMMIT_V100", "DGX2_V100", "TPU_V5E",
+    "Machine", "SUMMIT_V100", "DGX2_V100", "TPU_V5E", "HOST_CPU",
     "save_machine", "load_machine",
     "spmm_local_ai", "spmm_internode_ai", "spgemm_local_ai",
     "spgemm_internode_ai", "local_peak", "internode_roofline",
     "spmm_model", "spgemm_model",
+    "steal3d_internode_ai", "steal3d_model",
 ]
 
 
@@ -47,6 +48,13 @@ SUMMIT_V100 = Machine("summit-v100", 16e12, 900e9, 3.83e9, 4)
 DGX2_V100 = Machine("dgx2-v100", 16e12, 900e9, 50e9, 4)
 # Harness constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link.
 TPU_V5E = Machine("tpu-v5e", 197e12, 819e9, 50e9, 2)
+# CI harness: 16 fake CPU devices sharing one host process.  Loose fit to
+# the BENCH_kernels.json trajectories: ~50 GFLOP/s of einsum throughput per
+# fake device, "network" is host memcpy, and the per-message alpha is the
+# shard_map dispatch floor.  A *compute-bound* machine — the regime where a
+# work-stealing schedule's flop saving decides (on the net-bound nominal
+# v5e constants, shipping extra tiles to steal work can never pay).
+HOST_CPU = Machine("host-cpu", 5e10, 2e10, 2e10, 4, hop_latency=2e-5)
 
 
 def save_machine(m: Machine, path: str) -> None:
@@ -138,6 +146,38 @@ def spmm_model(m: int, k: int, n: int, p: int, d: float,
         "local_peak": local_peak(ai_local, mach),
         "perf": internode_roofline(ai_net, ai_local, mach),
         "net_bound": ai_net * mach.net_bw < local_peak(ai_local, mach),
+    }
+
+
+def steal3d_internode_ai(flops: float, gather_bytes: float,
+                         moved_bytes: float, reduce_bytes: float) -> float:
+    """Inter-node AI of the static steal3d dispatch (per device).
+
+    Unlike the owner-computes schedules, steal3d's wire traffic has three
+    distinct components that all must be charged: the up-front operand
+    panel gathers, the *moved tiles* of off-owner work items (the paper's
+    "one moving tile" locality cost, here shipped in static ppermute
+    rounds), and the partial-C tiles reduced back to their owners.
+    """
+    total = gather_bytes + moved_bytes + reduce_bytes
+    return flops / total if total else float("inf")
+
+
+def steal3d_model(flops: float, gather_bytes: float, moved_bytes: float,
+                  reduce_bytes: float, ai_local: float,
+                  mach: Machine) -> Dict[str, float]:
+    """Roofline prediction for one steal3d dispatch (Fig. 2 style)."""
+    ai_net = steal3d_internode_ai(flops, gather_bytes, moved_bytes,
+                                  reduce_bytes)
+    return {
+        "ai_local": ai_local,
+        "ai_net": ai_net,
+        "local_peak": local_peak(ai_local, mach),
+        "perf": internode_roofline(ai_net, ai_local, mach),
+        "net_bound": ai_net * mach.net_bw < local_peak(ai_local, mach),
+        "moved_tile_fraction": moved_bytes / (gather_bytes + moved_bytes
+                                              + reduce_bytes)
+        if (gather_bytes + moved_bytes + reduce_bytes) else 0.0,
     }
 
 

@@ -1,0 +1,332 @@
+"""Static 3D work-grid dispatch: the executable form of work stealing.
+
+The paper's SS3.4 workstealing lets idle devices claim (i, k, j) work items
+from a 2D/3D work grid at runtime with remote fetch-and-add.  A
+jit-compiled shard_map program cannot fetch-and-add against a remote
+counter — but the quantity stealing balances (flops per item, known from
+per-tile block counts) is static for a given matrix, so the *equilibrium*
+the paper's stealing converges to can be computed once at plan time
+(:func:`repro.core.schedule.assign_3d_lpt`) and compiled into a schedule.
+This module turns that assignment into the per-device static execution
+data the ``steal3d`` algorithm body (``repro.core.api``) consumes:
+
+* **pools** — every device all-gathers its A grid-row panel (along the
+  mesh column axis) and its densified B grid-column panel (along the mesh
+  row axis), so any item respecting the locality constraint (device in
+  grid row i or grid column j) is one moved tile away from executable;
+* **move rounds** — for off-owner items, the one missing tile (B[k, j]
+  for a row-local thief, A[i, k] for a column-local one) ships in static
+  ``ppermute`` rounds, one per hop distance, with plan-built per-device
+  gather indices selecting what each source sends;
+* **pair lists** — each device's items flatten into one block-level pair
+  list (A pool block, B pool row-chunk, output slot) in the style of the
+  symbolic-phase machinery (slot-sorted, coverage pair per slot, inert
+  zero-block padding to the uniform capacity — the LPT makespan is the
+  list length, so skew shrinks executed work instead of padding it);
+* **reduce rounds** — partial C tiles computed off-owner ride static
+  ``ppermute`` rounds back to their owners, who accumulate them before
+  the shared unskew/crop epilogue.
+
+Everything here is host-side numpy; the only device interaction is the
+plan committing the index arrays once (like sparse-output pair lists).
+Like ``core.symbolic``, this module is internal to ``repro/core`` — the
+public surface is ``plan_matmul(algorithm="steal3d")``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from . import roofline as _roofline
+from .grid import bucket_capacity
+from .schedule import Assignment3D, assign_3d_lpt
+from .symbolic import extract_structure
+
+__all__ = ["StealPlan", "build_steal_plan"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StealPlan:
+    """Per-device static execution data for one steal3d dispatch.
+
+    ``aux`` holds the arrays the executable consumes, all leading-indexed
+    ``[g, g, ...]`` (device-major, sharded by the plan): ``pa``/``pb``/
+    ``ps`` pair lists, ``amk<d>``/``bmk<d>`` per-move-round source gather
+    indices, and ``rsend<d>``/``csend<d>`` per-reduce-round output-slot
+    selectors.  ``cost`` is the alpha-beta-gamma cost-model dict scored by
+    ``algorithm="auto"`` — its flop term is the realized LPT makespan
+    (pair capacity), its byte term counts panel gathers, moved tiles and
+    owner reductions.
+    """
+    g: int
+    a_kind: str                    # "bsr" | "dense"
+    n_out: int                     # output accumulator tiles per device
+    n_slots: int                   # packed output slots (n_out * a_nbr)
+    pair_capacity: int             # uniform pair-list length (the makespan)
+    store_a: int                   # A pool stride per tile (sparse A only)
+    b_chunks: int                  # bs-row chunks per B tile (sparse A only)
+    a_deltas: Tuple[int, ...]      # A move rounds (hop distances, axr)
+    a_move_cap: Tuple[int, ...]    # tiles shipped per A round
+    b_deltas: Tuple[int, ...]      # B move rounds (hop distances, axc)
+    b_move_cap: Tuple[int, ...]
+    row_deltas: Tuple[int, ...]    # C reduce rounds along axc
+    col_deltas: Tuple[int, ...]    # C reduce rounds along axr
+    aux: Dict[str, np.ndarray]
+    assignment: Assignment3D
+    a_fingerprint: Optional[str]   # sparse A structure the lists encode
+    cost: Dict[str, float]
+
+
+def _item_cost_grid(a_h, g: int) -> Tuple[np.ndarray, Optional[object]]:
+    """(cost[i, k], structure) — real block products per (i, k, j) item.
+
+    Every schedule in the engine consumes B as a densified tile, so the
+    executed cost of item (i, k, j) is A[i, k]'s *real* stored block count
+    for sparse A (j-independent) and uniform for dense A.
+    """
+    if a_h.kind == "bsr":
+        sa = extract_structure(a_h.tiled)
+        return sa.real.sum(axis=2).astype(np.float64), sa
+    return np.ones((g, g), dtype=np.float64), None
+
+
+def build_steal_plan(a_h, b_h, geom, *, locality: str = "locality",
+                     comm_penalty: float = 1.0) -> StealPlan:
+    """Compile the stealing equilibrium for ``a_h @ b_h`` into a StealPlan.
+
+    ``geom`` is the plan's :class:`repro.core.api._Geom`; handles are
+    :class:`DistBSR` / :class:`DistDense` (duck-typed via ``.kind``).
+    """
+    g = geom.g
+    n_dev = g * g
+    tk = a_h.shape[1] // g
+    cost_ik, sa = _item_cost_grid(a_h, g)
+    sparse_a = sa is not None
+    asg = assign_3d_lpt(
+        np.broadcast_to(cost_ik[:, :, None], (g, g, g)).copy(), g,
+        locality=locality, comm_penalty=comm_penalty)
+    dev = asg.dev
+
+    # ---- per-device item sets and the tiles they need moved --------------
+    items = [[] for _ in range(n_dev)]
+    for i in range(g):
+        for k in range(g):
+            for j in range(g):
+                items[int(dev[i, k, j])].append((i, k, j))
+    row_js, col_is, need_a, need_b = [], [], [], []
+    for d in range(n_dev):
+        r, c = divmod(d, g)
+        rj, ci, na, nb = set(), set(), set(), set()
+        for (i, k, j) in items[d]:
+            if i == r and j == c:
+                continue                                  # own item
+            if i == r:                                    # row-local thief
+                rj.add(j)
+                nb.add((k, j))                            # B[k, j] moves
+            elif j == c:                                  # col-local thief
+                ci.add(i)
+                na.add((i, k))                            # A[i, k] moves
+            else:                                         # cannot happen
+                raise AssertionError(
+                    f"assignment violates the 3D locality constraint: item "
+                    f"({i},{k},{j}) on device ({r},{c})")
+        row_js.append(sorted(rj))
+        col_is.append(sorted(ci))
+        need_a.append(sorted(na))
+        need_b.append(sorted(nb))
+
+    # ---- move rounds: one ppermute per hop distance ----------------------
+    # A tiles move along the mesh ROW axis (source (i, c) owns the A[i, :]
+    # panel after the A all-gather); B tiles along the COLUMN axis.
+    def _move_rounds(need, src_of, dist_of, panel_k):
+        deltas, caps, lists, send = [], [], {}, {}
+        for delta in range(1, g):
+            per_dev = [[t for t in need[d] if dist_of(d, t) == delta]
+                       for d in range(n_dev)]
+            cap = max((len(v) for v in per_dev), default=0)
+            if not cap:
+                continue
+            # source-side gather indices: what each source packs for the
+            # device `delta` hops downstream of it
+            k_src = np.zeros((g, g, cap), dtype=np.int32)
+            for d in range(n_dev):
+                s = src_of(d, delta)
+                for m, t in enumerate(per_dev[d]):
+                    k_src[s[0], s[1], m] = panel_k(t)
+            deltas.append(delta)
+            caps.append(cap)
+            lists[delta] = per_dev
+            send[delta] = k_src
+        return deltas, caps, lists, send
+
+    a_deltas, a_move_cap, a_lists, a_send = _move_rounds(
+        need_a,
+        src_of=lambda d, delta: ((d // g - delta) % g, d % g),
+        dist_of=lambda d, t: (d // g - t[0]) % g,
+        panel_k=lambda t: t[1])     # A[i, k]: position k in the row panel
+    b_deltas, b_move_cap, b_lists, b_send = _move_rounds(
+        need_b,
+        src_of=lambda d, delta: (d // g, (d % g - delta) % g),
+        dist_of=lambda d, t: (d % g - t[1]) % g,
+        panel_k=lambda t: t[0])     # B[k, j]: position k in the col panel
+
+    # ---- pool tile positions (must mirror the body's concat order) ------
+    a_pos = [dict() for _ in range(n_dev)]
+    b_pos = [dict() for _ in range(n_dev)]
+    for d in range(n_dev):
+        r, c = divmod(d, g)
+        for k in range(g):
+            a_pos[d][(r, k)] = k                 # A row panel: A[r, k] at k
+            b_pos[d][(k, c)] = k                 # B col panel: B[k, c] at k
+    base = g
+    for delta, cap in zip(a_deltas, a_move_cap):
+        for d in range(n_dev):
+            for m, t in enumerate(a_lists[delta][d]):
+                a_pos[d][t] = base + m
+        base += cap
+    a_pool_tiles = base                          # zero tile appended after
+    base = g
+    for delta, cap in zip(b_deltas, b_move_cap):
+        for d in range(n_dev):
+            for m, t in enumerate(b_lists[delta][d]):
+                b_pos[d][t] = base + m
+        base += cap
+
+    # ---- output accumulator layout ---------------------------------------
+    n_row_max = max(len(v) for v in row_js)
+    n_col_max = max(len(v) for v in col_is)
+    dummy = n_row_max + n_col_max > 0    # zero target for idle reduce sends
+    n_out = 1 + n_row_max + n_col_max + (1 if dummy else 0)
+    out_idx = []
+    for d in range(n_dev):
+        r, c = divmod(d, g)
+        m = {(r, c): 0}
+        for t, j in enumerate(row_js[d]):
+            m[(r, j)] = 1 + t
+        for t, i in enumerate(col_is[d]):
+            m[(i, c)] = 1 + n_row_max + t
+        out_idx.append(m)
+    dummy_idx = n_out - 1
+
+    # ---- reduce rounds: partials ride home one ppermute per distance -----
+    row_deltas = sorted({(j - d % g) % g for d in range(n_dev)
+                         for j in row_js[d]})
+    col_deltas = sorted({(i - d // g) % g for d in range(n_dev)
+                         for i in col_is[d]})
+    aux: Dict[str, np.ndarray] = {}
+    for delta in row_deltas:
+        sel = np.full((g, g), dummy_idx, dtype=np.int32)
+        for d in range(n_dev):
+            r, c = divmod(d, g)
+            sel[r, c] = out_idx[d].get((r, (c + delta) % g), dummy_idx)
+        aux[f"rsend{delta}"] = sel
+    for delta in col_deltas:
+        sel = np.full((g, g), dummy_idx, dtype=np.int32)
+        for d in range(n_dev):
+            r, c = divmod(d, g)
+            sel[r, c] = out_idx[d].get(((r + delta) % g, c), dummy_idx)
+        aux[f"csend{delta}"] = sel
+    for delta, arr in a_send.items():
+        aux[f"amk{delta}"] = arr
+    for delta, arr in b_send.items():
+        aux[f"bmk{delta}"] = arr
+
+    # ---- pair lists (symbolic-phase style: slot-sorted + coverage) -------
+    bs = a_h.block_size if sparse_a else 0
+    nbr = geom.a_nbr if sparse_a else 1
+    store_a = a_h.tiled.store_capacity if sparse_a else 0
+    b_chunks = tk // bs if sparse_a else 0
+    n_slots = n_out * nbr if sparse_a else n_out
+    zero_a = a_pool_tiles * store_a if sparse_a else a_pool_tiles
+    per_dev_pairs = []
+    for d in range(n_dev):
+        pa, pb, ps = [], [], []
+        for (i, k, j) in items[d]:
+            o = out_idx[d][(i, j)]
+            if sparse_a:
+                sl = np.nonzero(sa.real[i, k])[0]
+                pa.append(a_pos[d][(i, k)] * store_a + sl)
+                pb.append(b_pos[d][(k, j)] * b_chunks
+                          + sa.cols[i, k][sl].astype(np.int64))
+                ps.append(o * nbr + sa.rows[i, k][sl].astype(np.int64))
+            else:
+                pa.append(np.array([a_pos[d][(i, k)]]))
+                pb.append(np.array([b_pos[d][(k, j)]]))
+                ps.append(np.array([o]))
+        pa = np.concatenate(pa) if pa else np.zeros(0, np.int64)
+        pb = np.concatenate(pb) if pb else np.zeros(0, np.int64)
+        ps = np.concatenate(ps) if ps else np.zeros(0, np.int64)
+        if sparse_a:
+            # one coverage pair per slot (inert: zero A block), merged in
+            # slot order — the kernel's first-visit zeroing contract
+            ps_all = np.concatenate([ps, np.arange(n_slots)])
+            order = np.argsort(ps_all, kind="stable")
+            pa = np.concatenate([pa, np.full(n_slots, zero_a)])[order]
+            pb = np.concatenate([pb, np.zeros(n_slots, np.int64)])[order]
+            ps = ps_all[order]
+        else:
+            order = np.argsort(ps, kind="stable")
+            pa, pb, ps = pa[order], pb[order], ps[order]
+        per_dev_pairs.append((pa, pb, ps))
+    pair_cap = bucket_capacity(max(len(p[0]) for p in per_dev_pairs))
+    pa_arr = np.full((g, g, pair_cap), zero_a, dtype=np.int32)
+    pb_arr = np.zeros((g, g, pair_cap), dtype=np.int32)
+    ps_arr = np.full((g, g, pair_cap), n_slots - 1, dtype=np.int32)
+    for d, (pa, pb, ps) in enumerate(per_dev_pairs):
+        r, c = divmod(d, g)
+        n = len(pa)
+        pa_arr[r, c, :n] = pa
+        pb_arr[r, c, :n] = pb
+        ps_arr[r, c, :n] = ps
+    aux["pa"], aux["pb"], aux["ps"] = pa_arr, pb_arr, ps_arr
+
+    # ---- cost model (what auto_select scores) ----------------------------
+    w_a = np.dtype(a_h.dtype).itemsize
+    w_b = np.dtype(b_h.dtype).itemsize
+    w_o = np.dtype(geom.out_dtype).itemsize
+    a_tile_bytes = store_a * bs * bs * w_a if sparse_a \
+        else geom.tm * tk * w_a
+    b_tile_bytes = tk * geom.tn * w_b            # B rides densified
+    c_tile_bytes = geom.tm * geom.tn * w_o
+    gather_bytes = (g - 1) * (a_tile_bytes + b_tile_bytes)
+    moved_bytes = sum(a_move_cap) * a_tile_bytes \
+        + sum(b_move_cap) * b_tile_bytes
+    reduce_bytes = (len(row_deltas) + len(col_deltas)) * c_tile_bytes
+    flops = 2.0 * pair_cap * (bs * bs * geom.tn if sparse_a
+                              else geom.tm * tk * geom.tn)
+    net_bytes = float(gather_bytes + moved_bytes + reduce_bytes)
+    # local traffic at the same granularity as the generic cost model: A
+    # blocks stream once per executed pair (the gather), the pooled B
+    # panel and the packed C accumulator are touched once
+    a_local = pair_cap * (bs * bs if sparse_a else geom.tm * tk) * w_a
+    local_bytes = a_local \
+        + (g + sum(b_move_cap)) * b_tile_bytes + n_out * c_tile_bytes
+    n_msgs = 2 + len(a_deltas) + len(b_deltas) \
+        + len(row_deltas) + len(col_deltas)
+    cost = {
+        "steps": 1.0,
+        "flops_per_step": flops,
+        "net_bytes_per_step": net_bytes,
+        "total_flops": flops,
+        "total_net_bytes": net_bytes,
+        "ai_net": _roofline.steal3d_internode_ai(
+            flops, gather_bytes, moved_bytes, reduce_bytes),
+        "ai_local": flops / local_bytes if local_bytes else float("inf"),
+        "n_msgs": float(n_msgs),
+        "gather_bytes": float(gather_bytes),
+        "moved_tile_bytes": float(moved_bytes),
+        "reduce_bytes": float(reduce_bytes),
+        "lpt_makespan": asg.makespan,
+        "owner_makespan": asg.owner_makespan,
+        "n_moved_items": float(asg.n_moved),
+    }
+    return StealPlan(
+        g=g, a_kind="bsr" if sparse_a else "dense", n_out=n_out,
+        n_slots=n_slots, pair_capacity=pair_cap, store_a=store_a,
+        b_chunks=b_chunks, a_deltas=tuple(a_deltas),
+        a_move_cap=tuple(a_move_cap), b_deltas=tuple(b_deltas),
+        b_move_cap=tuple(b_move_cap), row_deltas=tuple(row_deltas),
+        col_deltas=tuple(col_deltas), aux=aux, assignment=asg,
+        a_fingerprint=sa.fingerprint if sparse_a else None, cost=cost)

@@ -266,11 +266,12 @@ def symbolic_spgemm(a: TiledBSR, b: TiledBSR,
 
     max_nnzb = int(counts.max())
     if capacity is None:
-        capacity = bucket_capacity(max(max_nnzb, 1))
+        capacity = bucket_capacity(max_nnzb)
     elif capacity < max_nnzb:
         raise ValueError(f"capacity {capacity} < predicted max tile nnzb "
                          f"{max_nnzb}")
-    capacity = max(int(capacity), 1)
+    # a structurally empty product keeps capacity 0 (coverage blocks only)
+    capacity = int(capacity)
     store = capacity + nbr
 
     # Pass 2: packed C layout (mirrors BSR.from_dense padding +

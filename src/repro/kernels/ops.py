@@ -21,7 +21,8 @@ from .bsr_spmm import (bsr_pair_accumulate_pallas, bsr_pair_matmul_pallas,
 
 __all__ = [
     "default_impl", "bsr_spmm", "bsr_spmm_raw", "match_block_pairs",
-    "build_pair_lists", "bsr_pair_matmul", "bsr_pair_accumulate", "densify",
+    "build_pair_lists", "bsr_pair_matmul", "bsr_pair_accumulate",
+    "steal_pair_accumulate", "densify",
 ]
 
 
@@ -211,6 +212,27 @@ def bsr_pair_accumulate(a_blocks, b_blocks, pair_a, pair_b, pair_slot, *,
             a_blocks, b_blocks, pair_a, pair_b, pair_slot, n_slots=n_slots,
             interpret=(impl == "interpret"))
     return out.astype(out_dtype)
+
+
+def steal_pair_accumulate(a_pool, b_rows, pair_a, pair_b, pair_slot, *,
+                          n_slots: int, impl: Optional[str] = None,
+                          block_n: int = 256):
+    """Packed partial-C accumulation for the steal3d static dispatch.
+
+    ``a_pool`` is a device's pooled A blocks (row panel + moved tiles +
+    trailing zero block), ``b_rows`` its pooled dense B panel flattened to
+    bs-row chunks.  Each pair multiplies ``a_pool[pair_a[p]]`` against
+    chunk ``pair_b[p]`` and accumulates the [bs, n] product into output
+    row-block ``pair_slot[p]`` — exactly the :func:`bsr_spmm_raw` contract
+    with plan-built pair lists (``repro.core.steal3d``) standing in for a
+    tile's stored structure, so every impl path (ref / interpret / pallas)
+    is reused unchanged.  Contract: ``pair_slot`` nondecreasing, every
+    slot visited at least once (coverage pairs), dummy pairs reference the
+    zero block.
+    """
+    return bsr_spmm_raw(a_pool[pair_a], pair_slot, pair_b, b_rows,
+                        n_block_rows=n_slots, impl=impl, block_n=block_n,
+                        augment=False)
 
 
 def densify(blocks, rows, cols, *, n_block_rows: int, n_block_cols: int):

@@ -25,7 +25,7 @@ def _parse():
     p.add_argument("--devices", type=int, default=4)
     p.add_argument("--check", default="all",
                    choices=["all", "spmm", "spgemm", "spgemm_sparse",
-                            "dense", "api", "balance", "moe",
+                            "dense", "api", "balance", "steal3d", "moe",
                             "train_parallel"])
     p.add_argument("--seed", type=int, default=0)
     return p.parse_args()
@@ -46,7 +46,8 @@ def main() -> int:
     from repro.core.dist import make_grid_mesh
 
     needs_grid = args.check in ("all", "dense", "spmm", "spgemm",
-                                "spgemm_sparse", "api", "balance")
+                                "spgemm_sparse", "api", "balance",
+                                "steal3d")
     g = int(np.sqrt(args.devices))
     mesh = None
     if needs_grid:
@@ -156,6 +157,47 @@ def main() -> int:
                    plan.auto_scores is not None and
                    plan.algorithm.name == min(plan.auto_scores,
                                               key=plan.auto_scores.get))
+
+    if args.check in ("all", "steal3d"):
+        print(f"== steal3d static work-grid dispatch on {g}x{g} mesh ==")
+        from repro.core.bsr import rmat_matrix
+        a_d = rmat_matrix(scale=6, edgefactor=8, seed=args.seed)  # skewed
+        b = rng.standard_normal((64, 8)).astype(np.float32)
+        b_sp = random_sparse(64, 64, 0.1, seed=args.seed + 6)
+        a_h = DistBSR.from_dense(a_d, g=g, block_size=4)
+        b_h = DistDense.for_rhs(jnp.asarray(b), a_h)
+        b_sph = DistBSR.from_dense(b_sp, g=g, block_size=4)
+        plan = api.plan_matmul(a_h, b_h, mesh=mesh, algorithm="steal3d",
+                               impl="ref")
+        asg = plan.steal.assignment
+        check_flag(
+            f"steal3d/makespan<=owner ({asg.makespan:.0f} <= "
+            f"{asg.owner_makespan:.0f}, moved={asg.n_moved})",
+            asg.makespan <= asg.owner_makespan)
+        check("steal3d/spmm", plan(a_h, b_h), a_d @ b)
+        check("steal3d/spmm_vs_ring_c", plan(a_h, b_h),
+              api.matmul(a_h, b_h, mesh=mesh, algorithm="ring_c",
+                         impl="ref"))
+        check("steal3d/spgemm",
+              api.matmul(a_h, b_sph, mesh=mesh, algorithm="steal3d",
+                         impl="ref"), a_d @ b_sp)
+        da = rng.standard_normal((23, 19)).astype(np.float32)
+        db = rng.standard_normal((19, 11)).astype(np.float32)
+        check("steal3d/dense",
+              api.matmul(jnp.asarray(da), jnp.asarray(db), g=g, mesh=mesh,
+                         algorithm="steal3d"), da @ db)
+        # Pallas interpret path through the pooled pair-accumulate kernel
+        check("steal3d/spmm[interpret]",
+              api.matmul(a_h, b_h, mesh=mesh, algorithm="steal3d",
+                         impl="interpret"), a_d @ b)
+        # empty operand fast path (capacity 0) end-to-end (satellite)
+        e_h = DistBSR.from_dense(np.zeros((64, 64), np.float32), g=g,
+                                 block_size=4)
+        check_flag(f"steal3d/empty_capacity_0 (cap={e_h.capacity})",
+                   e_h.capacity == 0)
+        check("steal3d/empty_operand",
+              api.matmul(e_h, b_h, mesh=mesh, algorithm="steal3d",
+                         impl="ref"), np.zeros((64, 8), np.float32))
 
     if args.check in ("all", "api"):
         print(f"== plan-based API invariants on {g}x{g} mesh ==")

@@ -302,7 +302,7 @@ def test_legacy_algorithms_tuple_matches_registry():
     from repro.core import spmm as legacy
     assert legacy.ALGORITHMS == api.algorithms()
     assert set(legacy.ALGORITHMS) == {"summa_bcast", "summa_ag", "ring_c",
-                                      "ring_a", "ring_c_bidir"}
+                                      "ring_a", "ring_c_bidir", "steal3d"}
 
 
 # ---------------------------------------------------------------------------
@@ -698,6 +698,25 @@ def test_cols_balance_compensation_cached(operands):
     comp = b_h._col_compensated[a_bal.col_block_perm]
     matmul(a_bal, b_h, algorithm="ring_c", impl="ref")
     assert b_h._col_compensated[a_bal.col_block_perm] is comp
+
+
+def test_sparse_output_with_balance_fails_fast_and_actionably():
+    """plan_matmul must reject balance= operands for sparse outputs up
+    front, naming both workarounds (output="dense" / balance="none") —
+    not with a generic error deep in plan construction (ISSUE-4
+    satellite)."""
+    d = _skewed_rmat()
+    for h in (_manual_balanced_handle(d, 8),
+              _manual_cols_balanced_handle(d, 8)):
+        with pytest.raises(ValueError, match=r'output="dense"') as ei:
+            plan_matmul(h, DistBSR.from_dense(d, g=G, block_size=8),
+                        output="sparse")
+        assert 'balance="none"' in str(ei.value)
+    # auto degrades to a dense output instead of failing
+    h = _manual_balanced_handle(d, 8)
+    plan = plan_matmul(h, DistBSR.from_dense(d, g=G, block_size=8),
+                       output="auto", algorithm="ring_c", impl="ref")
+    assert plan.output == "dense"
 
 
 def test_densify_inverts_balance_perms():

@@ -11,10 +11,12 @@ Three classes of violation:
   implementation detail behind ``repro.kernels.ops`` and the planner;
   importing it directly bypasses impl dispatch, the coverage contract and
   the plan cache.
-* The SpGEMM symbolic phase ``repro.core.symbolic`` is internal to
-  ``repro/core``: its public surface (``symbolic_spgemm`` /
-  ``SymbolicProduct``) is re-exported by ``repro.core.api``, and plans own
-  the pair-list -> executable coupling.  Importing it anywhere outside
+* The SpGEMM symbolic phase ``repro.core.symbolic`` and the steal3d
+  planner ``repro.core.steal3d`` are internal to ``repro/core``: their
+  public surfaces are re-exported by / reachable through
+  ``repro.core.api`` (``symbolic_spgemm`` / ``SymbolicProduct`` /
+  ``plan_matmul(algorithm="steal3d")``), and plans own the
+  pair-list -> executable coupling.  Importing them anywhere outside
   ``src/repro/core`` bypasses the structure-keyed plan cache.
 
 This script AST-scans each module's watched directories for imports and
@@ -45,6 +47,15 @@ FORBIDDEN_MODULES = {
     },
     "repro.core.symbolic": {
         "parent": "repro.core", "leaf": "symbolic",
+        "dirs": ("examples", "benchmarks", "tools", "tests", "src/repro"),
+        "allow": ("src/repro/core",),
+    },
+    # The steal3d planner couples LPT assignments to executables the same
+    # way the symbolic phase couples pair lists: plans own that coupling,
+    # so the builder is internal to repro/core (use
+    # plan_matmul(algorithm="steal3d")).
+    "repro.core.steal3d": {
+        "parent": "repro.core", "leaf": "steal3d",
         "dirs": ("examples", "benchmarks", "tools", "tests", "src/repro"),
         "allow": ("src/repro/core",),
     },

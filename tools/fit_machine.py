@@ -125,6 +125,10 @@ def _g1_records(payload: Dict) -> List[Dict]:
         if name not in api.REGISTRY:
             continue
         alg = api.REGISTRY.get(name)
+        if alg.cost_fn is not None:
+            # structure-dependent cost (steal3d) can't be reconstructed
+            # from the recorded geometry alone; those records are skipped
+            continue
         cm = api._cost_model(alg, geom, a_h.abstract_key(),
                              b_h.abstract_key())
         out.append({"cm": cm, "alg": alg, "source": f"g1/{name}",
@@ -159,6 +163,9 @@ def _balance_records(payload: Dict) -> List[Dict]:
             if name not in api.REGISTRY or "per_multiply_s" not in metrics:
                 continue
             alg = api.REGISTRY.get(name)
+            if alg.cost_fn is not None:
+                continue                 # see _g1_records
+
             cm = api._cost_model(alg, geom, a_key, b_key)
             out.append({"cm": cm, "alg": alg,
                         "source": f"balance/{mode}/{name}",
