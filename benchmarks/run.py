@@ -10,11 +10,12 @@ rest run in-process.
   PYTHONPATH=src python -m benchmarks.run --json     # write BENCH_kernels.json
 
 ``--json`` runs the kernel micro-bench plus the balanced-tiling,
-dense-vs-sparse-output SpGEMM and static-work-stealing experiments (R-MAT
-on a 4x4 grid, each in a 16-device subprocess) and writes
-``BENCH_kernels.json`` at the repo root: plan build time, per-multiply
-time, padded-flop waste, output footprint and predicted-vs-measured cost
-per algorithm — the perf-trajectory baseline for future PRs.  Each
+dense-vs-sparse-output SpGEMM, static-work-stealing and padded-vs-packed
+wire experiments (R-MAT on a 4x4 grid, each in a 16-device subprocess)
+and writes ``BENCH_kernels.json`` at the repo root: plan build time,
+per-multiply time, padded-flop waste, output footprint,
+``wire_bytes_padded`` vs ``wire_bytes_packed`` and predicted-vs-measured
+cost per algorithm — the perf-trajectory baseline for future PRs.  Each
 baseline refresh also re-fits the network constants of the cost model
 (``tools/fit_machine.py``) from its own records and embeds the calibrated
 preset plus per-record predicted-vs-measured drift under ``machine_fit``.
@@ -108,7 +109,8 @@ def _write_json(smoke: bool) -> None:
     for module, section in (
             ("benchmarks.balance_bench", "balance_rmat_4x4"),
             ("benchmarks.spgemm_bench", "spgemm_rmat_4x4"),
-            ("benchmarks.steal_bench", "steal_rmat_4x4")):
+            ("benchmarks.steal_bench", "steal_rmat_4x4"),
+            ("benchmarks.wire_bench", "wire_rmat_4x4")):
         raw = _run_subprocess(module, 16, *extra, quiet=True)
         try:
             payload[section] = json.loads(raw) if raw else {
@@ -162,8 +164,10 @@ def main() -> None:
         from benchmarks import kernels_bench
         kernels_bench.main(smoke=True)
         ok = True
+        # wire_bench additionally *asserts* packed wire bytes <= padded and
+        # packed results allclose to padded (exits non-zero on violation)
         for module in ("benchmarks.balance_bench", "benchmarks.spgemm_bench",
-                       "benchmarks.steal_bench"):
+                       "benchmarks.steal_bench", "benchmarks.wire_bench"):
             raw = _run_subprocess(module, 16, "--smoke", quiet=True)
             name = module.rsplit(".", 1)[1]
             print(f"smoke,{name},{'ok' if raw else 'FAILED'}")

@@ -50,17 +50,30 @@ densification, and the plan returns a :class:`DistBSR` so chained
 multiplies ``matmul(matmul(A, A), A)`` stay packed end to end.  See
 DESIGN.md "Symbolic/numeric SpGEMM".
 
+Plans can additionally use the **packed wire format** (``wire="packed"``;
+:mod:`repro.core.wire`): every sparse operand shipment — ring ppermutes,
+SUMMA broadcasts/all-gathers, steal3d panel gathers, moved-tile rounds
+and partial-C reductions, and the sparse-output pair traffic — carries
+only *real* blocks at a bucketed wire capacity, with plan-time consume
+maps (static gathers) reconstructing structure on the receiver.  Packed
+plans are specialized to the operands' structure (fingerprints join the
+cache key); ``wire="auto"`` packs the already-structure-keyed
+sparse-output plans and keeps dense-output plans padded so bucketed
+handles keep sharing cached executables.
+
 Two hot-loop invariants the bodies maintain (asserted by the jaxpr test in
 ``tests/test_api.py``): sparse A tiles arrive *pre-augmented* from
 :class:`~repro.core.bsr.TiledBSR` (no coverage concat+sort inside the
-scanned step), and sparse B tiles are densified once per ring pass, before
-the scan (``_densify_b``), never inside it.
+scanned step), and sparse B tiles never scatter inside the scan — padded
+plans densify once per ring pass before the scan (``_densify_b``), packed
+plans densify per step by a static *gather* (``ops.densify_packed``).
 
 The legacy free functions in ``core/spmm.py`` remain as deprecated shims
 delegating to the shared plan cache here.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -77,12 +90,14 @@ from . import roofline as _roofline
 from . import schedule as _schedule
 from . import steal3d as _steal3d
 from . import symbolic as _symbolic
+from . import wire as _wire
 from .bsr import TiledBSR
 from .dist import (make_grid_mesh, place_b_for_stationary_a, skew_bsr,
                    skew_dense, unskew_c_rows)
 from .grid import ProcessGrid, pad_to_multiple
 from .symbolic import (SymbolicProduct, predicted_density,  # re-export
                        symbolic_spgemm)                     # (public)
+from .wire import PackedOperand, wire_capacity              # re-export
 
 __all__ = [
     "NATURAL", "SKEW_ROWS", "SKEW_COLS", "STATIONARY_A", "PLACEMENTS",
@@ -91,8 +106,9 @@ __all__ = [
     "algorithms", "sparse_algorithms", "auto_select", "recommended_balance",
     "MatmulPlan", "plan_matmul", "matmul",
     "SymbolicProduct", "symbolic_spgemm", "predicted_density",
+    "PackedOperand", "wire_capacity",
     "add_trace_hook", "remove_trace_hook",
-    "clear_plan_cache", "plan_cache_size",
+    "clear_plan_cache", "plan_cache_size", "cache_stats",
     "validate_mesh",
 ]
 
@@ -168,20 +184,77 @@ def _pvary(x, geom: _Geom):
 # ---------------------------------------------------------------------------
 # Algorithm registry
 # ---------------------------------------------------------------------------
+class _LRUCache:
+    """Small bounded cache: access-ordered, with an eviction counter.
+
+    Plans, symbolic products and steal plans are all keyed (in part) on
+    sparsity *structure*, so a long-running serving process that sees a
+    stream of distinct structures would otherwise grow these caches — and
+    the jitted executables / host index arrays they pin — without limit.
+    Eviction is safe by construction: every entry is rebuilt on demand
+    from its operands, so a cap only costs a rebuild on re-miss.
+    ``evictions`` counts capacity evictions (not explicit invalidation)
+    for observability; ``clear()`` resets entries but keeps the counter.
+    """
+
+    def __init__(self, maxsize: int):
+        self.maxsize = int(maxsize)
+        self.evictions = 0
+        self._d: "collections.OrderedDict" = collections.OrderedDict()
+
+    def get(self, key, default=None):
+        try:
+            value = self._d[key]
+        except KeyError:
+            return default
+        self._d.move_to_end(key)
+        return value
+
+    def __setitem__(self, key, value) -> None:
+        if key in self._d:
+            self._d.move_to_end(key)
+        self._d[key] = value
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def __delitem__(self, key) -> None:
+        del self._d[key]
+
+    def __contains__(self, key) -> bool:
+        return key in self._d
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __iter__(self):
+        return iter(list(self._d))
+
+    def clear(self) -> None:
+        self._d.clear()
+
+
+# Cache caps: small multiples of what a serving process legitimately keeps
+# hot (a handful of operand structures x a few schedules/outputs each).
+PLAN_CACHE_MAX = 128
+SYMBOLIC_CACHE_MAX = 32
+DENSITY_CACHE_MAX = 256
+STEAL_CACHE_MAX = 32
+
 # Shared plan cache (defined before the registry: registering over an
 # existing algorithm name must evict that name's cached plans).
-_PLAN_CACHE: Dict[tuple, "MatmulPlan"] = {}
+_PLAN_CACHE = _LRUCache(PLAN_CACHE_MAX)
 # Symbolic-phase results, keyed on the operands' structure fingerprints
 # (sparsity structure, not values): repeated sparse-output plans for the
 # same structures skip the host-side pair-list construction.  Density-only
 # results (the cheap prefix consulted by output="auto") cache separately so
 # auto decisions that resolve to dense never build pair lists.
-_SYMBOLIC_CACHE: Dict[tuple, "SymbolicProduct"] = {}
-_DENSITY_CACHE: Dict[tuple, float] = {}
+_SYMBOLIC_CACHE = _LRUCache(SYMBOLIC_CACHE_MAX)
+_DENSITY_CACHE = _LRUCache(DENSITY_CACHE_MAX)
 # steal3d assignments + pair lists, keyed on abstract shapes and (for
 # sparse A) the structure fingerprint: repeated plans / auto_select scores
 # for the same operands skip the host-side LPT + list construction.
-_STEAL_CACHE: Dict[tuple, "_steal3d.StealPlan"] = {}
+_STEAL_CACHE = _LRUCache(STEAL_CACHE_MAX)
 
 
 def clear_plan_cache() -> None:
@@ -193,6 +266,16 @@ def clear_plan_cache() -> None:
 
 def plan_cache_size() -> int:
     return len(_PLAN_CACHE)
+
+
+def cache_stats() -> Dict[str, Dict[str, int]]:
+    """Sizes, caps and capacity-eviction counts of the plan-layer caches."""
+    return {name: {"size": len(c), "maxsize": c.maxsize,
+                   "evictions": c.evictions}
+            for name, c in (("plans", _PLAN_CACHE),
+                            ("symbolic", _SYMBOLIC_CACHE),
+                            ("density", _DENSITY_CACHE),
+                            ("steal", _STEAL_CACHE))}
 
 
 def _evict_plans_for_algorithm(name: str) -> None:
@@ -233,16 +316,30 @@ class Algorithm:
     balance_axis: str = "rows"              # operand balance this schedule
                                             # benefits from (planner hint)
     static_planner: Optional[Callable] = None
-                                            # (a_h, b_h, geom) -> StealPlan:
-                                            # plan-time builder of a static
-                                            # work-grid dispatch; the body
-                                            # then runs as body(a, b, aux,
-                                            # geom, steal_plan)
-    cost_fn: Optional[Callable] = None      # (alg, geom, a_h, b_h) -> cost
-                                            # dict, replacing the generic
-                                            # _cost_model for schedules
-                                            # whose cost is structure-
-                                            # dependent (steal3d)
+                                            # (a_h, b_h, geom, wire) ->
+                                            # StealPlan: plan-time builder
+                                            # of a static work-grid
+                                            # dispatch; the body then runs
+                                            # as body(a, b, aux, geom,
+                                            # steal_plan)
+    cost_fn: Optional[Callable] = None      # (alg, geom, a_h, b_h, wire)
+                                            # -> cost dict, replacing the
+                                            # generic _cost_model for
+                                            # schedules whose cost is
+                                            # structure-dependent (steal3d)
+    packed_body: Optional[Callable] = None  # packed-wire dense-output body
+                                            # body(a, b, aux, geom); aux is
+                                            # the wire_planner's array dict
+    packable: Tuple[str, ...] = ()          # operands this schedule can
+                                            # ship packed ("a"/"b"); the
+                                            # sparse-output path packs both
+                                            # operands for every schedule
+    wire_planner: Optional[Callable] = None
+                                            # (a_po, b_po, geom) -> aux
+                                            # dict of [g, g, ...] arrays
+                                            # (consume maps for the packed
+                                            # body; None po => operand not
+                                            # packed on this plan)
 
 
 class AlgorithmRegistry:
@@ -302,6 +399,9 @@ def register_algorithm(name: str, *, a_placement: str = NATURAL,
                        balance_axis: str = "rows",
                        static_planner: Optional[Callable] = None,
                        cost_fn: Optional[Callable] = None,
+                       packed_body: Optional[Callable] = None,
+                       packable: Tuple[str, ...] = (),
+                       wire_planner: Optional[Callable] = None,
                        registry: AlgorithmRegistry = REGISTRY):
     """Decorator registering a shard_map body as a named algorithm."""
     def deco(body):
@@ -311,7 +411,9 @@ def register_algorithm(name: str, *, a_placement: str = NATURAL,
             wire_amortized=wire_amortized, style=style, duplex=duplex,
             msgs_per_step=msgs_per_step, sparse_body=sparse_body,
             k_order=k_order, balance_axis=balance_axis,
-            static_planner=static_planner, cost_fn=cost_fn))
+            static_planner=static_planner, cost_fn=cost_fn,
+            packed_body=packed_body, packable=packable,
+            wire_planner=wire_planner))
         return body
     return deco
 
@@ -414,10 +516,234 @@ def _sparse_body_ring_c(a, b, pairs, geom: _Geom):
 
 
 # ---------------------------------------------------------------------------
+# Packed-wire dense-output bodies (plan_matmul(wire="packed"))
+# ---------------------------------------------------------------------------
+# The packed variants ship ONLY real blocks: a sparse A tile rides as a
+# packed [wire_capacity, bs, bs] buffer (no coverage blocks, no rows/cols
+# index traffic) and a sparse B tile likewise, densified on the consumer
+# by a static *gather* (ops.densify_packed) instead of the pre-scan
+# scatter.  All structure lives in plan-time consume maps (repro.core.wire)
+# riding as scan inputs — per-device local data, never on the network —
+# so the scanned steps stay sort/scatter-free (the jaxpr invariant).
+def _ring_perm(g: int, sign: int = 1):
+    return [((d + sign) % g, d) for d in range(g)]
+
+
+def _packed_a_mm(a_blocks, gidx, rows, cols, b_dense, geom: _Geom):
+    """One packed local SpMM step: gather the coverage-augmented block
+    list out of the packed buffer, then the standard augment-free kernel."""
+    return kops.bsr_spmm_raw(a_blocks[gidx], rows, cols, b_dense,
+                             n_block_rows=geom.a_nbr, impl=geom.impl,
+                             augment=False).astype(geom.out_dtype)
+
+
+def _packed_b_dense(b_buf, dmap, geom: _Geom):
+    return kops.densify_packed(b_buf, dmap, n_block_rows=geom.b_nbr,
+                               n_block_cols=geom.b_nbc)
+
+
+def _packed_body_ring_c(a, b, aux, geom: _Geom):
+    """Stationary-C ring over packed wire buffers (paper Alg 2)."""
+    b_packed = "b_dmap" in aux
+    b0 = b["blocks"] if b_packed else _densify_b(b, geom)["dense"]
+    xs = {"ag": aux["a_gidx"], "ar": aux["a_rows"], "ac": aux["a_cols"]}
+    if b_packed:
+        xs["bd"] = aux["b_dmap"]
+
+    def step(carry, xs):
+        a_blk, b_buf, c = carry
+        a_n = lax.ppermute(a_blk, geom.axc, _ring_perm(geom.g))  # prefetch
+        b_n = lax.ppermute(b_buf, geom.axr, _ring_perm(geom.g))
+        b_dense = _packed_b_dense(b_buf, xs["bd"], geom) if b_packed \
+            else b_buf
+        c = c + _packed_a_mm(a_blk, xs["ag"], xs["ar"], xs["ac"], b_dense,
+                             geom)
+        return (a_n, b_n, c), None
+
+    c0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
+    (_, _, c), _ = lax.scan(step, (a["blocks"], b0, c0), xs)
+    return c
+
+
+def _packed_body_ring_c_bidir(a, b, aux, geom: _Geom):
+    """Bidirectional stationary-C ring, A packed in both directions.
+
+    B's column half-panels are not block-aligned (tn // 2 need not be a
+    block multiple), so B rides densified as in the padded body; only the
+    A streams — the bidir schedule's doubled wire term — pack.
+    """
+    b = _densify_b(b, geom)
+    half = geom.tn // 2
+    b_fwd, b_bwd = b["dense"][:, :half], b["dense"][:, half:]
+    xs = {"fg": aux["a_gidx"], "fr": aux["a_rows"], "fc": aux["a_cols"],
+          "bg": aux["a_gidx_bwd"], "br": aux["a_rows_bwd"],
+          "bc": aux["a_cols_bwd"]}
+
+    def step(carry, xs):
+        a_f, a_b, b_f, b_b, c_l, c_r = carry
+        a_fn = lax.ppermute(a_f, geom.axc, _ring_perm(geom.g, +1))
+        a_bn = lax.ppermute(a_b, geom.axc, _ring_perm(geom.g, -1))
+        b_fn = lax.ppermute(b_f, geom.axr, _ring_perm(geom.g, +1))
+        b_bn = lax.ppermute(b_b, geom.axr, _ring_perm(geom.g, -1))
+        c_l = c_l + _packed_a_mm(a_f, xs["fg"], xs["fr"], xs["fc"], b_f,
+                                 geom)
+        c_r = c_r + _packed_a_mm(a_b, xs["bg"], xs["br"], xs["bc"], b_b,
+                                 geom)
+        return (a_fn, a_bn, b_fn, b_bn, c_l, c_r), None
+
+    c_l0 = _pvary(jnp.zeros((geom.tm, half), dtype=geom.out_dtype), geom)
+    c_r0 = _pvary(jnp.zeros((geom.tm, geom.tn - half),
+                            dtype=geom.out_dtype), geom)
+    (_, _, _, _, c_l, c_r), _ = lax.scan(
+        step, (a["blocks"], a["blocks"], b_fwd, b_bwd, c_l0, c_r0), xs)
+    return jnp.concatenate([c_l, c_r], axis=1)
+
+
+def _packed_body_ring_a(a, b, aux, geom: _Geom):
+    """Stationary-A ring with the sparse B operand packed on the wire.
+
+    A never moves (nothing to pack); the win is B riding as real blocks
+    instead of a densified tile, gather-densified each step.  Partial C
+    tiles still ride back dense — their structure differs per hop (the
+    ROADMAP's sparse-output ring_a item).
+    """
+    acc0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
+
+    def step(carry, bd):
+        b_blk, acc = carry
+        b_n = lax.ppermute(b_blk, geom.axr, _ring_perm(geom.g))  # prefetch
+        acc = acc + _local_mm(a, {"dense": _packed_b_dense(b_blk, bd, geom)},
+                              geom)
+        acc = lax.ppermute(acc, geom.axc, _ring_perm(geom.g))
+        return (b_n, acc), None
+
+    (_, acc), _ = lax.scan(step, (b["blocks"], acc0), aux["b_dmap"])
+    return acc
+
+
+def _packed_body_summa_ag(a, b, aux, geom: _Geom):
+    """All-gather SUMMA over packed panels (per-source packed segments)."""
+    b_packed = "b_dmap" in aux
+    a_pool = lax.all_gather(a["blocks"], geom.axc)   # [g, wc_a, bs, bs]
+    a_flat = a_pool.reshape((-1,) + a_pool.shape[-2:])
+    xs = {"ag": aux["a_gidx"], "ar": aux["a_rows"], "ac": aux["a_cols"]}
+    if b_packed:
+        b_pool = lax.all_gather(b["blocks"], geom.axr)
+        b_flat = b_pool.reshape((-1,) + b_pool.shape[-2:])
+        xs["bd"] = aux["b_dmap"]
+    else:
+        b_g = lax.all_gather(_densify_b(b, geom)["dense"], geom.axr)
+        xs["k"] = jnp.arange(geom.g)
+
+    def step(c, xs):
+        b_dense = _packed_b_dense(b_flat, xs["bd"], geom) if b_packed \
+            else b_g[xs["k"]]
+        c = c + _packed_a_mm(a_flat, xs["ag"], xs["ar"], xs["ac"], b_dense,
+                             geom)
+        return c, None
+
+    c0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
+    c, _ = lax.scan(step, c0, xs)
+    return c
+
+
+def _packed_body_summa_bcast(a, b, aux, geom: _Geom):
+    """Bulk-synchronous SUMMA broadcasting packed buffers per inner step."""
+    b_packed = "b_dmap" in aux
+    my_row = lax.axis_index(geom.axr)
+    my_col = lax.axis_index(geom.axc)
+    b0 = b["blocks"] if b_packed else _densify_b(b, geom)["dense"]
+    xs = {"ag": aux["a_gidx"], "ar": aux["a_rows"], "ac": aux["a_cols"],
+          "k": jnp.arange(geom.g)}
+    if b_packed:
+        xs["bd"] = aux["b_dmap"]
+
+    def step(c, xs):
+        k = xs["k"]
+        a_k = lax.psum(jnp.where(my_col == k, a["blocks"],
+                                 jnp.zeros_like(a["blocks"])), geom.axc)
+        b_k = lax.psum(jnp.where(my_row == k, b0, jnp.zeros_like(b0)),
+                       geom.axr)
+        b_dense = _packed_b_dense(b_k, xs["bd"], geom) if b_packed else b_k
+        c = c + _packed_a_mm(a_k, xs["ag"], xs["ar"], xs["ac"], b_dense,
+                             geom)
+        return c, None
+
+    c0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
+    c, _ = lax.scan(step, c0, xs)
+    return c
+
+
+# ---- per-schedule wire planners (consume-map construction) ----------------
+def _wire_consume(aux, prefix, po, tiles, bases=None):
+    cons = _wire.schedule_consume(po, tiles, bases)
+    aux[f"{prefix}_gidx"] = cons["gidx"]
+    aux[f"{prefix}_rows"] = cons["rows"]
+    aux[f"{prefix}_cols"] = cons["cols"]
+
+
+def _wire_planner_ring_c(a_po, b_po, geom: _Geom):
+    aux: Dict[str, np.ndarray] = {}
+    if a_po is not None:
+        _wire_consume(aux, "a", a_po, _wire.tiles_ring_c(geom.g))
+    if b_po is not None:
+        aux["b_dmap"] = _wire.schedule_dense_map(
+            b_po, _wire.tiles_ring_c_b(geom.g))
+    return aux
+
+
+def _wire_planner_ring_c_bidir(a_po, b_po, geom: _Geom):
+    aux: Dict[str, np.ndarray] = {}
+    _wire_consume(aux, "a", a_po, _wire.tiles_ring_c(geom.g))
+    cons = _wire.schedule_consume(a_po, _wire.tiles_ring_c_bwd(geom.g))
+    aux["a_gidx_bwd"] = cons["gidx"]
+    aux["a_rows_bwd"] = cons["rows"]
+    aux["a_cols_bwd"] = cons["cols"]
+    return aux
+
+
+def _wire_planner_ring_a(a_po, b_po, geom: _Geom):
+    return {"b_dmap": _wire.schedule_dense_map(
+        b_po, _wire.tiles_ring_a_b(geom.g))}
+
+
+def _summa_bases(g: int, wc: int) -> np.ndarray:
+    """Flat base offset of inner step k's tile in an all-gathered pool."""
+    return np.broadcast_to(np.arange(g, dtype=np.int64) * wc, (g, g, g))
+
+
+def _wire_planner_summa_ag(a_po, b_po, geom: _Geom):
+    g = geom.g
+    aux: Dict[str, np.ndarray] = {}
+    if a_po is not None:
+        _wire_consume(aux, "a", a_po, _wire.tiles_summa_a(g),
+                      _summa_bases(g, a_po.wire_capacity))
+    if b_po is not None:
+        aux["b_dmap"] = _wire.schedule_dense_map(
+            b_po, _wire.tiles_summa_b(g),
+            _summa_bases(g, b_po.wire_capacity))
+    return aux
+
+
+def _wire_planner_summa_bcast(a_po, b_po, geom: _Geom):
+    g = geom.g
+    aux: Dict[str, np.ndarray] = {}
+    if a_po is not None:
+        _wire_consume(aux, "a", a_po, _wire.tiles_summa_a(g))
+    if b_po is not None:
+        aux["b_dmap"] = _wire.schedule_dense_map(b_po,
+                                                 _wire.tiles_summa_b(g))
+    return aux
+
+
+# ---------------------------------------------------------------------------
 # Algorithm bodies (run inside shard_map on local tile views)
 # ---------------------------------------------------------------------------
 @register_algorithm("summa_bcast", style="bsp",
                     sparse_body=_sparse_body_summa_bcast,
+                    packed_body=_packed_body_summa_bcast,
+                    packable=("a", "b"),
+                    wire_planner=_wire_planner_summa_bcast,
                     k_order=lambda i, j, t, g: t + 0 * (i + j))
 def _body_summa_bcast(a, b, geom: _Geom):
     """Bulk-synchronous SUMMA (paper SS2.2): a broadcast per inner step."""
@@ -437,6 +763,9 @@ def _body_summa_bcast(a, b, geom: _Geom):
 
 @register_algorithm("summa_ag", style="bsp", wire_amortized=True,
                     sparse_body=_sparse_body_summa_ag,
+                    packed_body=_packed_body_summa_ag,
+                    packable=("a", "b"),
+                    wire_planner=_wire_planner_summa_ag,
                     k_order=lambda i, j, t, g: t + 0 * (i + j))
 def _body_summa_ag(a, b, geom: _Geom):
     """All-gather SUMMA: one big up-front collective, g x tile footprint."""
@@ -456,6 +785,9 @@ def _body_summa_ag(a, b, geom: _Geom):
 
 @register_algorithm("ring_c", a_placement=SKEW_ROWS, b_placement=SKEW_COLS,
                     sparse_body=_sparse_body_ring_c,
+                    packed_body=_packed_body_ring_c,
+                    packable=("a", "b"),
+                    wire_planner=_wire_planner_ring_c,
                     k_order=lambda i, j, t, g: (i + j + t) % g)
 def _body_ring_c(a, b, geom: _Geom):
     """Paper Alg 2 (stationary-C): skewed placement + neighbour ppermute."""
@@ -476,7 +808,9 @@ def _body_ring_c(a, b, geom: _Geom):
 
 
 @register_algorithm("ring_a", b_placement=STATIONARY_A, unskew_out="rows",
-                    wire=("b", "c"), balance_axis="cols")
+                    wire=("b", "c"), balance_axis="cols",
+                    packed_body=_packed_body_ring_a, packable=("b",),
+                    wire_planner=_wire_planner_ring_a)
 def _body_ring_a(a, b, geom: _Geom):
     """Paper Alg 1 (stationary-A): B rides the ring, partial C rides back."""
     b = _densify_b(b, geom)
@@ -498,6 +832,8 @@ def _body_ring_a(a, b, geom: _Geom):
 
 @register_algorithm("ring_c_bidir", a_placement=SKEW_ROWS,
                     b_placement=SKEW_COLS, wire=("a", "a", "b"), duplex=2,
+                    packed_body=_packed_body_ring_c_bidir, packable=("a",),
+                    wire_planner=_wire_planner_ring_c_bidir,
                     msgs_per_step=4)   # a_fwd, a_bwd, b_left, b_right
 def _body_ring_c_bidir(a, b, geom: _Geom):
     """Bidirectional stationary-C ring: C split into column half-panels.
@@ -539,35 +875,39 @@ def _body_ring_c_bidir(a, b, geom: _Geom):
 # ---------------------------------------------------------------------------
 # steal3d: static 3D work-grid dispatch from the stealing equilibrium
 # ---------------------------------------------------------------------------
-def _steal_plan_for(a_h: "DistMatrix", b_h: "DistMatrix",
-                    geom: _Geom) -> "_steal3d.StealPlan":
+def _steal_plan_for(a_h: "DistMatrix", b_h: "DistMatrix", geom: _Geom,
+                    wire: str = "padded") -> "_steal3d.StealPlan":
     """Memoized steal3d planner (LPT assignment + pair lists + rounds).
 
     auto_select scoring shares this cache with plan construction: the one
-    full build per operand structure also serves the cost entry, and is
-    reused outright if steal3d wins the race.
+    full build per operand structure (and wire mode) also serves the cost
+    entry, and is reused outright if steal3d wins the race.
     """
     skey = a_h.structure_key() if isinstance(a_h, DistBSR) else None
-    key = (a_h.abstract_key(), b_h.abstract_key(), skey)
+    if not (wire == "packed" and isinstance(a_h, DistBSR)):
+        wire = "padded"      # dense A has no packable steal3d traffic
+    key = (a_h.abstract_key(), b_h.abstract_key(), skey, wire)
     sp = _STEAL_CACHE.get(key)
     if sp is None:
-        sp = _steal3d.build_steal_plan(a_h, b_h, geom)
+        sp = _steal3d.build_steal_plan(a_h, b_h, geom, wire=wire)
         _STEAL_CACHE[key] = sp
     return sp
 
 
 def _steal3d_cost(alg: "Algorithm", geom: _Geom, a_h: "DistMatrix",
-                  b_h: "DistMatrix") -> Dict[str, float]:
+                  b_h: "DistMatrix", wire: str = "padded"
+                  ) -> Dict[str, float]:
     """auto_select cost entry: the *simulated equilibrium* made a score.
 
     The flop term is the realized LPT makespan (pair capacity — executed
     block products on the most-loaded device, padding included) and the
-    byte term counts panel gathers + moved tiles + owner reductions, so
-    ``algorithm="auto"`` picks steal3d exactly when the plan-time stealing
-    simulation says the equilibrium beats every owner-computes schedule's
-    capacity-padded uniform work.
+    byte term counts panel gathers + moved tiles + owner reductions —
+    packed to real blocks when ``wire="packed"`` — so ``algorithm="auto"``
+    picks steal3d exactly when the plan-time stealing simulation says the
+    equilibrium beats every owner-computes schedule's capacity-padded
+    uniform work.
     """
-    return dict(_steal_plan_for(a_h, b_h, geom).cost)
+    return dict(_steal_plan_for(a_h, b_h, geom, wire=wire).cost)
 
 
 def _steal3d_perm(g: int, delta: int):
@@ -575,7 +915,8 @@ def _steal3d_perm(g: int, delta: int):
 
 
 @register_algorithm("steal3d", style="bsp", wire=("a", "b", "c"),
-                    static_planner=_steal_plan_for, cost_fn=_steal3d_cost)
+                    static_planner=_steal_plan_for, cost_fn=_steal3d_cost,
+                    packable=("a",))
 def _body_steal3d(a, b, aux, geom: _Geom, splan: "_steal3d.StealPlan"):
     """Static realization of the paper's SS3.4 locality-aware work stealing.
 
@@ -586,10 +927,18 @@ def _body_steal3d(a, b, aux, geom: _Geom, splan: "_steal3d.StealPlan"):
     the stealing equilibrium's makespan, not the uniform g x capacity of
     the owner-computes rings), and ships partial C tiles home in static
     reduce rounds.  No scan: the whole dispatch is one flat program.
+
+    Under ``splan.wire == "packed"`` (sparse A) every A-side shipment
+    carries only real blocks: the panel gather rides at the packed wire
+    capacity, each moved-tile round is sliced to its own per-move real
+    max (the packed prefix makes that a slice, not a gather), and the
+    partial-C reduce rounds ship only the block-rows their items can
+    touch, scatter-added into the owner's tile outside any scan.
     """
     g = geom.g
+    packed = splan.wire == "packed"
     if splan.a_kind == "bsr":
-        a_tiles = lax.all_gather(a["blocks"], geom.axc)  # [g, store, bs, bs]
+        a_tiles = lax.all_gather(a["blocks"], geom.axc)  # [g, stride, bs, bs]
     else:
         a_tiles = lax.all_gather(a["dense"], geom.axc)   # [g, tm, tk]
     b_dense = _densify_b(b, geom)["dense"]
@@ -597,21 +946,36 @@ def _body_steal3d(a, b, aux, geom: _Geom, splan: "_steal3d.StealPlan"):
     # moved tiles: one ppermute round per hop distance, source-side static
     # gather indices select what each source packs (paper's "one moving
     # tile" for locality-constrained steals)
-    a_pool = [a_tiles]
-    for delta in splan.a_deltas:
-        buf = a_tiles[aux[f"amk{delta}"]]
-        a_pool.append(lax.ppermute(buf, geom.axr, _steal3d_perm(g, delta)))
+    if packed:
+        # flat segments: strides differ per round (per-move real max)
+        segs = [a_tiles.reshape((-1,) + a_tiles.shape[-2:])]
+        for delta, rcap in zip(splan.a_deltas, splan.a_round_cap):
+            buf = a_tiles[aux[f"amk{delta}"]][:, :rcap]
+            segs.append(
+                lax.ppermute(buf, geom.axr, _steal3d_perm(g, delta))
+                .reshape((-1,) + a_tiles.shape[-2:]))
+        segs.append(_pvary(jnp.zeros((1,) + a_tiles.shape[-2:],
+                                     a_tiles.dtype), geom))
+        a_pool = jnp.concatenate(segs)
+    else:
+        pool = [a_tiles]
+        for delta in splan.a_deltas:
+            buf = a_tiles[aux[f"amk{delta}"]]
+            pool.append(lax.ppermute(buf, geom.axr,
+                                     _steal3d_perm(g, delta)))
+        a_pool = jnp.concatenate(pool) if len(pool) > 1 else pool[0]
+        zero_a = _pvary(jnp.zeros((1,) + a_pool.shape[1:], a_pool.dtype),
+                        geom)
+        a_pool = jnp.concatenate([a_pool, zero_a])
     b_pool = [b_tiles]
     for delta in splan.b_deltas:
         buf = b_tiles[aux[f"bmk{delta}"]]
         b_pool.append(lax.ppermute(buf, geom.axc, _steal3d_perm(g, delta)))
-    a_pool = jnp.concatenate(a_pool) if len(a_pool) > 1 else a_pool[0]
     b_pool = jnp.concatenate(b_pool) if len(b_pool) > 1 else b_pool[0]
-    zero_a = _pvary(jnp.zeros((1,) + a_pool.shape[1:], a_pool.dtype), geom)
-    a_pool = jnp.concatenate([a_pool, zero_a])
     pa, pb, ps = aux["pa"], aux["pb"], aux["ps"]
     if splan.a_kind == "bsr":
-        blocks = a_pool.reshape((-1,) + a_pool.shape[-2:])
+        blocks = a_pool if packed \
+            else a_pool.reshape((-1,) + a_pool.shape[-2:])
         b_flat = b_pool.reshape(-1, b_pool.shape[-1])
         c = kops.steal_pair_accumulate(blocks, b_flat, pa, pb, ps,
                                        n_slots=splan.n_slots,
@@ -623,6 +987,25 @@ def _body_steal3d(a, b, aux, geom: _Geom, splan: "_steal3d.StealPlan"):
         c = jax.ops.segment_sum(prods, ps, num_segments=splan.n_out,
                                 indices_are_sorted=True)
     own = c[0]
+    if packed:
+        # row-packed reduce rounds: ship only the block-rows the sender's
+        # items can touch; receivers scatter-add them home (a dummy target
+        # row absorbs the padding).  This is outside any scan, so the
+        # hot-loop jaxpr invariants are unaffected.
+        nbr, bs = geom.a_nbr, geom.tm // geom.a_nbr
+        c_rows = c.reshape(splan.n_out, nbr, bs, geom.tn)
+        own_ext = jnp.concatenate(
+            [c_rows[0],
+             _pvary(jnp.zeros((1, bs, geom.tn), c.dtype), geom)])
+        for axis, deltas in ((geom.axc, splan.row_deltas),
+                             (geom.axr, splan.col_deltas)):
+            pre = "r" if axis == geom.axc else "c"
+            for delta in deltas:
+                part = c_rows[aux[f"{pre}send{delta}"],
+                              aux[f"{pre}row{delta}"]]
+                part = lax.ppermute(part, axis, _steal3d_perm(g, delta))
+                own_ext = own_ext.at[aux[f"{pre}tgt{delta}"]].add(part)
+        return own_ext[:nbr].reshape(geom.tm, geom.tn).astype(geom.out_dtype)
     # reduce rounds: partial C tiles ride home to their owners; idle
     # senders point at the guaranteed-zero dummy slot
     for delta in splan.row_deltas:
@@ -837,19 +1220,58 @@ class DistBSR(DistMatrix):
             self._inv_col_perm = inv
         return inv
 
+    def grid_structure(self) -> "_symbolic.GridStructure":
+        """Host-side structural view of the stored slots (cached).
+
+        One device read per handle lifetime, shared by everything that is
+        specialized to the structure: the fingerprint, the symbolic phase,
+        the steal3d planner and the packed wire layout.
+        """
+        s = getattr(self, "_grid_structure", None)
+        if s is None:
+            s = _symbolic.extract_structure(self.tiled)
+            self._grid_structure = s
+        return s
+
     def structure_key(self) -> str:
         """Fingerprint of the block *structure* (which slots hold data).
 
-        Sparse-output plans are specialized to the operands' structures
-        (the symbolic phase bakes pair lists into the executable), so this
-        joins the plan-cache key the way ``abstract_key`` does for shapes.
-        Cached on the handle: one device read per handle lifetime.
+        Sparse-output, packed-wire and steal3d plans are specialized to
+        the operands' structures (pair lists / consume maps are baked into
+        the executable), so this joins the plan-cache key the way
+        ``abstract_key`` does for shapes.  Cached on the handle.
         """
-        key = getattr(self, "_structure_key", None)
-        if key is None:
-            key = _symbolic.structure_fingerprint(self.tiled)
-            self._structure_key = key
-        return key
+        return self.grid_structure().fingerprint
+
+    def packed_operand(self) -> "_wire.PackedOperand":
+        """Packed wire layout of this handle's structure (cached)."""
+        po = getattr(self, "_packed_operand", None)
+        if po is None:
+            po = _wire.pack_operand(self.grid_structure())
+            self._packed_operand = po
+        return po
+
+    def packed_wire(self, placement: str) -> Dict[str, jnp.ndarray]:
+        """Packed wire blocks for a placement: ``{"blocks": [g, g, wc,
+        bs, bs]}`` — each tile's real blocks gathered into the packed
+        prefix, trailing slots guaranteed zero.  Cached per placement,
+        like :meth:`placed` (one gather per handle x placement lifetime).
+        """
+        cache = getattr(self, "_packed_placed", None)
+        if cache is None:
+            cache = self._packed_placed = {}
+        tree = cache.get(placement)
+        if tree is None:
+            po = self.packed_operand()
+            placed = self.placed(placement)["blocks"]
+            tiles = _wire.placement_tiles(placement, self.g)
+            pidx = po.pack_idx[tiles[..., 0], tiles[..., 1]]  # [g, g, wc]
+            g = self.g
+            ii = jnp.arange(g)[:, None, None]
+            jj = jnp.arange(g)[None, :, None]
+            tree = {"blocks": placed[ii, jj, jnp.asarray(pidx)]}
+            cache[placement] = tree
+        return tree
 
     def densify(self) -> jnp.ndarray:
         """Dense logical-shape value (inverts balance perms, crops padding).
@@ -1046,7 +1468,8 @@ def _key_dtype(abstract_key: tuple):
 
 
 def _cost_model(alg: Algorithm, geom: _Geom, a_key: tuple, b_key: tuple,
-                symbolic: Optional["SymbolicProduct"] = None
+                symbolic: Optional["SymbolicProduct"] = None,
+                wire_caps: Optional[Dict[str, int]] = None
                 ) -> Dict[str, float]:
     """Per-step wire volume / executed flops of one plan execution.
 
@@ -1064,14 +1487,28 @@ def _cost_model(alg: Algorithm, geom: _Geom, a_key: tuple, b_key: tuple,
     (padding included), and C is the packed slot array — so sparse-output
     schedules are scored on their true output traffic, which is what makes
     ``output="auto"`` flip for hypersparse products.
+
+    With ``wire_caps`` (a packed-wire plan: ``{"a": wc}`` and/or
+    ``{"b": wc}``), a packed operand is charged blocks-only at its wire
+    capacity — no coverage padding, no rows/cols index traffic, and for a
+    packed sparse B no densified tile — and the packed A step executes
+    the gathered coverage-augmented list (``wc + tile block-rows``
+    products) instead of the stored stride.  This is what lets
+    :func:`auto_select` scores flip where packing changes the
+    comm/compute trade.
     """
     g = geom.g
+    wire_caps = wire_caps or {}
     if symbolic is not None:
         bs = symbolic.block_size
         store_a = a_key[4] + geom.a_nbr
         store_b = b_key[4] + geom.b_nbr
-        a_bytes = store_a * bs * bs * np.dtype(_key_dtype(a_key)).itemsize
-        b_bytes = store_b * bs * bs * np.dtype(_key_dtype(b_key)).itemsize
+        wa = np.dtype(_key_dtype(a_key)).itemsize
+        wb = np.dtype(_key_dtype(b_key)).itemsize
+        a_slots = wire_caps.get("a", store_a)
+        b_slots = wire_caps.get("b", store_b)
+        a_bytes = a_slots * bs * bs * wa
+        b_bytes = b_slots * bs * bs * wb
         c_bytes = symbolic.store_capacity * bs * bs \
             * np.dtype(geom.out_dtype).itemsize
         flops_step = 2 * symbolic.pair_capacity * bs ** 3
@@ -1080,16 +1517,29 @@ def _cost_model(alg: Algorithm, geom: _Geom, a_key: tuple, b_key: tuple,
                               tiles)
     if a_key[0] == "bsr":
         bs, cap = a_key[3], a_key[4]
-        store = cap + geom.a_nbr            # pre-augmented stored slots
-        a_bytes = store * bs * bs * np.dtype(_key_dtype(a_key)).itemsize \
-            + store * 2 * 4                 # + rows/cols int32
-        flops_step = 2 * store * bs * bs * geom.tn
+        wa = np.dtype(_key_dtype(a_key)).itemsize
+        if "a" in wire_caps:
+            wc = wire_caps["a"]             # packed: blocks only
+            a_bytes = wc * bs * bs * wa
+            # the step executes the gathered augmented list, never more
+            # than the padded stride
+            slots = min(wc + geom.a_nbr, cap + geom.a_nbr)
+            flops_step = 2 * slots * bs * bs * geom.tn
+        else:
+            store = cap + geom.a_nbr        # pre-augmented stored slots
+            a_bytes = store * bs * bs * wa \
+                + store * 2 * 4             # + rows/cols int32
+            flops_step = 2 * store * bs * bs * geom.tn
     else:
         tk = a_key[1][1] // g
         a_bytes = geom.tm * tk * np.dtype(_key_dtype(a_key)).itemsize
         flops_step = 2 * geom.tm * tk * geom.tn
-    tk_b = b_key[1][0] // g
-    b_bytes = tk_b * geom.tn * np.dtype(_key_dtype(b_key)).itemsize
+    wb = np.dtype(_key_dtype(b_key)).itemsize
+    if "b" in wire_caps and b_key[0] == "bsr":
+        b_bytes = wire_caps["b"] * b_key[3] * b_key[3] * wb
+    else:
+        tk_b = b_key[1][0] // g
+        b_bytes = tk_b * geom.tn * wb
     c_bytes = geom.tm * geom.tn * np.dtype(geom.out_dtype).itemsize
     tiles = {"a": a_bytes, "b": b_bytes, "c": c_bytes}
     return _assemble_cost(alg, g, a_bytes, b_bytes, c_bytes, flops_step,
@@ -1155,7 +1605,11 @@ class MatmulPlan:
                  requested: Optional[str] = None,
                  auto_scores: Optional[Dict[str, float]] = None,
                  symbolic: Optional["SymbolicProduct"] = None,
-                 steal: Optional["_steal3d.StealPlan"] = None):
+                 steal: Optional["_steal3d.StealPlan"] = None,
+                 wire: str = "padded", packs: Tuple[str, ...] = (),
+                 wire_aux: Optional[Dict[str, np.ndarray]] = None,
+                 wire_caps: Optional[Dict[str, int]] = None,
+                 wire_fps: Optional[Dict[str, str]] = None):
         self.algorithm = algorithm
         self.geom = geom
         self.mesh = mesh
@@ -1172,6 +1626,13 @@ class MatmulPlan:
         self.auto_scores = auto_scores
         self.symbolic = symbolic
         self.steal = steal
+        # Packed-wire state: which operands ship packed ("a"/"b"), their
+        # wire capacities (the cost-model byte terms) and the structure
+        # fingerprints the consume maps were built for (the call guard).
+        self.wire = wire
+        self._packs = packs
+        self._wire_caps = wire_caps
+        self._wire_fps = wire_fps or {}
         self.traces = 0
         specs = (_specs_for_keys(_tree_keys(a_key), geom.axr, geom.axc),
                  _specs_for_keys(_tree_keys(b_key), geom.axr, geom.axc))
@@ -1203,6 +1664,36 @@ class MatmulPlan:
             in_specs = (_specs_for_keys(a_keys, geom.axr, geom.axc),
                         specs[1], aux_specs)
             out_specs = P(geom.axr, geom.axc)
+        elif symbolic is None and wire_aux is not None:
+            # Packed-wire dense-output plan: the executable is specialized
+            # to the packed operands' structures — the consume maps
+            # (augmented-list gathers / densify-by-gather maps built by
+            # repro.core.wire) ride as a third operand tree, committed in
+            # their mesh sharding once like steal3d aux; a packed operand
+            # ships blocks-only at the wire capacity.
+            packed_body = algorithm.packed_body
+            aux_specs = {k: P(geom.axr, geom.axc, *(None,) * (v.ndim - 2))
+                         for k, v in wire_aux.items()}
+            self._aux = {
+                k: jax.device_put(
+                    np.ascontiguousarray(v),
+                    jax.sharding.NamedSharding(mesh, aux_specs[k]))
+                for k, v in wire_aux.items()}
+
+            def fn(a, b, aux):
+                self.traces += 1          # runs at trace time only
+                for hook in list(_TRACE_HOOKS):
+                    hook(self)
+                return packed_body(_local_view(a), _local_view(b),
+                                   {k: v[0, 0] for k, v in aux.items()},
+                                   geom)
+
+            blocks_spec = {"blocks": P(geom.axr, geom.axc, None, None,
+                                       None)}
+            in_specs = (blocks_spec if "a" in packs else specs[0],
+                        blocks_spec if "b" in packs else specs[1],
+                        aux_specs)
+            out_specs = P(geom.axr, geom.axc)
         elif symbolic is None:
             body = algorithm.body
 
@@ -1219,9 +1710,14 @@ class MatmulPlan:
             # algorithm's k_order) ride as a third operand tree, only the
             # block data of A and B is sharded in, and the result is the
             # packed per-tile slot array wrapped into a DistBSR by
-            # _epilogue_sparse.
+            # _epilogue_sparse.  Under wire="packed" the operands' blocks
+            # ride in packed wire form and the stored->packed slot map is
+            # already composed into the (remapped) pair lists.
             sparse_body = algorithm.sparse_body
-            sched = symbolic.scheduled_pairs(algorithm.k_order)
+            sched = symbolic.scheduled_pairs(
+                algorithm.k_order,
+                pair_a=None if wire_aux is None else wire_aux.get("pa"),
+                pair_b=None if wire_aux is None else wire_aux.get("pb"))
             # Pair lists are plan-lifetime constants; commit them in their
             # mesh sharding once so repeated calls don't re-transfer them
             # to every device (measurably dominates small multiplies).
@@ -1288,14 +1784,18 @@ class MatmulPlan:
                         "this steal3d plan (the LPT assignment and pair "
                         "lists are specialized to the structure); build a "
                         "new plan with plan_matmul")
-                a_tree = {"blocks":
-                          a_h.placed(self.algorithm.a_placement)["blocks"]}
+                if self.steal.wire == "packed":
+                    a_tree = a_h.packed_wire(self.algorithm.a_placement)
+                else:
+                    a_tree = {"blocks": a_h.placed(
+                        self.algorithm.a_placement)["blocks"]}
             else:
                 a_tree = a_h.placed(self.algorithm.a_placement)
             c = self._exec(a_tree,
                            b_h.placed(self.algorithm.b_placement),
                            self._aux)
             return self._epilogue(c, a_h, b_h)
+        packed = self.wire == "packed"
         if self.symbolic is not None:
             sym = self.symbolic
             if (a_h.structure_key(), b_h.structure_key()) != \
@@ -1304,12 +1804,31 @@ class MatmulPlan:
                     "operands' sparsity structure does not match this "
                     "sparse-output plan (pair lists are specialized to the "
                     "structure); build a new plan with plan_matmul")
-            a_tree = {"blocks":
-                      a_h.placed(self.algorithm.a_placement)["blocks"]}
-            b_tree = {"blocks":
-                      b_h.placed(self.algorithm.b_placement)["blocks"]}
+            pl_a, pl_b = self.algorithm.a_placement, \
+                self.algorithm.b_placement
+            a_tree = a_h.packed_wire(pl_a) if packed \
+                else {"blocks": a_h.placed(pl_a)["blocks"]}
+            b_tree = b_h.packed_wire(pl_b) if packed \
+                else {"blocks": b_h.placed(pl_b)["blocks"]}
             c_blocks = self._exec(a_tree, b_tree, self._pairs)
             return self._epilogue_sparse(c_blocks, a_h, b_h)
+        if packed:
+            for who, h in (("a", a_h), ("b", b_h)):
+                if who in self._packs \
+                        and h.structure_key() != self._wire_fps.get(who):
+                    raise ValueError(
+                        f"{'left' if who == 'a' else 'right'} operand's "
+                        "sparsity structure does not match this packed-wire "
+                        "plan (the consume maps are specialized to the "
+                        "structure); build a new plan with plan_matmul")
+            a_tree = a_h.packed_wire(self.algorithm.a_placement) \
+                if "a" in self._packs \
+                else a_h.placed(self.algorithm.a_placement)
+            b_tree = b_h.packed_wire(self.algorithm.b_placement) \
+                if "b" in self._packs \
+                else b_h.placed(self.algorithm.b_placement)
+            c = self._exec(a_tree, b_tree, self._aux)
+            return self._epilogue(c, a_h, b_h)
         c = self._exec(a_h.placed(self.algorithm.a_placement),
                        b_h.placed(self.algorithm.b_placement))
         return self._epilogue(c, a_h, b_h)
@@ -1379,7 +1898,8 @@ class MatmulPlan:
             out = dict(self.steal.cost)
         else:
             out = _cost_model(self.algorithm, self.geom, self._a_key,
-                              self._b_key, symbolic=self.symbolic)
+                              self._b_key, symbolic=self.symbolic,
+                              wire_caps=self._wire_caps)
         if isinstance(a, DistBSR):
             per_stage, end_to_end = _schedule.stage_imbalance(
                 np.asarray(a.counts, dtype=np.float64))
@@ -1569,11 +2089,67 @@ def _mesh_key(mesh):
         return id(mesh)
 
 
+def _resolve_wire(wire: str, output: str) -> str:
+    """Resolve the ``wire=`` request ("auto" | "padded" | "packed").
+
+    ``"auto"`` keeps today's behaviour for dense-output plans (padded
+    wire, so structurally different operands with equal abstract shapes
+    keep sharing one cached plan) and resolves to ``"packed"`` for
+    sparse-output plans, which are specialized to the operands' structure
+    anyway — there packing is a strict win.
+    """
+    if wire not in ("auto", "padded", "packed"):
+        raise ValueError(f"unknown wire {wire!r}; one of "
+                         "('auto', 'padded', 'packed')")
+    if wire == "auto":
+        return "packed" if output == "sparse" else "padded"
+    return wire
+
+
+def _wire_caps_for(a_h: DistMatrix, b_h: DistMatrix,
+                   packable: Tuple[str, ...]) -> Dict[str, int]:
+    """Estimated packed wire capacities from the handles' stored counts.
+
+    ``counts`` bounds the data-real block count from above (a chained
+    sparse-output handle may store structurally-predicted blocks that are
+    numerically zero), so scoring stays devices-free while actual plans
+    pack against the exact structure.
+    """
+    caps = {}
+    for who, h in (("a", a_h), ("b", b_h)):
+        if who in packable and isinstance(h, DistBSR):
+            counts = np.asarray(h.counts)
+            caps[who] = wire_capacity(
+                int(counts.max()) if counts.size else 0,
+                h.tiled.store_capacity)
+    return caps
+
+
+def _b_pack_wins(b_h: DistMatrix) -> bool:
+    """Whether packing B beats the densified tile on a dense-output path.
+
+    Packed A always wins (wire capacity <= stored stride, and the
+    rows/cols index traffic stays home), but a dense-output body consumes
+    B as a dense tile either way — so shipping B packed only pays when
+    its real blocks cover less than the tile: near-block-dense operands
+    keep riding densified.  Decided on stored ``counts`` (an upper bound
+    on real blocks), so a win is never claimed that packing can't keep.
+    """
+    if not isinstance(b_h, DistBSR):
+        return False
+    counts = np.asarray(b_h.counts)
+    wc = wire_capacity(int(counts.max()) if counts.size else 0,
+                       b_h.tiled.store_capacity)
+    bs = b_h.block_size
+    tm, tn = b_h.tile_shape
+    return wc * bs * bs < tm * tn
+
+
 def auto_select(a, b, *, machine: Optional["_roofline.Machine"] = None,
                 g: Optional[int] = None, allow_pad: bool = False,
                 axis_row: str = "row", axis_col: str = "col",
                 registry: Optional[AlgorithmRegistry] = None,
-                output: str = "dense", _symbolic=None
+                output: str = "dense", wire: str = "auto", _symbolic=None
                 ) -> Tuple[str, Dict[str, float]]:
     """Score every registered schedule for ``a @ b``; pick the cheapest.
 
@@ -1586,10 +2162,22 @@ def auto_select(a, b, *, machine: Optional["_roofline.Machine"] = None,
     body, against the symbolic-phase cost model: B rides in stored block
     form and C is charged at its *actual* packed size, so the ranking can
     differ from the dense-output one for the same operands.
+
+    ``wire="packed"`` scores every schedule against its *packed* wire
+    terms (each schedule's packable operands at their wire capacities;
+    steal3d's packed gather/moved/reduce rounds), so the choice flips
+    where shipping only real blocks changes the comm/compute trade.
     """
     a_h, b_h = _coerce_pair(a, b, g=g, allow_pad=allow_pad)
     machine = machine or _roofline.TPU_V5E
     registry = registry or REGISTRY
+    wire = _resolve_wire(wire, output)
+    if wire == "packed" and not (isinstance(a_h, DistBSR)
+                                 or isinstance(b_h, DistBSR)):
+        raise ValueError(
+            "wire='packed' needs at least one block-sparse (DistBSR) "
+            "operand — dense operands have no packable structure; use "
+            "wire='padded'")
     sym = None
     candidates = list(registry)
     if output == "sparse":
@@ -1606,9 +2194,16 @@ def auto_select(a, b, *, machine: Optional["_roofline.Machine"] = None,
     scores = {}
     for alg in candidates:
         if alg.cost_fn is not None:       # structure-dependent (steal3d)
-            cm = alg.cost_fn(alg, geom, a_h, b_h)
+            cm = alg.cost_fn(alg, geom, a_h, b_h, wire=wire)
         else:
-            cm = _cost_model(alg, geom, a_key, b_key, symbolic=sym)
+            caps = None
+            if wire == "packed":
+                packable = ("a", "b") if sym is not None else alg.packable
+                caps = _wire_caps_for(a_h, b_h, packable)
+                if sym is None and "b" in caps and not _b_pack_wins(b_h):
+                    del caps["b"]
+            cm = _cost_model(alg, geom, a_key, b_key, symbolic=sym,
+                             wire_caps=caps)
         scores[alg.name] = _predicted_time(cm, alg, machine)
     if not scores:
         raise ValueError("no algorithms registered" if output != "sparse"
@@ -1628,7 +2223,8 @@ def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
                 allow_pad: bool = False, cache: bool = True,
                 machine: Optional["_roofline.Machine"] = None,
                 output: str = "dense",
-                sparse_threshold: Optional[float] = None) -> MatmulPlan:
+                sparse_threshold: Optional[float] = None,
+                wire: str = "auto") -> MatmulPlan:
     """Build (or fetch from the shared cache) a plan for ``a @ b``.
 
     ``a`` / ``b`` may be :class:`DistMatrix` handles (preferred — placement
@@ -1651,6 +2247,18 @@ def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
     :data:`SPARSE_OUTPUT_DENSITY_THRESHOLD`).  Sparse-output plans are
     specialized to the operands' sparsity *structure* (not values), which
     joins the cache key.
+
+    ``wire`` selects the communication layout: ``"padded"`` ships sparse
+    tiles at their stored ``store_capacity`` stride, ``"packed"`` ships
+    only real blocks (``repro.core.wire``: blocks-only buffers at the
+    bucketed wire capacity, consume maps stay home) on every path the
+    schedule supports, and ``"auto"`` (default) packs sparse-output plans
+    — already structure-specialized, so packing there is a strict win —
+    while keeping dense-output plans padded so structurally different
+    operands with equal abstract shapes keep sharing one cached plan.
+    Packed plans join the cache keyed on the packed operands' structure
+    fingerprints; a schedule with no packable traffic for these operands
+    (e.g. ``ring_a`` with a dense B) degrades to its padded plan.
     """
     a_h, b_h = _coerce_pair(a, b, g=g, allow_pad=allow_pad)
     if output not in ("dense", "sparse", "auto"):
@@ -1672,16 +2280,43 @@ def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
             output = "dense"
     requested = algorithm
     auto_scores = None
+    wire = _resolve_wire(wire, output)
+    if wire == "packed" and not (isinstance(a_h, DistBSR)
+                                 or isinstance(b_h, DistBSR)):
+        raise ValueError(
+            "wire='packed' needs at least one block-sparse (DistBSR) "
+            "operand — dense operands have no packable structure; use "
+            "wire='padded'")
     sym = _symbolic_for(a_h, b_h) if output == "sparse" else None
     if algorithm == "auto":
         algorithm, auto_scores = auto_select(
             a_h, b_h, machine=machine, axis_row=axis_row, axis_col=axis_col,
-            allow_pad=allow_pad, output=output, _symbolic=sym)
+            allow_pad=allow_pad, output=output, wire=wire, _symbolic=sym)
     alg = REGISTRY.get(algorithm)
     if sym is not None and alg.sparse_body is None:
         raise ValueError(
             f"algorithm {algorithm!r} has no sparse-output body; one of "
             f"{sparse_algorithms()} (or use output='dense')")
+    # which operands actually ship packed on this plan (a schedule with no
+    # packable traffic for these operands degrades to its padded plan)
+    packs: Tuple[str, ...] = ()
+    if wire == "packed":
+        if sym is not None:
+            packs = ("a", "b")
+        elif alg.static_planner is not None:
+            # static planners pack the A side only (declared via packable)
+            packs = ("a",) if "a" in alg.packable \
+                and isinstance(a_h, DistBSR) else ()
+        elif alg.packed_body is not None:
+            packs = tuple(
+                t for t in alg.packable
+                if isinstance(a_h if t == "a" else b_h, DistBSR))
+            if "b" in packs and not _b_pack_wins(b_h):
+                # a near-block-dense B is cheaper densified than packed;
+                # keep it riding as a dense tile (see _b_pack_wins)
+                packs = tuple(t for t in packs if t != "b")
+        if not packs:
+            wire = "padded"
     mesh = _prep_mesh(mesh, a_h.g, axis_row, axis_col)
     key = (alg.name, impl, axis_row, axis_col, allow_pad, _mesh_key(mesh),
            a_h.abstract_key(), b_h.abstract_key())
@@ -1694,6 +2329,10 @@ def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
         # and rounds) is a function of A's sparsity structure
         key += ("steal", a_h.structure_key()
                 if isinstance(a_h, DistBSR) else None)
+    if wire == "packed":
+        # consume maps / remapped pair lists are baked per structure
+        key += ("wire-packed",) + tuple(
+            (a_h if t == "a" else b_h).structure_key() for t in packs)
     if cache:
         plan = _PLAN_CACHE.get(key)
         if plan is not None:
@@ -1703,12 +2342,32 @@ def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
     geom = _geometry(a_h, b_h, impl=impl, axis_row=axis_row,
                      axis_col=axis_col,
                      c_store=sym.store_capacity if sym else 0)
-    steal = alg.static_planner(a_h, b_h, geom) \
+    steal = alg.static_planner(a_h, b_h, geom, wire=wire) \
         if alg.static_planner is not None else None
+    wire_aux = wire_caps = wire_fps = None
+    if wire == "packed" and steal is None:
+        a_po = a_h.packed_operand() if "a" in packs else None
+        b_po = b_h.packed_operand() if "b" in packs else None
+        wire_caps = {t: po.wire_capacity for t, po in
+                     (("a", a_po), ("b", b_po)) if po is not None}
+        wire_fps = {t: po.fingerprint for t, po in
+                    (("a", a_po), ("b", b_po)) if po is not None}
+        if sym is not None:
+            # compose the stored->packed slot maps into the pair lists
+            wire_aux = {
+                "pa": _wire.remap_pairs_packed(sym.pair_a, a_po, "a"),
+                "pb": _wire.remap_pairs_packed(sym.pair_b, b_po, "b"),
+            }
+        else:
+            wire_aux = alg.wire_planner(a_po, b_po, geom)
+    elif steal is not None and steal.wire == "packed":
+        wire_caps = {"a": steal.a_wire_capacity}
     plan = MatmulPlan(alg, geom,
                       mesh, a_h.abstract_key(), b_h.abstract_key(),
                       allow_pad=allow_pad, requested=requested,
-                      auto_scores=auto_scores, symbolic=sym, steal=steal)
+                      auto_scores=auto_scores, symbolic=sym, steal=steal,
+                      wire=wire, packs=packs, wire_aux=wire_aux,
+                      wire_caps=wire_caps, wire_fps=wire_fps)
     if cache:
         _PLAN_CACHE[key] = plan
     return plan
@@ -1720,7 +2379,8 @@ def matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
            allow_pad: bool = False,
            machine: Optional["_roofline.Machine"] = None,
            output: str = "dense",
-           sparse_threshold: Optional[float] = None):
+           sparse_threshold: Optional[float] = None,
+           wire: str = "auto"):
     """Polymorphic distributed ``a @ b``.
 
     Dispatches sparse x dense -> SpMM, sparse x sparse -> SpGEMM, and
@@ -1735,5 +2395,5 @@ def matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
     plan = plan_matmul(a_h, b_h, algorithm=algorithm, mesh=mesh, impl=impl,
                        axis_row=axis_row, axis_col=axis_col,
                        allow_pad=allow_pad, machine=machine, output=output,
-                       sparse_threshold=sparse_threshold)
+                       sparse_threshold=sparse_threshold, wire=wire)
     return plan(a_h, b_h)

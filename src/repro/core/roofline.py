@@ -158,6 +158,10 @@ def steal3d_internode_ai(flops: float, gather_bytes: float,
     panel gathers, the *moved tiles* of off-owner work items (the paper's
     "one moving tile" locality cost, here shipped in static ppermute
     rounds), and the partial-C tiles reduced back to their owners.
+    Under the packed wire format (``plan_matmul(wire="packed")``) the
+    caller passes the packed byte terms — panel gathers at the wire
+    capacity, moved tiles at their per-move real max, reductions
+    row-packed — so the same model scores both layouts.
     """
     total = gather_bytes + moved_bytes + reduce_bytes
     return flops / total if total else float("inf")

@@ -40,6 +40,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from . import roofline as _roofline
+from . import wire as _wire
 from .grid import bucket_capacity
 from .schedule import Assignment3D, assign_3d_lpt
 from .symbolic import extract_structure
@@ -77,6 +78,11 @@ class StealPlan:
     assignment: Assignment3D
     a_fingerprint: Optional[str]   # sparse A structure the lists encode
     cost: Dict[str, float]
+    wire: str = "padded"           # "padded" | "packed" A-side shipments
+    a_wire_capacity: int = 0       # packed panel stride (wire="packed")
+    a_round_cap: Tuple[int, ...] = ()
+                                   # packed per-move-round real max
+                                   # (parallel to ``a_deltas``)
 
 
 def _item_cost_grid(a_h, g: int) -> Tuple[np.ndarray, Optional[object]]:
@@ -87,23 +93,43 @@ def _item_cost_grid(a_h, g: int) -> Tuple[np.ndarray, Optional[object]]:
     for sparse A (j-independent) and uniform for dense A.
     """
     if a_h.kind == "bsr":
-        sa = extract_structure(a_h.tiled)
+        # the handle caches its structural view (shared with fingerprints
+        # and the packed wire layout); fall back for raw duck-typed inputs
+        sa = a_h.grid_structure() if hasattr(a_h, "grid_structure") \
+            else extract_structure(a_h.tiled)
         return sa.real.sum(axis=2).astype(np.float64), sa
     return np.ones((g, g), dtype=np.float64), None
 
 
 def build_steal_plan(a_h, b_h, geom, *, locality: str = "locality",
-                     comm_penalty: float = 1.0) -> StealPlan:
+                     comm_penalty: float = 1.0,
+                     wire: str = "padded") -> StealPlan:
     """Compile the stealing equilibrium for ``a_h @ b_h`` into a StealPlan.
 
     ``geom`` is the plan's :class:`repro.core.api._Geom`; handles are
     :class:`DistBSR` / :class:`DistDense` (duck-typed via ``.kind``).
+
+    ``wire="packed"`` (sparse A only) builds the packed-wire variant: the
+    A panel gathers at the packed wire capacity, moved-tile rounds slice
+    to their own per-move real max (rounds moving only empty tiles are
+    dropped outright), pair lists index the flat packed pool, and the
+    partial-C reduce rounds ship only the block-rows each sender's items
+    can touch.  The LPT assignment — and therefore the executed makespan
+    — is identical to the padded plan; only the bytes on the wire shrink.
     """
     g = geom.g
     n_dev = g * g
     tk = a_h.shape[1] // g
     cost_ik, sa = _item_cost_grid(a_h, g)
     sparse_a = sa is not None
+    if wire not in ("padded", "packed"):
+        raise ValueError(f"unknown wire {wire!r}; one of "
+                         "('padded', 'packed')")
+    packed = wire == "packed" and sparse_a
+    wire = "packed" if packed else "padded"
+    n_real_tile = sa.real.sum(axis=2).astype(np.int64) if sparse_a else None
+    wc = _wire.wire_capacity(int(n_real_tile.max()),
+                             a_h.tiled.store_capacity) if packed else 0
     asg = assign_3d_lpt(
         np.broadcast_to(cost_ik[:, :, None], (g, g, g)).copy(), g,
         locality=locality, comm_penalty=comm_penalty)
@@ -172,21 +198,52 @@ def build_steal_plan(a_h, b_h, geom, *, locality: str = "locality",
         dist_of=lambda d, t: (d % g - t[1]) % g,
         panel_k=lambda t: t[0])     # B[k, j]: position k in the col panel
 
+    # packed wire: each A move round is sliced to its own real max (the
+    # ROADMAP "moved-tile packing" item); rounds moving only structurally
+    # empty tiles vanish — no ppermute, no pool segment, no alpha term.
+    a_round_cap = []
+    if packed:
+        keep, caps = [], []
+        for delta, cap in zip(a_deltas, a_move_cap):
+            mr = max((int(n_real_tile[t]) for d in range(n_dev)
+                      for t in a_lists[delta][d]), default=0)
+            if mr == 0:
+                continue
+            keep.append(delta)
+            caps.append(min(wc, bucket_capacity(mr)))
+        a_deltas = keep
+        a_move_cap = [max(len(a_lists[d_][dd]) for dd in range(n_dev))
+                      for d_ in keep]
+        a_round_cap = caps
+        a_send = {d_: a_send[d_] for d_ in keep}
+
     # ---- pool tile positions (must mirror the body's concat order) ------
+    # padded: tile index into the uniform-stride pool; packed: FLAT block
+    # offset (panel tiles at stride wc, each move round at its own stride).
     a_pos = [dict() for _ in range(n_dev)]
     b_pos = [dict() for _ in range(n_dev)]
     for d in range(n_dev):
         r, c = divmod(d, g)
         for k in range(g):
-            a_pos[d][(r, k)] = k                 # A row panel: A[r, k] at k
+            a_pos[d][(r, k)] = k * wc if packed else k
             b_pos[d][(k, c)] = k                 # B col panel: B[k, c] at k
-    base = g
-    for delta, cap in zip(a_deltas, a_move_cap):
-        for d in range(n_dev):
-            for m, t in enumerate(a_lists[delta][d]):
-                a_pos[d][t] = base + m
-        base += cap
-    a_pool_tiles = base                          # zero tile appended after
+    if packed:
+        base = g * wc
+        for delta, cap, rcap in zip(a_deltas, a_move_cap, a_round_cap):
+            for d in range(n_dev):
+                for m, t in enumerate(a_lists[delta][d]):
+                    a_pos[d][t] = base + m * rcap
+            base += cap * rcap
+        a_flat_zero = base                       # zero block appended after
+        a_pool_tiles = 0                         # unused on the packed path
+    else:
+        base = g
+        for delta, cap in zip(a_deltas, a_move_cap):
+            for d in range(n_dev):
+                for m, t in enumerate(a_lists[delta][d]):
+                    a_pos[d][t] = base + m
+            base += cap
+        a_pool_tiles = base                      # zero tile appended after
     base = g
     for delta, cap in zip(b_deltas, b_move_cap):
         for d in range(n_dev):
@@ -216,6 +273,56 @@ def build_steal_plan(a_h, b_h, geom, *, locality: str = "locality",
     col_deltas = sorted({(i - d // g) % g for d in range(n_dev)
                          for i in col_is[d]})
     aux: Dict[str, np.ndarray] = {}
+    nbr_a = geom.a_nbr if sparse_a else 1
+    if packed:
+        # row-packed reduce rounds: a sender's partial C tile can only be
+        # nonzero in the block-rows its items' A tiles store, so each
+        # round ships [round_cap, bs, tn] instead of the full tile.  The
+        # sender-side row gather (``rrow``/``crow``) and the receiver-side
+        # target rows (``rtgt``/``ctgt``; the padding lands on the dummy
+        # row ``nbr``) are both static; rounds with no real rows vanish.
+        out_rows = [dict() for _ in range(n_dev)]
+        for d in range(n_dev):
+            for (i, k, j) in items[d]:
+                sl = np.nonzero(sa.real[i, k])[0]
+                if len(sl):
+                    out_rows[d].setdefault((i, j), set()).update(
+                        sa.rows[i, k][sl].tolist())
+
+        def _packed_round(deltas, out_of, src_of, prefix):
+            kept, caps = [], []
+            for delta in deltas:
+                rows_of = [sorted(out_rows[d].get(out_of(d, delta), ()))
+                           for d in range(n_dev)]
+                mr = max((len(r_) for r_ in rows_of), default=0)
+                if mr == 0:
+                    continue
+                rcap = min(nbr_a, bucket_capacity(mr))
+                row = np.zeros((g, g, rcap), np.int32)
+                tgt = np.full((g, g, rcap), nbr_a, np.int32)
+                for d in range(n_dev):
+                    r, c = divmod(d, g)
+                    row[r, c, :len(rows_of[d])] = rows_of[d]
+                    src = rows_of[src_of(d, delta)]
+                    tgt[r, c, :len(src)] = src
+                aux[f"{prefix}row{delta}"] = row
+                aux[f"{prefix}tgt{delta}"] = tgt
+                kept.append(delta)
+                caps.append(rcap)
+            return kept, caps
+
+        row_deltas, reduce_row_caps = _packed_round(
+            row_deltas,
+            out_of=lambda d, delta: (d // g, (d % g + delta) % g),
+            src_of=lambda d, delta: (d // g) * g + (d % g - delta) % g,
+            prefix="r")
+        col_deltas, reduce_col_caps = _packed_round(
+            col_deltas,
+            out_of=lambda d, delta: ((d // g + delta) % g, d % g),
+            src_of=lambda d, delta: ((d // g - delta) % g) * g + d % g,
+            prefix="c")
+    else:
+        reduce_row_caps = reduce_col_caps = []
     for delta in row_deltas:
         sel = np.full((g, g), dummy_idx, dtype=np.int32)
         for d in range(n_dev):
@@ -239,7 +346,10 @@ def build_steal_plan(a_h, b_h, geom, *, locality: str = "locality",
     store_a = a_h.tiled.store_capacity if sparse_a else 0
     b_chunks = tk // bs if sparse_a else 0
     n_slots = n_out * nbr if sparse_a else n_out
-    zero_a = a_pool_tiles * store_a if sparse_a else a_pool_tiles
+    if packed:
+        zero_a = a_flat_zero
+    else:
+        zero_a = a_pool_tiles * store_a if sparse_a else a_pool_tiles
     per_dev_pairs = []
     for d in range(n_dev):
         pa, pb, ps = [], [], []
@@ -247,7 +357,16 @@ def build_steal_plan(a_h, b_h, geom, *, locality: str = "locality",
             o = out_idx[d][(i, j)]
             if sparse_a:
                 sl = np.nonzero(sa.real[i, k])[0]
-                pa.append(a_pos[d][(i, k)] * store_a + sl)
+                if packed and not len(sl):
+                    # a structurally empty tile contributes no pairs; its
+                    # move round may have been dropped above, so it has no
+                    # packed pool position to reference either
+                    continue
+                if packed:
+                    # packed pool: real blocks are the tile's flat prefix
+                    pa.append(a_pos[d][(i, k)] + np.arange(len(sl)))
+                else:
+                    pa.append(a_pos[d][(i, k)] * store_a + sl)
                 pb.append(b_pos[d][(k, j)] * b_chunks
                           + sa.cols[i, k][sl].astype(np.int64))
                 ps.append(o * nbr + sa.rows[i, k][sl].astype(np.int64))
@@ -286,14 +405,24 @@ def build_steal_plan(a_h, b_h, geom, *, locality: str = "locality",
     w_a = np.dtype(a_h.dtype).itemsize
     w_b = np.dtype(b_h.dtype).itemsize
     w_o = np.dtype(geom.out_dtype).itemsize
-    a_tile_bytes = store_a * bs * bs * w_a if sparse_a \
-        else geom.tm * tk * w_a
+    if packed:
+        # packed A shipments: blocks only, at the wire / per-round strides
+        a_tile_bytes = wc * bs * bs * w_a
+        a_moved_bytes = sum(cap * rcap for cap, rcap
+                            in zip(a_move_cap, a_round_cap)) * bs * bs * w_a
+    else:
+        a_tile_bytes = store_a * bs * bs * w_a if sparse_a \
+            else geom.tm * tk * w_a
+        a_moved_bytes = sum(a_move_cap) * a_tile_bytes
     b_tile_bytes = tk * geom.tn * w_b            # B rides densified
     c_tile_bytes = geom.tm * geom.tn * w_o
     gather_bytes = (g - 1) * (a_tile_bytes + b_tile_bytes)
-    moved_bytes = sum(a_move_cap) * a_tile_bytes \
-        + sum(b_move_cap) * b_tile_bytes
-    reduce_bytes = (len(row_deltas) + len(col_deltas)) * c_tile_bytes
+    moved_bytes = a_moved_bytes + sum(b_move_cap) * b_tile_bytes
+    if packed:
+        reduce_bytes = sum(reduce_row_caps + reduce_col_caps) \
+            * bs * geom.tn * w_o
+    else:
+        reduce_bytes = (len(row_deltas) + len(col_deltas)) * c_tile_bytes
     flops = 2.0 * pair_cap * (bs * bs * geom.tn if sparse_a
                               else geom.tm * tk * geom.tn)
     net_bytes = float(gather_bytes + moved_bytes + reduce_bytes)
@@ -329,4 +458,5 @@ def build_steal_plan(a_h, b_h, geom, *, locality: str = "locality",
         a_move_cap=tuple(a_move_cap), b_deltas=tuple(b_deltas),
         b_move_cap=tuple(b_move_cap), row_deltas=tuple(row_deltas),
         col_deltas=tuple(col_deltas), aux=aux, assignment=asg,
-        a_fingerprint=sa.fingerprint if sparse_a else None, cost=cost)
+        a_fingerprint=sa.fingerprint if sparse_a else None, cost=cost,
+        wire=wire, a_wire_capacity=wc, a_round_cap=tuple(a_round_cap))

@@ -172,18 +172,28 @@ class SymbolicProduct:
                      j * nbc + self.c_cols[i, j][real]] = True
         return mask
 
-    def scheduled_pairs(self, k_order: Callable) -> Dict[str, np.ndarray]:
+    def scheduled_pairs(self, k_order: Callable,
+                        pair_a: Optional[np.ndarray] = None,
+                        pair_b: Optional[np.ndarray] = None
+                        ) -> Dict[str, np.ndarray]:
         """Reorder the inner axis per schedule: pairs for step t on device
         (i, j) are the natural-k lists at ``k = k_order(i, j, t, g)``.
         ``k_order`` must be numpy-broadcastable (the ring offset
-        ``(i + j + t) % g``, SUMMA's ``t``, ...)."""
+        ``(i + j + t) % g``, SUMMA's ``t``, ...).
+
+        ``pair_a``/``pair_b`` override the stored-slot operand lists with
+        remapped variants of the same ``[g, g, g, P]`` shape — how the
+        packed wire format (``repro.core.wire.remap_pairs_packed``)
+        composes its receiver-side slot mapping into the schedule.
+        """
         g = self.g
         i = np.arange(g)[:, None, None]
         j = np.arange(g)[None, :, None]
         t = np.arange(g)[None, None, :]
         k = np.broadcast_to(k_order(i, j, t, g), (g, g, g))
         take = lambda arr: arr[i, j, k]
-        return {"pa": take(self.pair_a), "pb": take(self.pair_b),
+        return {"pa": take(self.pair_a if pair_a is None else pair_a),
+                "pb": take(self.pair_b if pair_b is None else pair_b),
                 "ps": take(self.pair_slot)}
 
 

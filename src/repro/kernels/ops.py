@@ -22,7 +22,7 @@ from .bsr_spmm import (bsr_pair_accumulate_pallas, bsr_pair_matmul_pallas,
 __all__ = [
     "default_impl", "bsr_spmm", "bsr_spmm_raw", "match_block_pairs",
     "build_pair_lists", "bsr_pair_matmul", "bsr_pair_accumulate",
-    "steal_pair_accumulate", "densify",
+    "steal_pair_accumulate", "densify", "densify_packed",
 ]
 
 
@@ -201,6 +201,12 @@ def bsr_pair_accumulate(a_blocks, b_blocks, pair_a, pair_b, pair_slot, *,
     blocks.  No zero slot is appended here — the operand tiles' own zero
     (coverage) blocks serve as the dummy targets, keeping the scanned ring
     step concat-free.
+
+    ``pair_a``/``pair_b`` may index the operands' stored (padded) layout
+    or the packed wire layout of ``repro.core.wire`` — the receiver-side
+    slot mapping is composed into the lists at plan time
+    (``wire.remap_pairs_packed``), so packed buffers are consumed with no
+    unpack copy and this kernel stays layout-agnostic.
     """
     impl = _resolve(impl)
     out_dtype = out_dtype or jnp.promote_types(a_blocks.dtype, b_blocks.dtype)
@@ -237,3 +243,20 @@ def steal_pair_accumulate(a_pool, b_rows, pair_a, pair_b, pair_slot, *,
 
 def densify(blocks, rows, cols, *, n_block_rows: int, n_block_cols: int):
     return _ref.densify_raw(blocks, rows, cols, n_block_rows, n_block_cols)
+
+
+def densify_packed(blocks, dmap, *, n_block_rows: int, n_block_cols: int):
+    """Dense tile from packed wire blocks via a static *gather*.
+
+    ``dmap`` (built by ``repro.core.wire``) maps every dense block
+    position, row-major, to the packed slot holding its data — or to a
+    guaranteed-zero slot for structurally empty positions.  This is the
+    packed-wire replacement for :func:`densify` inside scanned ring steps:
+    structure is plan-time static, so the scatter of ``densify_raw``
+    becomes a gather + transpose and the hot-loop jaxpr stays
+    sort/scatter-free (the invariant ``tests/test_api.py`` asserts).
+    """
+    bs = blocks.shape[-1]
+    d = blocks[dmap].reshape(n_block_rows, n_block_cols, bs, bs)
+    return d.transpose(0, 2, 1, 3).reshape(n_block_rows * bs,
+                                           n_block_cols * bs)

@@ -25,8 +25,8 @@ def _parse():
     p.add_argument("--devices", type=int, default=4)
     p.add_argument("--check", default="all",
                    choices=["all", "spmm", "spgemm", "spgemm_sparse",
-                            "dense", "api", "balance", "steal3d", "moe",
-                            "train_parallel"])
+                            "dense", "api", "balance", "steal3d", "wire",
+                            "moe", "train_parallel"])
     p.add_argument("--seed", type=int, default=0)
     return p.parse_args()
 
@@ -47,7 +47,7 @@ def main() -> int:
 
     needs_grid = args.check in ("all", "dense", "spmm", "spgemm",
                                 "spgemm_sparse", "api", "balance",
-                                "steal3d")
+                                "steal3d", "wire")
     g = int(np.sqrt(args.devices))
     mesh = None
     if needs_grid:
@@ -198,6 +198,42 @@ def main() -> int:
         check("steal3d/empty_operand",
               api.matmul(e_h, b_h, mesh=mesh, algorithm="steal3d",
                          impl="ref"), np.zeros((64, 8), np.float32))
+
+    if args.check in ("all", "wire"):
+        print(f"== packed wire format on {g}x{g} mesh ==")
+        from repro.core.bsr import rmat_matrix
+        a_d = rmat_matrix(scale=6, edgefactor=8, seed=args.seed)  # skewed
+        b = rng.standard_normal((64, 8)).astype(np.float32)
+        b_sp = random_sparse(64, 64, 0.08, seed=args.seed + 9)
+        a_h = DistBSR.from_dense(a_d, g=g, block_size=4)
+        b_h = DistDense.for_rhs(jnp.asarray(b), a_h)
+        b_sph = DistBSR.from_dense(b_sp, g=g, block_size=4)
+        for alg in api.algorithms():
+            plan = api.plan_matmul(a_h, b_h, mesh=mesh, algorithm=alg,
+                                   impl="ref", wire="packed")
+            check(f"wire/spmm/{alg}[{plan.wire}]", plan(a_h, b_h), a_d @ b)
+            plan_sp = api.plan_matmul(a_h, b_sph, mesh=mesh, algorithm=alg,
+                                      impl="ref", wire="packed")
+            check(f"wire/spgemm/{alg}[{plan_sp.wire}]", plan_sp(a_h, b_sph),
+                  a_d @ b_sp)
+            if plan.wire == "packed":
+                pad = api.plan_matmul(a_h, b_h, mesh=mesh, algorithm=alg,
+                                      impl="ref", wire="padded")
+                bp = plan.cost_model()["total_net_bytes"]
+                bd = pad.cost_model()["total_net_bytes"]
+                check_flag(f"wire/bytes/{alg} ({bp:.0f} <= {bd:.0f})",
+                           bp <= bd)
+        for alg in api.sparse_algorithms():
+            plan = api.plan_matmul(a_h, b_sph, mesh=mesh, algorithm=alg,
+                                   impl="ref", output="sparse")
+            check_flag(f"wire/sparse_output/{alg}_auto_packs",
+                       plan.wire == "packed")
+            check(f"wire/sparse_output/{alg}", plan(a_h, b_sph).densify(),
+                  a_d @ b_sp)
+        # interpret impl drives the pallas-path kernels over packed buffers
+        check("wire/spmm/ring_c[interpret]",
+              api.matmul(a_h, b_h, mesh=mesh, algorithm="ring_c",
+                         impl="interpret", wire="packed"), a_d @ b)
 
     if args.check in ("all", "api"):
         print(f"== plan-based API invariants on {g}x{g} mesh ==")

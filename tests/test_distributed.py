@@ -29,7 +29,7 @@ def _run_selftest(devices: int, check: str) -> str:
 
 @pytest.mark.parametrize("check", ["dense", "spmm", "spgemm",
                                    "spgemm_sparse", "api", "balance",
-                                   "steal3d"])
+                                   "steal3d", "wire"])
 def test_selftest_2x2(check):
     out = _run_selftest(4, check)
     assert "SELFTEST PASSED" in out

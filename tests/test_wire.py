@@ -1,0 +1,433 @@
+"""Packed wire format tests (single-device, g=1 grid; multi-device
+coverage rides ``tests/test_distributed.py`` via ``selftest --check
+wire``).
+
+Covers the ISSUE-5 satellite checklist: pack->unpack roundtrip identity
+over random structures (hypothesis-free seed sweep, like
+``test_schedule_static.py``), empty-operand (capacity-0) shipments,
+bucket monotonicity (packed wire bytes <= padded, monotone in real block
+count), packed-vs-padded allclose across every algorithm x operand kind,
+the packed cost model flipping an ``auto_select`` decision, the
+structure guard on packed plans, and the LRU bound + eviction counter on
+the plan-layer caches.
+
+All access goes through ``repro.core.api`` — importing
+``repro.core.wire`` directly is banned by ``tools/check_api.py`` (also
+asserted here).
+"""
+import dataclasses
+import importlib.util
+import pathlib
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import api
+from repro.core.api import (DistBSR, DistDense, matmul, plan_matmul,
+                            wire_capacity)
+from repro.core.bsr import random_sparse, rmat_matrix
+from repro.core.grid import bucket_capacity
+from repro.core.roofline import Machine
+from repro.kernels import ops as kops
+
+G = 1  # the main pytest process owns a single CPU device
+
+
+def _random_handle(seed, *, density=0.2, n=32, bs=4, capacity="bucket"):
+    return DistBSR.from_dense(random_sparse(n, n, density, seed=seed), g=G,
+                              block_size=bs, capacity=capacity)
+
+
+@pytest.fixture
+def operands():
+    a_d = random_sparse(16, 16, 0.3, seed=0)
+    b = np.random.default_rng(0).standard_normal((16, 8)).astype(np.float32)
+    b_sp = random_sparse(16, 16, 0.25, seed=1)
+    a_h = DistBSR.from_dense(a_d, g=G, block_size=4)
+    b_h = DistDense.for_rhs(jnp.asarray(b), a_h)
+    b_sph = DistBSR.from_dense(b_sp, g=G, block_size=4)
+    return a_d, b, b_sp, a_h, b_h, b_sph
+
+
+# ---------------------------------------------------------------------------
+# Wire capacity: bounds + monotonicity
+# ---------------------------------------------------------------------------
+def test_wire_capacity_bounds_and_monotonicity():
+    prev = 0
+    for max_real in range(0, 200, 7):
+        wc = wire_capacity(max_real)
+        assert wc >= max_real + 1           # room for the zero tail slot
+        assert wc == bucket_capacity(max_real + 1)
+        assert wc >= prev                   # monotone in real block count
+        prev = wc
+    # the padded stride clamps a bucket overshoot: packed never ships
+    # wider than the padded layout it replaces
+    assert wire_capacity(59, 67) == min(bucket_capacity(60), 67)
+    assert wire_capacity(3, 100) == bucket_capacity(4)
+
+
+def test_packed_operand_invariants():
+    """Packed layout contract over random structures: real blocks in the
+    prefix (stored order), zero tail, slot_map composes, dmap unique."""
+    for seed in range(6):
+        h = _random_handle(seed, density=0.05 + 0.1 * (seed % 3))
+        po = h.packed_operand()
+        t = h.tiled
+        store = t.store_capacity
+        assert po.wire_capacity <= store
+        blocks = np.asarray(h.packed_wire("natural")["blocks"])
+        raw = np.asarray(t.blocks)
+        for i in range(h.g):
+            for j in range(h.g):
+                nr = int(po.n_real[i, j])
+                assert nr < po.wire_capacity
+                # packed prefix is the real blocks, stored order
+                sl = po.pack_idx[i, j, :nr]
+                np.testing.assert_array_equal(blocks[i, j, :nr],
+                                              raw[i, j, sl])
+                # tail slots are guaranteed zero
+                assert np.all(blocks[i, j, nr:] == 0)
+                # slot_map: stored real slot -> its packed rank
+                np.testing.assert_array_equal(
+                    po.slot_map[i, j, sl], np.arange(nr))
+
+
+def test_pack_roundtrip_identity():
+    """Property: densify-by-gather of the packed blocks reproduces every
+    tile exactly, and the consume lists drive the augment-free SpMM
+    kernel to the same result as the stored (padded) layout."""
+    for seed in range(5):
+        n, bs = 24 + 8 * (seed % 2), 4
+        h = _random_handle(seed + 10, density=0.15, n=n, bs=bs)
+        po = h.packed_operand()
+        t = h.tiled
+        packed = np.asarray(h.packed_wire("natural")["blocks"])
+        dense = np.asarray(t.to_dense())
+        tm, tn = t.tile_shape
+        for i in range(h.g):
+            for j in range(h.g):
+                tile = dense[i * tm:(i + 1) * tm, j * tn:(j + 1) * tn]
+                # roundtrip 1: packed blocks + dense map -> dense tile
+                got = np.asarray(kops.densify_packed(
+                    jnp.asarray(packed[i, j]), jnp.asarray(po.dmap[i, j]),
+                    n_block_rows=po.tile_nbr, n_block_cols=po.tile_nbc))
+                np.testing.assert_array_equal(got, tile)
+                # roundtrip 2: consume lists (gidx/rows/cols) meet the
+                # bsr_spmm_raw(augment=False) contract bit-for-bit
+                eye = jnp.eye(tn, dtype=jnp.float32)
+                got2 = np.asarray(kops.bsr_spmm_raw(
+                    jnp.asarray(packed[i, j])[jnp.asarray(po.gidx[i, j])],
+                    jnp.asarray(po.rows[i, j]), jnp.asarray(po.cols[i, j]),
+                    eye, n_block_rows=po.tile_nbr, impl="ref"))
+                np.testing.assert_allclose(got2, tile, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Packed plans: allclose to padded, bytes never larger
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("alg", sorted(set(api.algorithms())))
+@pytest.mark.parametrize("kind", ["spmm", "spgemm"])
+def test_packed_matches_padded(operands, alg, kind, subtests=None):
+    a_d, b, b_sp, a_h, b_h, b_sph = operands
+    rhs, want = (b_h, a_d @ b) if kind == "spmm" else (b_sph, a_d @ b_sp)
+    packed = plan_matmul(a_h, rhs, algorithm=alg, impl="ref", wire="packed")
+    padded = plan_matmul(a_h, rhs, algorithm=alg, impl="ref", wire="padded")
+    assert padded.wire == "padded"
+    got_p = np.asarray(packed(a_h, rhs))
+    got_d = np.asarray(padded(a_h, rhs))
+    np.testing.assert_allclose(got_p, want, atol=1e-5)
+    np.testing.assert_allclose(got_p, got_d, atol=1e-5)
+    cm_p, cm_d = packed.cost_model(), padded.cost_model()
+    assert cm_p["total_net_bytes"] <= cm_d["total_net_bytes"]
+    assert cm_p["total_flops"] <= cm_d["total_flops"]
+    if packed.wire == "packed":
+        # packed plans are their own cache entries, keyed on structure
+        assert packed is not padded
+
+
+def test_sparse_output_auto_packs_and_matches(operands):
+    a_d, _, b_sp, a_h, _, b_sph = operands
+    for alg in api.sparse_algorithms():
+        packed = plan_matmul(a_h, b_sph, algorithm=alg, impl="ref",
+                             output="sparse")          # wire="auto"
+        padded = plan_matmul(a_h, b_sph, algorithm=alg, impl="ref",
+                             output="sparse", wire="padded")
+        assert packed.wire == "packed" and padded.wire == "padded"
+        np.testing.assert_allclose(np.asarray(packed(a_h, b_sph).densify()),
+                                   a_d @ b_sp, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(packed(a_h, b_sph).densify()),
+                                   np.asarray(padded(a_h, b_sph).densify()),
+                                   atol=1e-5)
+        assert packed.cost_model()["total_net_bytes"] \
+            <= padded.cost_model()["total_net_bytes"]
+
+
+def test_packed_chain_stays_packed(operands):
+    """A chained sparse product (whose handle may store structurally
+    predicted but numerically zero blocks) re-packs on the next link."""
+    a_d, _, _, a_h, _, _ = operands
+    c2 = matmul(a_h, a_h, algorithm="ring_c", impl="ref", output="sparse")
+    c3 = matmul(c2, a_h, algorithm="ring_c", impl="ref", output="sparse")
+    np.testing.assert_allclose(np.asarray(c3.densify()), a_d @ a_d @ a_d,
+                               atol=1e-4)
+
+
+def test_empty_operand_packed_shipments():
+    """Capacity-0 operands ship one zero block per tile (wire capacity 1)
+    and multiply end-to-end to zeros on the packed wire."""
+    e_h = DistBSR.from_dense(np.zeros((16, 16), np.float32), g=G,
+                             block_size=4)
+    assert e_h.capacity == 0
+    assert e_h.packed_operand().wire_capacity == 1
+    b_h = DistDense.for_rhs(jnp.ones((16, 4), jnp.float32), e_h)
+    for alg in ("ring_c", "summa_ag", "steal3d"):
+        plan = plan_matmul(e_h, b_h, algorithm=alg, impl="ref",
+                           wire="packed")
+        got = np.asarray(plan(e_h, b_h))
+        np.testing.assert_array_equal(got, np.zeros((16, 4), np.float32))
+        assert plan.cost_model()["total_net_bytes"] \
+            <= plan_matmul(e_h, b_h, algorithm=alg, impl="ref",
+                           wire="padded").cost_model()["total_net_bytes"]
+
+
+def test_packed_bytes_monotone_in_real_count():
+    """More real blocks => packed wire bytes never shrink, and packed
+    stays <= padded at every density."""
+    b = jnp.ones((32, 8), jnp.float32)
+    prev = 0.0
+    for density in (0.01, 0.05, 0.15, 0.4, 0.8):
+        a_h = DistBSR.from_dense(random_sparse(32, 32, density, seed=3),
+                                 g=G, block_size=4, capacity=64)
+        b_h = DistDense.for_rhs(b, a_h)
+        cm_p = plan_matmul(a_h, b_h, algorithm="ring_c", impl="ref",
+                           wire="packed").cost_model()
+        cm_d = plan_matmul(a_h, b_h, algorithm="ring_c", impl="ref",
+                           wire="padded").cost_model()
+        assert cm_p["total_net_bytes"] <= cm_d["total_net_bytes"]
+        assert cm_p["total_net_bytes"] >= prev
+        prev = cm_p["total_net_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# Guards + dispatch
+# ---------------------------------------------------------------------------
+def test_packed_plan_guards_structure(operands):
+    _, _, _, a_h, b_h, _ = operands
+    plan = plan_matmul(a_h, b_h, algorithm="ring_c", impl="ref",
+                       wire="packed")
+    other = DistBSR.from_dense(random_sparse(16, 16, 0.15, seed=9), g=G,
+                               block_size=4, capacity=a_h.capacity)
+    assert other.abstract_key() == a_h.abstract_key()
+    with pytest.raises(ValueError, match="structure"):
+        plan(other, b_h)
+    plan2 = plan_matmul(other, b_h, algorithm="ring_c", impl="ref",
+                        wire="packed")
+    assert plan2 is not plan
+
+
+def test_padded_plans_still_share_across_structures(operands):
+    """wire='auto' keeps the dense-output path padded, so the bucketed
+    plan-sharing property survives the packed-wire default."""
+    _, _, _, a_h, b_h, _ = operands
+    other = DistBSR.from_dense(random_sparse(16, 16, 0.15, seed=9), g=G,
+                               block_size=4, capacity=a_h.capacity)
+    p1 = plan_matmul(a_h, b_h, algorithm="ring_c", impl="ref")
+    p2 = plan_matmul(other, b_h, algorithm="ring_c", impl="ref")
+    assert p1 is p2 and p1.wire == "padded"
+
+
+def test_packed_rejects_dense_operands():
+    a = np.random.default_rng(1).standard_normal((8, 8)).astype(np.float32)
+    with pytest.raises(ValueError, match="block-sparse"):
+        plan_matmul(jnp.asarray(a), jnp.asarray(a), g=G, wire="packed")
+    with pytest.raises(ValueError, match="wire"):
+        plan_matmul(jnp.asarray(a), jnp.asarray(a), g=G, wire="compressed")
+
+
+def test_ring_a_dense_b_degrades_to_padded(operands):
+    """A schedule with no packable traffic for these operands quietly
+    builds its padded plan (same cache entry as wire='padded')."""
+    _, _, _, a_h, b_h, _ = operands
+    p = plan_matmul(a_h, b_h, algorithm="ring_a", impl="ref", wire="packed")
+    assert p.wire == "padded"
+    assert p is plan_matmul(a_h, b_h, algorithm="ring_a", impl="ref",
+                            wire="padded")
+
+
+# ---------------------------------------------------------------------------
+# Cost model: packing flips the predicted winner
+# ---------------------------------------------------------------------------
+def test_auto_select_flips_on_packed_wire():
+    """Hypersparse A pinned at a large capacity: padded scoring is
+    dominated by A's padded stride, so the stationary-A ring (which never
+    ships A) wins; packed scoring shrinks A to a few real blocks, so the
+    stationary-C ring wins.  auto_select must reflect exactly that."""
+    reg = api.AlgorithmRegistry()
+    reg.register(api.REGISTRY.get("ring_c"))
+    reg.register(api.REGISTRY.get("ring_a"))
+    # ~2 real blocks per tile, capacity pinned to 100 (e.g. unified with a
+    # much denser matrix for plan sharing)
+    a_d = np.zeros((32, 32), np.float32)
+    a_d[0, 0] = a_d[17, 21] = 1.0
+    a_h = DistBSR.from_dense(a_d, g=G, block_size=4, capacity=100)
+    b_h = DistDense.for_rhs(jnp.ones((32, 8), jnp.float32), a_h)
+    comm_bound = Machine("probe", 1e18, 1e18, 1e3, 4, hop_latency=0.0)
+    choice_padded, scores_padded = api.auto_select(
+        a_h, b_h, machine=comm_bound, registry=reg, wire="padded")
+    choice_packed, scores_packed = api.auto_select(
+        a_h, b_h, machine=comm_bound, registry=reg, wire="packed")
+    assert choice_padded == "ring_a"
+    assert choice_packed == "ring_c"
+    # packing only ever shrinks a schedule's predicted cost
+    for name in scores_packed:
+        assert scores_packed[name] <= scores_padded[name] * (1 + 1e-9)
+
+
+def test_plan_records_wire_and_caps(operands):
+    _, _, _, a_h, b_h, _ = operands
+    p = plan_matmul(a_h, b_h, algorithm="ring_c", impl="ref", wire="packed")
+    assert p.wire == "packed"
+    assert p._wire_caps["a"] == a_h.packed_operand().wire_capacity
+    sp = plan_matmul(a_h, b_h, algorithm="steal3d", impl="ref",
+                     wire="packed")
+    assert sp.steal.wire == "packed"
+    assert sp.steal.a_wire_capacity == a_h.packed_operand().wire_capacity
+    assert len(sp.steal.a_round_cap) == len(sp.steal.a_deltas)
+
+
+# ---------------------------------------------------------------------------
+# LRU-bounded plan caches (satellite)
+# ---------------------------------------------------------------------------
+def test_plan_cache_lru_bound_and_eviction_counter(operands):
+    _, _, _, a_h, _, _ = operands
+    api.clear_plan_cache()
+    cache = api._PLAN_CACHE
+    old_max = cache.maxsize
+    ev0 = cache.evictions
+    cache.maxsize = 2
+    try:
+        plans = {}
+        for n in (4, 8, 12):
+            b_h = DistDense.for_rhs(jnp.ones((16, n), jnp.float32), a_h)
+            plans[n] = plan_matmul(a_h, b_h, algorithm="ring_c",
+                                   impl="ref")
+        assert api.plan_cache_size() <= 2
+        assert cache.evictions >= ev0 + 1
+        stats = api.cache_stats()
+        assert stats["plans"]["size"] <= 2
+        assert stats["plans"]["maxsize"] == 2
+        assert stats["plans"]["evictions"] == cache.evictions
+        # the evicted (oldest) entry rebuilds on demand as a fresh plan
+        b4 = DistDense.for_rhs(jnp.ones((16, 4), jnp.float32), a_h)
+        rebuilt = plan_matmul(a_h, b4, algorithm="ring_c", impl="ref")
+        assert rebuilt is not plans[4]
+        np.testing.assert_allclose(
+            np.asarray(rebuilt(a_h, b4)),
+            np.asarray(plans[4](a_h, b4)), atol=1e-6)
+        # the most recent entry is still cached
+        b12 = DistDense.for_rhs(jnp.ones((16, 12), jnp.float32), a_h)
+        assert plan_matmul(a_h, b12, algorithm="ring_c",
+                           impl="ref") is plans[12]
+    finally:
+        cache.maxsize = old_max
+        api.clear_plan_cache()
+
+
+def test_steal_cache_lru_bound(operands):
+    _, _, _, a_h, b_h, _ = operands
+    api.clear_plan_cache()
+    cache = api._STEAL_CACHE
+    old_max = cache.maxsize
+    cache.maxsize = 1
+    try:
+        plan_matmul(a_h, b_h, algorithm="steal3d", impl="ref",
+                    cache=False)
+        plan_matmul(a_h, b_h, algorithm="steal3d", impl="ref",
+                    wire="packed", cache=False)
+        assert len(cache) <= 1
+        assert cache.evictions >= 1
+    finally:
+        cache.maxsize = old_max
+        api.clear_plan_cache()
+
+
+# ---------------------------------------------------------------------------
+# Hot-loop hygiene: packed scanned steps are gather-only
+# ---------------------------------------------------------------------------
+def _subjaxprs(v):
+    from jax import core as jcore
+    if isinstance(v, jcore.ClosedJaxpr):
+        yield v.jaxpr
+    elif isinstance(v, jcore.Jaxpr):
+        yield v
+    elif isinstance(v, (list, tuple)):
+        for x in v:
+            yield from _subjaxprs(x)
+
+
+def _iter_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from _iter_eqns(sub)
+
+
+@pytest.mark.parametrize("alg", ["ring_c", "ring_a", "ring_c_bidir"])
+@pytest.mark.parametrize("kind", ["spmm", "spgemm"])
+def test_packed_scan_step_stays_gather_only(operands, alg, kind):
+    """The packed ring steps replace coverage sort / B-densify scatter
+    with plan-time static gathers; the scanned jaxpr must stay
+    sort/scatter-free like the padded invariant in test_api."""
+    import jax
+    _, _, _, a_h, b_h, _ = operands
+    # hypersparse B so the B-pack win check keeps ring_a on the packed path
+    b_hyp = DistBSR.from_dense(random_sparse(16, 16, 0.05, seed=2), g=G,
+                               block_size=4)
+    rhs = b_h if kind == "spmm" else b_hyp
+    plan = plan_matmul(a_h, rhs, algorithm=alg, impl="interpret",
+                       wire="packed")
+    if plan.wire != "packed":
+        pytest.skip("no packable traffic on this operand combination")
+    pa = a_h.packed_wire(plan.algorithm.a_placement) if "a" in plan._packs \
+        else a_h.placed(plan.algorithm.a_placement)
+    pb = rhs.packed_wire(plan.algorithm.b_placement) if "b" in plan._packs \
+        else rhs.placed(plan.algorithm.b_placement)
+    jaxpr = jax.make_jaxpr(
+        lambda a, b, x: plan._exec(a, b, x))(pa, pb, plan._aux).jaxpr
+    prims, seen_scan = set(), False
+    for eqn in _iter_eqns(jaxpr):
+        if eqn.primitive.name == "scan":
+            seen_scan = True
+            for sub in _iter_eqns(eqn.params["jaxpr"].jaxpr):
+                prims.add(sub.primitive.name)
+    assert seen_scan, "expected a scanned ring loop in the packed plan"
+    offenders = {p for p in prims if "sort" in p or "scatter" in p}
+    assert not offenders, (
+        f"hot-loop bloat in packed {alg}/{kind} scan step: "
+        f"{sorted(offenders)}")
+
+
+# ---------------------------------------------------------------------------
+# check_api: repro.core.wire is internal to core/
+# ---------------------------------------------------------------------------
+def _load_check_api():
+    path = pathlib.Path(__file__).resolve().parents[1] / "tools" \
+        / "check_api.py"
+    spec = importlib.util.spec_from_file_location("check_api_wire", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_check_api_flags_wire_import(tmp_path):
+    (tmp_path / "tests").mkdir()
+    (tmp_path / "src" / "repro" / "core").mkdir(parents=True)
+    (tmp_path / "tests" / "bad.py").write_text(
+        "from repro.core.wire import pack_operand\n")
+    (tmp_path / "src" / "repro" / "core" / "ok.py").write_text(
+        "from repro.core import wire\n")
+    found = _load_check_api().violations(str(tmp_path))
+    assert len(found) == 1 and "bad.py" in found[0]

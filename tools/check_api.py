@@ -59,6 +59,15 @@ FORBIDDEN_MODULES = {
         "dirs": ("examples", "benchmarks", "tools", "tests", "src/repro"),
         "allow": ("src/repro/core",),
     },
+    # The packed wire layer couples consume maps / remapped pair lists to
+    # executables exactly like the symbolic phase; its public surface is
+    # plan_matmul(wire="packed") plus the repro.core.api re-exports
+    # (PackedOperand / wire_capacity / DistBSR.packed_operand).
+    "repro.core.wire": {
+        "parent": "repro.core", "leaf": "wire",
+        "dirs": ("examples", "benchmarks", "tools", "tests", "src/repro"),
+        "allow": ("src/repro/core",),
+    },
 }
 
 

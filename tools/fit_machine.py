@@ -2,8 +2,10 @@
 """Fit Machine.net_bw / hop_latency from measured benchmark trajectories.
 
 ``benchmarks/run.py --json`` records predicted-vs-measured per-multiply
-times for every algorithm (g=1 micro-bench + the 4x4 R-MAT balance
-experiment) in ``BENCH_kernels.json``.  The auto-scheduler's alpha-beta
+times for every algorithm (g=1 micro-bench + the 4x4 R-MAT balance and
+padded-vs-packed wire experiments) in ``BENCH_kernels.json``; packed-wire
+records fit against the *packed* byte terms — the bytes those plans
+actually ship.  The auto-scheduler's alpha-beta
 model (``api._predicted_time``) is linear in the two network unknowns:
 
     t_comm = total_bytes / (net_bw * duplex) + n_msgs * hop_latency
@@ -174,8 +176,55 @@ def _balance_records(payload: Dict) -> List[Dict]:
     return out
 
 
+def _wire_records(payload: Dict) -> List[Dict]:
+    """Reconstruct the 4x4 wire-bench cost models from recorded meta.
+
+    Padded records use the stored-stride byte terms; packed records use
+    the *packed* terms (``wire_caps`` — blocks-only at the recorded wire
+    capacity), so the fit sees the bytes each plan actually ships.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import api
+
+    section = payload.get("wire_rmat_4x4", {})
+    algos = section.get("algorithms")
+    if not algos:
+        return []
+    g = section["g"]
+    n = 1 << section["rmat_scale"]
+    bs = section["block_size"]
+    n_cols = section["n_cols"]
+    cap = section["a_capacity"]
+    wc = section["a_wire_capacity"]
+    a_key = ("bsr", (n, n), (g, g), bs, cap, "float32")
+    b_key = ("dense", (n, n_cols), g, "float32")
+    geom = api._Geom(g=g, tm=n // g, tn=n_cols // g,
+                     a_nbr=(n // g) // bs, b_nbr=0, b_nbc=0, impl=None,
+                     axr="row", axc="col", out_dtype=jnp.float32)
+    out = []
+    for name, metrics in algos.items():
+        if name not in api.REGISTRY:
+            continue
+        alg = api.REGISTRY.get(name)
+        if alg.cost_fn is not None:
+            continue                     # see _g1_records (steal3d)
+        for wire, caps in (("padded", None), ("packed", {"a": wc})):
+            measured = metrics.get(f"per_multiply_s_{wire}")
+            if measured is None:
+                continue
+            cm = api._cost_model(alg, geom, a_key, b_key, wire_caps=caps)
+            out.append({"cm": cm, "alg": alg,
+                        "source": f"wire/{wire}/{name}",
+                        "measured": measured,
+                        "predicted": metrics.get(
+                            f"predicted_s_v5e_{wire}")})
+    return out
+
+
 def collect_records(payload: Dict) -> List[Dict]:
-    return _g1_records(payload) + _balance_records(payload)
+    return _g1_records(payload) + _balance_records(payload) \
+        + _wire_records(payload)
 
 
 def main(argv: Optional[List[str]] = None) -> int:
