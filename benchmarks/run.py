@@ -15,7 +15,10 @@ wire experiments (R-MAT on a 4x4 grid, each in a 16-device subprocess)
 and writes ``BENCH_kernels.json`` at the repo root: plan build time,
 per-multiply time, padded-flop waste, output footprint,
 ``wire_bytes_padded`` vs ``wire_bytes_packed`` and predicted-vs-measured
-cost per algorithm — the perf-trajectory baseline for future PRs.  Each
+cost per algorithm — the perf-trajectory baseline for future PRs.  It also
+captures a ``serve_trace`` section (``serve_bench``: Poisson arrivals
+through the sparse ``ServeEngine``) with p50/p99 TTFT/TPOT,
+plans-per-second and the plan-cache hit rate.  Each
 baseline refresh also re-fits the network constants of the cost model
 (``tools/fit_machine.py``) from its own records and embeds the calibrated
 preset plus per-record predicted-vs-measured drift under ``machine_fit``.
@@ -106,12 +109,15 @@ def _write_json(smoke: bool) -> None:
     # JSON object.
     extra = ("--smoke",) if smoke else ()
     all_ok = True
-    for module, section in (
-            ("benchmarks.balance_bench", "balance_rmat_4x4"),
-            ("benchmarks.spgemm_bench", "spgemm_rmat_4x4"),
-            ("benchmarks.steal_bench", "steal_rmat_4x4"),
-            ("benchmarks.wire_bench", "wire_rmat_4x4")):
-        raw = _run_subprocess(module, 16, *extra, quiet=True)
+    # serve_bench drives the single-device serving engine; the rest are
+    # 16-device grid experiments.
+    for module, section, devices in (
+            ("benchmarks.balance_bench", "balance_rmat_4x4", 16),
+            ("benchmarks.spgemm_bench", "spgemm_rmat_4x4", 16),
+            ("benchmarks.steal_bench", "steal_rmat_4x4", 16),
+            ("benchmarks.wire_bench", "wire_rmat_4x4", 16),
+            ("benchmarks.serve_bench", "serve_trace", 1)):
+        raw = _run_subprocess(module, devices, *extra, quiet=True)
         try:
             payload[section] = json.loads(raw) if raw else {
                 "error": f"{module} failed"}
@@ -165,10 +171,15 @@ def main() -> None:
         kernels_bench.main(smoke=True)
         ok = True
         # wire_bench additionally *asserts* packed wire bytes <= padded and
-        # packed results allclose to padded (exits non-zero on violation)
-        for module in ("benchmarks.balance_bench", "benchmarks.spgemm_bench",
-                       "benchmarks.steal_bench", "benchmarks.wire_bench"):
-            raw = _run_subprocess(module, 16, "--smoke", quiet=True)
+        # packed results allclose to padded; serve_bench asserts the
+        # serving contract (dense-reference match, plan hits > misses,
+        # zero dropped tokens) — both exit non-zero on violation
+        for module, devices in (("benchmarks.balance_bench", 16),
+                                ("benchmarks.spgemm_bench", 16),
+                                ("benchmarks.steal_bench", 16),
+                                ("benchmarks.wire_bench", 16),
+                                ("benchmarks.serve_bench", 1)):
+            raw = _run_subprocess(module, devices, "--smoke", quiet=True)
             name = module.rsplit(".", 1)[1]
             print(f"smoke,{name},{'ok' if raw else 'FAILED'}")
             ok = ok and bool(raw)

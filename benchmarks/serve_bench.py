@@ -1,0 +1,122 @@
+"""Synthetic many-user serving trace through ServeEngine.
+
+The acceptance experiment for the serving subsystem: Poisson arrivals with
+mixed prompt lengths are served by a ``ServeEngine`` with the sparse hot
+path on — MoE expert dispatch and prefill attention scoring run as
+``DistBSR``/``plan_matmul`` products — and the run records p50/p99
+TTFT/TPOT, tokens/sec, plans-per-second and the plan-cache hit rate into
+``BENCH_kernels.json`` (section ``serve_trace``) via ``run.py --json``.
+
+The run *asserts* the serving contract and exits non-zero on violation,
+so the ``--smoke`` tier-1 path enforces it in CI:
+
+* every decoded stream equals the unbatched dense-reference
+  ``lm.greedy_decode`` of the same prompt (continuous batching, bucket
+  padding and the sparse path change nothing observable);
+* plan-cache hits outnumber misses over the trace (bucketed shapes make
+  tenants share plans);
+* zero dropped tokens at the smoke configs' default capacity factor.
+
+Runs on a single device (g=1 process grid).  Prints one JSON object.
+
+Usage:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+PROMPT_LENS = (6, 10, 12, 16, 20, 28)    # buckets 8 / 16 / 16 / 16 / 32 / 32
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="olmoe-1b-7b")
+    p.add_argument("--requests", type=int, default=16)
+    p.add_argument("--gen-len", type=int, default=6)
+    p.add_argument("--mean-interarrival-s", type=float, default=0.05)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--smoke", action="store_true",
+                   help="4-request quick pass for tier-1")
+    args = p.parse_args()
+    if args.smoke:
+        args.requests, args.gen_len = 4, 3
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core import api
+    from repro.models import lm, transformer as tf
+    from repro.serving import ServeEngine
+
+    cfg = get_config(args.arch, smoke=True)
+    params = tf.init_params(cfg, jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+
+    # Poisson process: exponential interarrivals, mixed prompt lengths
+    arrivals = np.cumsum(rng.exponential(args.mean_interarrival_s,
+                                         args.requests))
+    lens = rng.choice(PROMPT_LENS, args.requests)
+    prompts = [rng.integers(0, cfg.vocab_size, (int(n),)).astype(np.int32)
+               for n in lens]
+
+    api.clear_plan_cache()
+    engine = ServeEngine(cfg, params=params, max_batch=4, max_len=64,
+                         sparse=True)
+    for toks, at in zip(prompts, arrivals):
+        engine.submit(toks, max_new_tokens=args.gen_len, arrival=float(at))
+    results = engine.run()
+    stats = engine.summary()
+
+    failures = []
+    for rid, toks in enumerate(prompts):
+        ref = np.asarray(lm.greedy_decode(
+            params, {"tokens": jnp.asarray(toks[None])}, cfg,
+            steps=args.gen_len, max_len=64))[0]
+        if not (results[rid] == ref).all():
+            failures.append(f"request {rid} diverges from dense reference")
+    plans = stats["plan_cache"]
+    if plans["hits"] <= plans["misses"]:
+        failures.append(f"plan-cache hits ({plans['hits']}) <= misses "
+                        f"({plans['misses']}): no cross-request sharing")
+    if stats["dropped_max"] > 0:
+        failures.append(f"dropped tokens at default capacity factor "
+                        f"({stats['dropped_max']})")
+
+    out = {
+        "arch": args.arch,
+        "requests": args.requests,
+        "gen_len": args.gen_len,
+        "mean_interarrival_s": args.mean_interarrival_s,
+        "prompt_lens": [int(n) for n in lens],
+        "ttft_p50_s": stats["ttft_p50_s"],
+        "ttft_p99_s": stats["ttft_p99_s"],
+        "tpot_p50_s": stats["tpot_p50_s"],
+        "tpot_p99_s": stats["tpot_p99_s"],
+        "tokens_per_s": stats["tokens_per_s"],
+        "decode_tok_per_s": stats["decode_tok_per_s"],
+        "prefill_s": stats["prefill_s"],
+        "decode_s": stats["decode_s"],
+        "plan_lookups": stats["plan_lookups"],
+        "plans_per_second": stats["plans_per_second"],
+        "plan_cache": plans,
+        "plan_cache_hit_rate": stats["plan_cache_hit_rate"],
+        "dropped_mean": stats["dropped_mean"],
+        "dropped_max": stats["dropped_max"],
+        "matches_dense_reference": not any("diverges" in f
+                                           for f in failures),
+        "hits_gt_misses": plans["hits"] > plans["misses"],
+    }
+    json.dump(out, sys.stdout, indent=1)
+    print()
+    if failures:
+        print("serve_bench FAILED: " + "; ".join(failures), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -194,19 +194,26 @@ class _LRUCache:
     Eviction is safe by construction: every entry is rebuilt on demand
     from its operands, so a cap only costs a rebuild on re-miss.
     ``evictions`` counts capacity evictions (not explicit invalidation)
-    for observability; ``clear()`` resets entries but keeps the counter.
+    for observability; ``hits`` / ``misses`` count ``get`` outcomes so a
+    serving layer can report plan reuse rates (hits/(hits+misses)) and
+    plans-per-second without instrumenting every call site.  ``clear()``
+    resets entries but keeps all counters.
     """
 
     def __init__(self, maxsize: int):
         self.maxsize = int(maxsize)
         self.evictions = 0
+        self.hits = 0
+        self.misses = 0
         self._d: "collections.OrderedDict" = collections.OrderedDict()
 
     def get(self, key, default=None):
         try:
             value = self._d[key]
         except KeyError:
+            self.misses += 1
             return default
+        self.hits += 1
         self._d.move_to_end(key)
         return value
 
@@ -269,9 +276,10 @@ def plan_cache_size() -> int:
 
 
 def cache_stats() -> Dict[str, Dict[str, int]]:
-    """Sizes, caps and capacity-eviction counts of the plan-layer caches."""
+    """Sizes, caps, hit/miss and eviction counts of the plan-layer caches."""
     return {name: {"size": len(c), "maxsize": c.maxsize,
-                   "evictions": c.evictions}
+                   "evictions": c.evictions,
+                   "hits": c.hits, "misses": c.misses}
             for name, c in (("plans", _PLAN_CACHE),
                             ("symbolic", _SYMBOLIC_CACHE),
                             ("density", _DENSITY_CACHE),

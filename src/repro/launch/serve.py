@@ -1,59 +1,46 @@
-"""Batched serving driver: continuous prefill + greedy decode.
+"""Serving CLI — a thin wrapper over ``repro.serving.ServeEngine``.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
-        --requests 4 --prompt-len 16 --gen-len 16
+        --requests 4 --prompt-len 16 --gen-len 16 [--sparse]
 
-Demonstrates the serving path end-to-end: batched prefill, KV/state cache
-management (ring buffers for local attention; SSM/RG-LRU states), stepwise
-decode, simple request batching with padding.
+The engine does the real work: bucketed admission, continuous batching,
+per-window timing (prefill and decode are measured separately, each
+blocking on its outputs — the old loop here timed prefill without a
+``block_until_ready``, letting async dispatch smear prefill work into the
+decode window), and MoE dropped-token stats threaded into the metrics
+layer.  ``--sparse`` routes MoE dispatch and prefill attention scoring
+through the ``DistBSR``/``plan_matmul`` engine.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 
 
 def serve(cfg, *, requests: int, prompt_len: int, gen_len: int,
-          max_len: int = None, seed: int = 0, mesh=None):
-    import jax
-    import jax.numpy as jnp
-
-    from repro.models import lm, transformer as tf
+          max_len: int = None, seed: int = 0, mesh=None,
+          sparse: bool = False, max_batch: int = None):
+    """Serve ``requests`` synthetic prompts; returns generations + metrics."""
+    from repro.serving import ServeEngine
 
     max_len = max_len or (prompt_len + gen_len + 8)
-    params = tf.init_params(cfg, jax.random.PRNGKey(seed))
     rng = np.random.default_rng(seed)
-    prompts = rng.integers(0, cfg.vocab_size, (requests, prompt_len))
-    batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
-    if cfg.frontend == "vlm":
-        batch["patches"] = jnp.asarray(
-            rng.standard_normal(
-                (requests, cfg.num_patches, cfg.frontend_dim)),
-            jnp.float32)
-
-    t0 = time.time()
-    logits, caches, pos = lm.prefill(params, batch, cfg, max_len,
-                                     cache_dtype=jnp.float32)
-    t_prefill = time.time() - t0
-    step = jax.jit(lm.make_decode_step(cfg))
-    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    out = [tok]
-    t0 = time.time()
-    for _ in range(gen_len - 1):
-        logits, caches = step(params, tok, caches, pos)
-        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        out.append(tok)
-        pos = pos + 1
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-    gen = np.asarray(jnp.concatenate(out, axis=1))
+    engine = ServeEngine(cfg, seed=seed, max_len=max_len, mesh=mesh,
+                         sparse=sparse,
+                         max_batch=max_batch or min(requests, 4))
+    for _ in range(requests):
+        engine.submit(rng.integers(0, cfg.vocab_size, (prompt_len,)),
+                      max_new_tokens=gen_len)
+    results = engine.run()
+    stats = engine.summary()
+    gen = np.stack([results[rid] for rid in sorted(results)])
     return {
         "generated": gen,
-        "prefill_s": t_prefill,
-        "decode_s": t_decode,
-        "decode_tok_per_s": requests * (gen_len - 1) / max(t_decode, 1e-9),
+        "prefill_s": stats["prefill_s"],
+        "decode_s": stats["decode_s"],
+        "decode_tok_per_s": stats["decode_tok_per_s"] or 0.0,
+        "metrics": stats,
     }
 
 
@@ -65,6 +52,9 @@ def main(argv=None) -> int:
     p.add_argument("--prompt-len", type=int, default=16)
     p.add_argument("--gen-len", type=int, default=16)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--sparse", action="store_true",
+                   help="route MoE dispatch / attention scoring through "
+                        "the DistBSR plan engine")
     args = p.parse_args(argv)
 
     from repro.configs import get_config
@@ -72,10 +62,16 @@ def main(argv=None) -> int:
     if cfg.is_encoder:
         raise SystemExit(f"{args.arch} is encoder-only; no serve path")
     out = serve(cfg, requests=args.requests, prompt_len=args.prompt_len,
-                gen_len=args.gen_len, seed=args.seed)
+                gen_len=args.gen_len, seed=args.seed, sparse=args.sparse)
+    m = out["metrics"]
     print(f"[serve] prefill {out['prefill_s']:.2f}s, "
           f"decode {out['decode_s']:.2f}s "
           f"({out['decode_tok_per_s']:.1f} tok/s)")
+    print(f"[serve] ttft p50/p99 {m['ttft_p50_s']:.3f}/{m['ttft_p99_s']:.3f}s"
+          f", tpot p50/p99 {m['tpot_p50_s']:.3f}/{m['tpot_p99_s']:.3f}s")
+    print(f"[serve] plan lookups {m['plan_lookups']} "
+          f"(hit rate {m['plan_cache_hit_rate']}), "
+          f"dropped mean/max {m['dropped_mean']:.4f}/{m['dropped_max']:.4f}")
     print(f"[serve] sample generation: {out['generated'][0][:16].tolist()}")
     return 0
 

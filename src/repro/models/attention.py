@@ -202,7 +202,9 @@ def init_attn_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
     return {
         "k": jnp.zeros((batch, s, kh, hd), dtype),
         "v": jnp.zeros((batch, s, kh, hd), dtype),
-        "pos": jnp.full((s,), -1, jnp.int32),   # global position per slot
+        # global position per slot, per request: rows advance independently
+        # under continuous batching (see repro.serving), -1 = never written
+        "pos": jnp.full((batch, s), -1, jnp.int32),
     }
 
 
@@ -222,7 +224,7 @@ def attn_cache_specs(cfg: ModelConfig, kind: str) -> Dict:
     return {
         "k": kv_spec,
         "v": kv_spec,
-        "pos": P(None),
+        "pos": P(BATCH_AXES, None),
     }
 
 
@@ -241,32 +243,40 @@ def _write_prefill(cache: Dict, k, v, positions, cfg: ModelConfig, kind: str):
     slots = pos_tail % s
     new_k = cache["k"].at[:, slots].set(k_tail)
     new_v = cache["v"].at[:, slots].set(v_tail)
-    new_pos = cache["pos"].at[slots].set(pos_tail)
+    new_pos = cache["pos"].at[:, slots].set(pos_tail[None, :])
     return {"k": new_k, "v": new_v, "pos": new_pos}
 
 
 def attn_decode(p: Dict, x, cache: Dict, pos, cfg: ModelConfig, kind: str
                 ) -> Tuple[jnp.ndarray, Dict]:
-    """Single-token decode step.  x: [B, 1, d]; pos: scalar int32."""
+    """Single-token decode step.  x: [B, 1, d].
+
+    ``pos`` is a scalar int32 (all rows at the same position — the classic
+    batch-decode path) or an int32 ``[B]`` vector of per-request positions,
+    which is what lets continuous batching mix requests at different depths
+    in one decode batch.  A scalar is broadcast; both paths share the code
+    below.
+    """
     b = x.shape[0]
     q, k, v = _project_qkv(p, x, cfg)
-    pos_arr = jnp.full((1,), pos, jnp.int32)
-    sin, cos = rope(pos_arr, cfg.resolved_head_dim, cfg.rope_theta)
+    pos_b = jnp.asarray(pos, jnp.int32)
+    if pos_b.ndim == 0:
+        pos_b = jnp.broadcast_to(pos_b, (b,))
+    sin, cos = rope(pos_b[:, None], cfg.resolved_head_dim, cfg.rope_theta)
     q = apply_rope(q, sin, cos)
     k = apply_rope(k, sin, cos)
     s = cache["k"].shape[1]
-    slot = pos % s
-    new_k = jax.lax.dynamic_update_slice_in_dim(
-        cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-    new_v = jax.lax.dynamic_update_slice_in_dim(
-        cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
-    new_pos = jax.lax.dynamic_update_slice_in_dim(
-        cache["pos"], pos_arr, slot, axis=0)
-    # attend over valid slots: written, <= pos, and within window if local
-    ok = (new_pos >= 0) & (new_pos <= pos)
+    slot = pos_b % s
+    bidx = jnp.arange(b)
+    new_k = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+    new_v = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+    new_pos = cache["pos"].at[bidx, slot].set(pos_b)
+    # attend over valid slots: written, <= pos, and within window if local —
+    # all per request, since each row carries its own position
+    ok = (new_pos >= 0) & (new_pos <= pos_b[:, None])
     if kind == "l" and cfg.local_window:
-        ok = ok & (pos - new_pos < cfg.local_window)
-    mask = jnp.broadcast_to(ok[None, None, :], (b, 1, s))
+        ok = ok & (pos_b[:, None] - new_pos < cfg.local_window)
+    mask = ok[:, None, :]
     out = _sdpa(q, new_k.astype(x.dtype), new_v.astype(x.dtype), mask, cfg)
     out = jnp.einsum("bte,ed->btd", out.reshape(b, 1, -1),
                      p["wo"].astype(x.dtype))

@@ -67,11 +67,39 @@ def make_train_step(cfg: ModelConfig, optimizer):
 # ---------------------------------------------------------------------------
 # Serving
 # ---------------------------------------------------------------------------
+def _mask_pad_slots(caches, lengths):
+    """Invalidate KV-cache slots written by right-padding tokens.
+
+    Attention caches carry per-request slot positions (``pos: [units, B,
+    s]``); slots at or beyond a request's real length are marked -1 so
+    decode masks them out.  Requires no ring wrap over the padded span
+    (``padded len <= cache_len``) — the batcher guarantees this.
+    Recurrent-state caches (no ``pos`` key) pass through untouched.
+    """
+    ln = lengths[None, :, None]
+
+    def fix(c):
+        if isinstance(c, dict) and "pos" in c and "k" in c:
+            pos = c["pos"]
+            return {**c, "pos": jnp.where(pos < ln, pos, -1)}
+        return c
+
+    return [[fix(c) for c in group] for group in caches]
+
+
 def prefill(params: Dict, batch: Dict, cfg: ModelConfig, max_len: int,
-            cache_dtype=jnp.bfloat16):
+            cache_dtype=jnp.bfloat16, lengths=None):
     """Run the prompt through the model, filling a fresh decode cache.
 
     Returns (last_token_logits [B, V], caches, next_pos).
+
+    ``lengths`` (int32 [B], optional) marks right-padded prompts: logits
+    are read at each request's last *real* token, pad-written cache slots
+    are invalidated, and ``next_pos`` comes back as the per-request vector
+    ``lengths`` instead of a shared scalar.  Under causal attention a
+    right-padded prefill is then exactly the unpadded one — this is what
+    lets the serving batcher bucket prompt shapes (shared jit traces,
+    shared matmul plans) without perturbing outputs.
     """
     if cfg.is_encoder:
         raise ValueError("encoder models have no decode path")
@@ -80,18 +108,31 @@ def prefill(params: Dict, batch: Dict, cfg: ModelConfig, max_len: int,
     caches = tf.init_cache(cfg, bsz, max_len, cache_dtype)
     logits, caches, _ = tf.forward(params, batch, cfg, caches=caches)
     t = logits.shape[1]
-    return logits[:, -1], caches, jnp.asarray(t, jnp.int32)
+    if lengths is None:
+        return logits[:, -1], caches, jnp.asarray(t, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    last = jnp.take_along_axis(
+        logits, (lengths - 1)[:, None, None], axis=1)[:, 0]
+    return last, _mask_pad_slots(caches, lengths), lengths
 
 
-def make_decode_step(cfg: ModelConfig):
+def make_decode_step(cfg: ModelConfig, with_aux: bool = False):
     """Returns decode_step(params, token [B,1], caches, pos) ->
-    (logits [B,V], new_caches)."""
+    (logits [B,V], new_caches).  ``pos`` may be a scalar or a [B] vector of
+    per-request positions.  With ``with_aux`` the step also returns the
+    summed layer aux dict (MoE dropped-token stats for the metrics layer).
+    """
 
     def decode_step(params, token, caches, pos):
         logits, new_caches = tf.decode_step(params, token, caches, pos, cfg)
         return logits[:, 0], new_caches
 
-    return decode_step
+    def decode_step_aux(params, token, caches, pos):
+        logits, new_caches, aux = tf.decode_step(params, token, caches, pos,
+                                                 cfg, return_aux=True)
+        return logits[:, 0], new_caches, aux
+
+    return decode_step_aux if with_aux else decode_step
 
 
 def greedy_decode(params: Dict, batch: Dict, cfg: ModelConfig, steps: int,

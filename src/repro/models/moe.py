@@ -36,7 +36,8 @@ from ..compat import get_abstract_mesh, make_mesh, pvary, set_mesh, shard_map
 from .common import BATCH_AXES, MODEL_AXIS, constrain, dense_init
 from .config import ModelConfig
 
-__all__ = ["init_moe", "moe_specs", "moe_forward", "selftest_distributed"]
+__all__ = ["init_moe", "moe_specs", "moe_forward", "route_tokens",
+           "expert_ffn", "router_aux", "selftest_distributed"]
 
 
 def init_moe(cfg: ModelConfig, key) -> Dict:
@@ -67,6 +68,65 @@ def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
     return max(c, m.top_k)
 
 
+def route_tokens(router, xf, cfg: ModelConfig) -> Dict:
+    """Shared router math: softmax -> top-k -> per-group capacity slots.
+
+    ``xf``: [n, d] flat tokens.  Returns a dict of routing tensors; both
+    :func:`moe_forward` and the serving engine's plan-based dispatch
+    (``repro.serving``) call this, so the two paths route identically and
+    the SpMM formulation can be checked token-for-token against the dense
+    scatter/gather reference.
+    """
+    m = cfg.moe
+    n = xf.shape[0]
+    e, k = m.n_experts, m.top_k
+    G = max(1, cfg.moe_dispatch_groups)
+    while n % G:
+        G //= 2
+    ng = n // G
+
+    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                    # [n, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # per-group capacity assignment (slot = rank within group+expert)
+    cap = max(_capacity(n, cfg) // G, k)
+    onehot = jax.nn.one_hot(top_e, e, dtype=jnp.int32)        # [n, k, e]
+    flat = onehot.reshape(G, ng * k, e)
+    ranks = (jnp.cumsum(flat, axis=1) - flat)                 # excl, per group
+    slot = jnp.einsum("gne,gne->gn", ranks, flat).reshape(n, k)
+    keep = slot < cap
+    return {"logits": logits, "probs": probs, "top_p": top_p,
+            "top_e": top_e, "slot": slot, "keep": keep, "onehot": onehot,
+            "cap": cap, "G": G, "ng": ng,
+            "dropped": 1.0 - keep.mean()}
+
+
+def expert_ffn(p: Dict, xe, cfg: ModelConfig):
+    """Expert MLPs on dispatched slots.  xe: [..., e, cap, d] -> same."""
+    act = jax.nn.silu if cfg.mlp_kind != "geglu" else (
+        lambda v: jax.nn.gelu(v, approximate=True))
+    g = jnp.einsum("...ecd,edf->...ecf", xe, p["w_gate"].astype(xe.dtype))
+    u = jnp.einsum("...ecd,edf->...ecf", xe, p["w_up"].astype(xe.dtype))
+    return jnp.einsum("...ecf,efd->...ecd", act(g) * u,
+                      p["w_down"].astype(xe.dtype))
+
+
+def router_aux(route: Dict, cfg: ModelConfig) -> Dict:
+    """Switch-style aux losses + drop stats from :func:`route_tokens`."""
+    m = cfg.moe
+    me = route["probs"].mean(0)                               # [e]
+    ce = route["onehot"].astype(jnp.float32).sum(1).mean(0)   # fraction routed
+    return {
+        "moe_aux": m.aux_loss * m.n_experts * jnp.sum(me * ce),
+        "moe_z": m.router_z_loss * jnp.mean(
+            jnp.square(jax.nn.logsumexp(route["logits"], axis=-1))),
+        "moe_dropped": route["dropped"],
+    }
+
+
 def moe_forward(p: Dict, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
     """x: [B, T, d] -> (y, aux) with load-balance/z losses in aux.
 
@@ -82,26 +142,11 @@ def moe_forward(p: Dict, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
     b, t, d = x.shape
     n = b * t
     e, k = m.n_experts, m.top_k
-    G = max(1, cfg.moe_dispatch_groups)
-    while n % G:
-        G //= 2
-    ng = n // G
     xf = x.reshape(n, d)
 
-    logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32),
-                        p["router"].astype(jnp.float32))
-    probs = jax.nn.softmax(logits, axis=-1)
-    top_p, top_e = jax.lax.top_k(probs, k)                    # [n, k]
-    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
-
-    # --- per-group capacity assignment (slot = rank within group+expert) ---
-    cap = max(_capacity(n, cfg) // G, k)
-    onehot = jax.nn.one_hot(top_e, e, dtype=jnp.int32)        # [n, k, e]
-    flat = onehot.reshape(G, ng * k, e)
-    ranks = (jnp.cumsum(flat, axis=1) - flat)                 # excl, per group
-    slot = jnp.einsum("gne,gne->gn", ranks, flat).reshape(n, k)
-    keep = slot < cap
-    dropped = 1.0 - keep.mean()
+    r = route_tokens(p["router"], xf, cfg)
+    top_p, top_e = r["top_p"], r["top_e"]
+    slot, keep, cap, G, ng = r["slot"], r["keep"], r["cap"], r["G"], r["ng"]
 
     # --- dispatch: batched (per-group) scatter — the sparse D applied -------
     idx_e = jnp.where(keep, top_e, e).reshape(G, ng * k)
@@ -118,12 +163,7 @@ def moe_forward(p: Dict, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
     xe = constrain(xe, cap_axes, MODEL_AXIS, None, None)
 
     # --- expert FFN (stationary-A: weights never move) ----------------------
-    act = jax.nn.silu if cfg.mlp_kind != "geglu" else (
-        lambda v: jax.nn.gelu(v, approximate=True))
-    g = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(x.dtype))
-    u = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(x.dtype))
-    h = act(g) * u
-    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(x.dtype))
+    ye = expert_ffn(p, xe, cfg)
     ye = constrain(ye, cap_axes, MODEL_AXIS, None, None)
 
     # --- combine: (D * probs)^T @ Y — batched gather ------------------------
@@ -140,15 +180,7 @@ def moe_forward(p: Dict, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
     y = constrain(y, BATCH_AXES, None, None)
 
     # --- aux losses (Switch-style) ------------------------------------------
-    me = probs.mean(0)                                        # [e]
-    ce = onehot.astype(jnp.float32).sum(1).mean(0)            # fraction routed
-    aux = {
-        "moe_aux": m.aux_loss * e * jnp.sum(me * ce),
-        "moe_z": m.router_z_loss * jnp.mean(
-            jnp.square(jax.nn.logsumexp(logits, axis=-1))),
-        "moe_dropped": dropped,
-    }
-    return y, aux
+    return y, router_aux(r, cfg)
 
 
 # ---------------------------------------------------------------------------

@@ -26,6 +26,8 @@ from .config import ModelConfig
 __all__ = [
     "layer_plan", "init_params", "param_specs", "forward",
     "init_cache", "cache_specs", "decode_step",
+    "unstack_groups", "restack_groups", "forward_unscanned",
+    "decode_step_unscanned",
 ]
 
 
@@ -103,8 +105,17 @@ def _layer_specs(cfg: ModelConfig, kind: str) -> Dict:
 
 
 def _apply_layer(p: Dict, x, kind: str, cfg: ModelConfig, positions,
-                 cache: Optional[Dict], pos=None, decode: bool = False):
-    """Returns (x, new_cache, aux_scalar_dict)."""
+                 cache: Optional[Dict], pos=None, decode: bool = False,
+                 moe_fn=None, attn_fn=None):
+    """Returns (x, new_cache, aux_scalar_dict).
+
+    ``moe_fn`` / ``attn_fn`` override the MoE and (forward-path) attention
+    bodies — this is the hook the serving engine uses to route expert
+    dispatch and attention scoring through the plan-based sparse engine
+    while reusing every other piece of the layer (norms, residuals, cache
+    plumbing) unchanged.  ``attn_fn`` matches ``attn_forward``'s signature;
+    ``moe_fn`` matches ``moe_forward``'s.
+    """
     aux = {"aux": jnp.zeros((), jnp.float32),
            "dropped": jnp.zeros((), jnp.float32)}
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
@@ -112,6 +123,8 @@ def _apply_layer(p: Dict, x, kind: str, cfg: ModelConfig, positions,
         if decode:
             y, new_cache = attn_mod.attn_decode(p["attn"], h, cache, pos,
                                                 cfg, kind)
+        elif attn_fn is not None:
+            y, new_cache = attn_fn(p["attn"], h, cfg, kind, positions, cache)
         else:
             y, new_cache = attn_mod.attn_forward(p["attn"], h, cfg, kind,
                                                  positions, cache)
@@ -132,8 +145,9 @@ def _apply_layer(p: Dict, x, kind: str, cfg: ModelConfig, positions,
     if "mlp" in p or "moe" in p:
         h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
         if "moe" in p:
-            moe_fn = (moe_mod.ring_moe_forward if cfg.moe_impl == "ring"
-                      else moe_mod.moe_forward)
+            if moe_fn is None:
+                moe_fn = (moe_mod.ring_moe_forward if cfg.moe_impl == "ring"
+                          else moe_mod.moe_forward)
             y2, moe_aux = moe_fn(p["moe"], h2, cfg)
             aux["aux"] = aux["aux"] + moe_aux["moe_aux"] + moe_aux["moe_z"]
             aux["dropped"] = aux["dropped"] + moe_aux["moe_dropped"]
@@ -326,10 +340,13 @@ def forward(params: Dict, batch: Dict, cfg: ModelConfig,
     return logits, new_caches, aux
 
 
-def decode_step(params: Dict, token, caches: List, pos, cfg: ModelConfig):
-    """One-token step.  token: [B, 1] int32; pos: scalar int32 position.
+def decode_step(params: Dict, token, caches: List, pos, cfg: ModelConfig,
+                return_aux: bool = False):
+    """One-token step.  token: [B, 1] int32; pos: scalar int32 position or
+    int32 [B] per-request positions (continuous batching).
 
-    Returns (logits [B, 1, V], new_caches).
+    Returns (logits [B, 1, V], new_caches), plus the summed per-layer aux
+    dict (dropped-token stats) when ``return_aux`` is set.
     """
     dtype = jnp.dtype(cfg.compute_dtype)
     x = jnp.take(params["embed"], token, axis=0).astype(dtype)
@@ -337,21 +354,27 @@ def decode_step(params: Dict, token, caches: List, pos, cfg: ModelConfig):
         x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
 
     new_caches = []
+    aux_sum = {"aux": jnp.zeros((), jnp.float32),
+               "dropped": jnp.zeros((), jnp.float32)}
     for gi, (unit, n_units) in enumerate(layer_plan(cfg)):
         gparams = params["groups"][gi]
         gcache = caches[gi]
 
         def scan_body(x, xs, _unit=unit):
             unit_params, unit_cache = xs
-            nc_list = []
+            nc_list, aux_l = [], []
             for li, kind in enumerate(_unit):
-                x, nc, _ = _apply_layer(unit_params[li], x, kind, cfg,
-                                        None, unit_cache[li], pos=pos,
-                                        decode=True)
+                x, nc, aux = _apply_layer(unit_params[li], x, kind, cfg,
+                                          None, unit_cache[li], pos=pos,
+                                          decode=True)
                 nc_list.append(nc)
-            return x, nc_list
+                aux_l.append(aux)
+            aux_tot = jax.tree.map(lambda *v: sum(v), *aux_l)
+            return x, (nc_list, aux_tot)
 
-        x, nc_stack = jax.lax.scan(scan_body, x, (gparams, gcache))
+        x, (nc_stack, aux_stack) = jax.lax.scan(scan_body, x,
+                                                (gparams, gcache))
+        aux_sum = jax.tree.map(lambda a, b: a + b.sum(), aux_sum, aux_stack)
         new_caches.append(nc_stack)
 
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
@@ -360,4 +383,105 @@ def decode_step(params: Dict, token, caches: List, pos, cfg: ModelConfig):
     logits = jnp.einsum("btd,dv->btv", x, head,
                         preferred_element_type=jnp.float32)
     logits = softcap(logits, cfg.final_softcap)
+    if return_aux:
+        return logits, new_caches, aux_sum
     return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Unscanned (per-layer) paths — the serving engine's entry points
+# ---------------------------------------------------------------------------
+def unstack_groups(cfg: ModelConfig, groups: List) -> List:
+    """Flatten the grouped/stacked param or cache tree into per-layer trees.
+
+    The scanned representation stacks each group's units along a leading
+    ``[n_units, ...]`` axis; host-driven code (the serving engine routing
+    layers through the plan API one by one) needs plain per-layer subtrees
+    in ``cfg.pattern`` order.  Inverse of :func:`restack_groups`.
+    """
+    layers = []
+    for gi, (unit, n_units) in enumerate(layer_plan(cfg)):
+        for ui in range(n_units):
+            for li in range(len(unit)):
+                layers.append(jax.tree.map(lambda v, _ui=ui: v[_ui],
+                                           groups[gi][li]))
+    return layers
+
+
+def restack_groups(cfg: ModelConfig, layers: List) -> List:
+    """Stack per-layer trees back into the grouped ``[n_units, ...]`` form."""
+    groups, idx = [], 0
+    for unit, n_units in layer_plan(cfg):
+        per_unit = [[] for _ in unit]
+        for ui in range(n_units):
+            for li in range(len(unit)):
+                per_unit[li].append(layers[idx])
+                idx += 1
+        groups.append([jax.tree.map(lambda *v: jnp.stack(v), *ls)
+                       for ls in per_unit])
+    return groups
+
+
+def _head_logits(params: Dict, x, cfg: ModelConfig):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(x.dtype)
+    logits = jnp.einsum("btd,dv->btv", x, head,
+                        preferred_element_type=jnp.float32)
+    return softcap(logits, cfg.final_softcap)
+
+
+def forward_unscanned(params: Dict, batch: Dict, cfg: ModelConfig,
+                      caches: Optional[List] = None,
+                      positions: Optional[jnp.ndarray] = None,
+                      moe_fn=None, attn_fn=None):
+    """Full-sequence forward with a python layer loop (no scan).
+
+    Same contract as :func:`forward` but each layer runs eagerly, so
+    ``moe_fn`` / ``attn_fn`` may perform host-side work per layer — this is
+    how the serving engine materializes routing/attention structure into
+    ``DistBSR`` handles and calls cached ``plan_matmul`` executables from
+    inside the model.  Returns (logits, new_caches, aux).
+    """
+    x = _embed_inputs(params, batch, cfg)
+    t = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(t, dtype=jnp.int32)
+    layers_p = unstack_groups(cfg, params["groups"])
+    layers_c = unstack_groups(cfg, caches) if caches is not None else \
+        [None] * len(layers_p)
+    aux_sum = {"aux": jnp.zeros((), jnp.float32),
+               "dropped": jnp.zeros((), jnp.float32)}
+    new_layers = []
+    for p_l, c_l, kind in zip(layers_p, layers_c, cfg.pattern):
+        x, nc, aux = _apply_layer(p_l, x, kind, cfg, positions, c_l,
+                                  moe_fn=moe_fn, attn_fn=attn_fn)
+        new_layers.append(nc)
+        aux_sum = jax.tree.map(lambda a, b: a + b, aux_sum, aux)
+    new_caches = restack_groups(cfg, new_layers) \
+        if caches is not None else None
+    return _head_logits(params, x, cfg), new_caches, aux_sum
+
+
+def decode_step_unscanned(params: Dict, token, caches: List, pos,
+                          cfg: ModelConfig, moe_fn=None):
+    """One-token step with a python layer loop (see ``forward_unscanned``).
+
+    Returns (logits [B, 1, V], new_caches, aux).
+    """
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = jnp.take(params["embed"], token, axis=0).astype(dtype)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    layers_p = unstack_groups(cfg, params["groups"])
+    layers_c = unstack_groups(cfg, caches)
+    aux_sum = {"aux": jnp.zeros((), jnp.float32),
+               "dropped": jnp.zeros((), jnp.float32)}
+    new_layers = []
+    for p_l, c_l, kind in zip(layers_p, layers_c, cfg.pattern):
+        x, nc, aux = _apply_layer(p_l, x, kind, cfg, None, c_l, pos=pos,
+                                  decode=True, moe_fn=moe_fn)
+        new_layers.append(nc)
+        aux_sum = jax.tree.map(lambda a, b: a + b, aux_sum, aux)
+    return (_head_logits(params, x, cfg), restack_groups(cfg, new_layers),
+            aux_sum)

@@ -1,0 +1,18 @@
+"""Request-level serving over the plan-based sparse engine.
+
+Public surface: :class:`ServeEngine` (continuous batching + plan-cache
+reuse), :class:`Request`/:class:`RequestBatcher` (shape-bucketed
+admission) and :class:`ServingMetrics` (TTFT/TPOT percentiles,
+plans-per-second, dropped-token stats).  ``serving.engine`` internals are
+off-limits outside this package — ``tools/check_api.py`` enforces it.
+"""
+from .batcher import (DEFAULT_BUCKETS, Request, RequestBatcher, bucket_for,
+                      effective_bucket, padding_supported)
+from .engine import ServeEngine
+from .metrics import ServingMetrics, percentile, sync_elapsed
+
+__all__ = [
+    "ServeEngine", "Request", "RequestBatcher", "ServingMetrics",
+    "DEFAULT_BUCKETS", "bucket_for", "effective_bucket",
+    "padding_supported", "percentile", "sync_elapsed",
+]

@@ -1,0 +1,226 @@
+"""ServeEngine: request-level serving over the plan API.
+
+Admission -> prefill -> decode with **continuous batching**: the engine
+owns a fixed pool of ``max_batch`` decode slots; new requests prefill at a
+bucketed shape (one jit trace / plan set per bucket, shared by every
+tenant in it), their KV rows are spliced into the batch cache at a free
+slot, and they join the very next decode step.  Finished requests retire
+at step boundaries and their slots are immediately reusable — no
+generation-length barrier, which is what keeps the decode batch full under
+mixed-length traffic.
+
+Each decode-batch row carries its own position (``pos: [B]``, see
+``models/attention.py``), so requests at different depths coexist in one
+step.  Vacant slots keep decoding garbage into their own cache row — their
+outputs are ignored and the row is fully overwritten at the next
+admission, so correctness is untouched and the step shape stays static
+(one jitted executable for the whole run).
+
+With ``sparse=True`` the hot path runs on the paper's engine: MoE
+dispatch/combine and prefill attention scoring become ``DistBSR`` x
+``DistDense`` products through the shared ``plan_matmul`` LRU cache (see
+``serving/sparse.py``); :meth:`cache_stats` surfaces the hit/miss/eviction
+counters that show plans being reused across tenants.
+
+This module is internal: import :class:`ServeEngine` from
+``repro.serving`` (enforced by ``tools/check_api.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import api as _api
+from ..models import lm, transformer as tf
+from ..models.config import ModelConfig
+from .batcher import DEFAULT_BUCKETS, RequestBatcher
+from .metrics import ServingMetrics, sync_elapsed
+from .sparse import SparseOps, sparse_attn_forward, sparse_moe_forward
+
+
+@dataclasses.dataclass
+class _Active:
+    rid: int
+    max_new_tokens: int
+    out: List[int] = dataclasses.field(default_factory=list)
+
+
+class ServeEngine:
+    """Continuous-batching serving engine over one model + mesh."""
+
+    def __init__(self, cfg: ModelConfig, *, params: Optional[Dict] = None,
+                 seed: int = 0, max_batch: int = 4, max_len: int = 64,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 sparse: bool = False, block_size: int = 8, mesh=None,
+                 cache_dtype=jnp.float32):
+        if cfg.is_encoder:
+            raise ValueError("encoder models have no decode path")
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.sparse = sparse
+        self.params = params if params is not None else \
+            tf.init_params(cfg, jax.random.PRNGKey(seed))
+        self.batcher = RequestBatcher(cfg, max_len, buckets)
+        self.metrics = ServingMetrics()
+        self.ops = SparseOps(block_size=block_size, mesh=mesh) \
+            if sparse else None
+
+        # decode-slot state (B = max_batch rows, recycled across requests)
+        self.caches = tf.init_cache(cfg, max_batch, max_len, cache_dtype)
+        self.pos = jnp.zeros((max_batch,), jnp.int32)
+        self.tokens = jnp.zeros((max_batch, 1), jnp.int32)
+        self.active: Dict[int, _Active] = {}        # slot -> request state
+        self.results: Dict[int, np.ndarray] = {}
+        self._cache_dtype = cache_dtype
+        self._prefill_fns: Dict[int, callable] = {}
+        self._decode_fn = None if sparse else \
+            jax.jit(lm.make_decode_step(cfg, with_aux=True))
+        self._insert_fn = jax.jit(self._insert_row)
+        self._n_moe = (sum(1 for k in cfg.pattern if k in ("g", "l"))
+                       if cfg.moe is not None else 0)
+
+    # ------------------------------------------------------------ sparse fns
+    def _moe_fn(self, p, x, cfg):
+        return sparse_moe_forward(self.ops, p, x, cfg)
+
+    def _attn_fn(self, p, x, cfg, kind, positions, cache):
+        return sparse_attn_forward(self.ops, p, x, cfg, kind, positions,
+                                   cache)
+
+    # -------------------------------------------------------------- requests
+    def submit(self, tokens, max_new_tokens: int, arrival: float = 0.0,
+               rid: Optional[int] = None):
+        """Queue a request.  ``arrival`` is an offset (s) from run start."""
+        return self.batcher.submit(tokens, max_new_tokens, arrival, rid)
+
+    # --------------------------------------------------------------- prefill
+    @staticmethod
+    def _insert_row(caches, row, slot):
+        """Splice a batch-1 prefilled cache into the decode cache at slot.
+
+        Every cache leaf is stacked ``[units, B, ...]``, so the batch dim
+        is axis 1 throughout — one dynamic-update-slice per leaf.
+        """
+        return jax.tree.map(
+            lambda c, r: jax.lax.dynamic_update_slice_in_dim(
+                c, r.astype(c.dtype), slot, axis=1), caches, row)
+
+    def _prefill_for(self, bucket: int):
+        fn = self._prefill_fns.get(bucket)
+        if fn is not None:
+            return fn
+        cfg, max_len, cdt = self.cfg, self.max_len, self._cache_dtype
+        if self.sparse:
+            def fn(params, toks, lengths):
+                caches = tf.init_cache(cfg, 1, max_len, cdt)
+                logits, caches, _ = tf.forward_unscanned(
+                    params, {"tokens": toks}, cfg, caches=caches,
+                    moe_fn=self._moe_fn, attn_fn=self._attn_fn)
+                last = jnp.take_along_axis(
+                    logits, (lengths - 1)[:, None, None], axis=1)[:, 0]
+                return last, lm._mask_pad_slots(caches, lengths), lengths
+        else:
+            fn = jax.jit(lambda params, toks, lengths: lm.prefill(
+                params, {"tokens": toks}, cfg, max_len, cdt, lengths))
+        self._prefill_fns[bucket] = fn
+        return fn
+
+    def _admit(self, req) -> None:
+        slot = next(s for s in range(self.max_batch)
+                    if s not in self.active)
+        toks_np, length = self.batcher.padded(req)
+        self.metrics.admitted(req.rid, toks_np.shape[1])
+        t0 = time.perf_counter()
+        fn = self._prefill_for(toks_np.shape[1])
+        last, row, row_pos = fn(self.params, jnp.asarray(toks_np),
+                                jnp.asarray([length], jnp.int32))
+        tok = jnp.argmax(last, axis=-1).astype(jnp.int32)      # [1]
+        self.caches = self._insert_fn(self.caches, row,
+                                      jnp.asarray(slot, jnp.int32))
+        self.pos = self.pos.at[slot].set(length)
+        self.tokens = self.tokens.at[slot, 0].set(tok[0])
+        dt = sync_elapsed(t0, (self.caches, self.tokens))
+        self.metrics.prefill_done(req.rid, dt)
+        st = _Active(req.rid, req.max_new_tokens)
+        st.out.append(int(tok[0]))
+        self.active[slot] = st
+        self._maybe_finish(slot)
+
+    def _maybe_finish(self, slot: int) -> None:
+        st = self.active[slot]
+        if len(st.out) >= st.max_new_tokens \
+                or int(self.pos[slot]) >= self.max_len:
+            self.results[st.rid] = np.asarray(st.out, np.int32)
+            self.metrics.finished(st.rid)
+            del self.active[slot]
+
+    # ---------------------------------------------------------------- decode
+    def _decode_step(self) -> None:
+        t0 = time.perf_counter()
+        if self.sparse:
+            logits, caches, aux = tf.decode_step_unscanned(
+                self.params, self.tokens, self.caches, self.pos, self.cfg,
+                moe_fn=self._moe_fn)
+            logits = logits[:, 0]
+        else:
+            logits, caches, aux = self._decode_fn(
+                self.params, self.tokens, self.caches, self.pos)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)    # [B]
+        active_mask = np.zeros((self.max_batch,), np.int32)
+        for s in self.active:
+            active_mask[s] = 1
+        self.caches = caches
+        self.pos = self.pos + jnp.asarray(active_mask)
+        self.tokens = tok[:, None]
+        dt = sync_elapsed(t0, (self.tokens, self.caches))
+        dropped = (float(aux["dropped"]) / self._n_moe
+                   if self._n_moe else None)
+        rids = [st.rid for st in self.active.values()]
+        self.metrics.decode_step_done(dt, rids, dropped)
+        tok_np = np.asarray(tok)
+        for slot in list(self.active):
+            self.active[slot].out.append(int(tok_np[slot]))
+            self._maybe_finish(slot)
+
+    # ------------------------------------------------------------------- run
+    def run(self) -> Dict[int, np.ndarray]:
+        """Serve every queued request to completion; returns rid -> tokens.
+
+        Admission happens at step boundaries: before each decode step any
+        arrived request takes a free slot (continuous batching).  Timing
+        blocks per measurement window — prefill and decode never overlap a
+        measurement (see serving/metrics.py).
+        """
+        m = self.metrics
+        t0 = m.start()
+        for req in list(self.batcher._queue):
+            m.submitted(req.rid, t0 + req.arrival, req.prompt_len)
+        while len(self.batcher) or self.active:
+            now = time.perf_counter() - t0
+            while len(self.active) < self.max_batch:
+                req = self.batcher.pop(now)
+                if req is None:
+                    break
+                self._admit(req)
+            if not self.active:
+                nxt = self.batcher.next_arrival()
+                if nxt is not None and nxt > now:
+                    time.sleep(min(nxt - now, 0.005))
+                continue
+            self._decode_step()
+        m.stop()
+        return dict(self.results)
+
+    # ------------------------------------------------------------- observab.
+    def cache_stats(self) -> Dict[str, Dict[str, int]]:
+        """Plan-layer cache counters (``repro.core.api.cache_stats``)."""
+        return _api.cache_stats()
+
+    def summary(self) -> Dict:
+        return self.metrics.summary()

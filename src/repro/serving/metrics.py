@@ -1,0 +1,170 @@
+"""Serving metrics: per-request TTFT/TPOT, aggregate percentiles, and
+plan-cache reuse rates.
+
+The engine records wall-clock per measurement window (every timed section
+blocks on its outputs via :func:`sync_elapsed`, so async dispatch can never
+smear prefill work into the decode window — the bug the old
+``launch/serve.py`` loop had).  Plan-cache counters come from
+``repro.core.api.cache_stats()``; ``plans_per_second`` is plan-cache
+lookups (hits + misses) over the serving interval, i.e. how often the
+engine reached for a ``MatmulPlan`` while under traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+
+from ..core import api as _api
+
+
+def sync_elapsed(t0: float, tree) -> float:
+    """Block until ``tree``'s arrays are ready, return seconds since t0."""
+    jax.block_until_ready(tree)
+    return time.perf_counter() - t0
+
+
+def percentile(xs: List[float], q: float) -> float:
+    """Linear-interpolated percentile; nan for an empty sample."""
+    if not xs:
+        return float("nan")
+    s = sorted(xs)
+    if len(s) == 1:
+        return float(s[0])
+    f = (len(s) - 1) * q / 100.0
+    lo = int(f)
+    hi = min(lo + 1, len(s) - 1)
+    return float(s[lo] + (s[hi] - s[lo]) * (f - lo))
+
+
+@dataclasses.dataclass
+class RequestStats:
+    rid: int
+    arrival: float
+    prompt_len: int
+    bucket_len: int = 0
+    admitted: Optional[float] = None
+    first_token: Optional[float] = None
+    finished: Optional[float] = None
+    n_tokens: int = 0
+    step_s: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Arrival -> first generated token (queueing + prefill)."""
+        if self.first_token is None:
+            return None
+        return self.first_token - self.arrival
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Mean per-token latency over the decode steps after the first."""
+        if not self.step_s:
+            return None
+        return sum(self.step_s) / len(self.step_s)
+
+
+class ServingMetrics:
+    """Aggregates request lifecycles + cache counters for one serve run."""
+
+    def __init__(self):
+        self.requests: Dict[int, RequestStats] = {}
+        self.prefill_s = 0.0
+        self.decode_s = 0.0
+        self.decode_steps = 0
+        self.dropped: List[float] = []
+        self._t0: Optional[float] = None
+        self._t1: Optional[float] = None
+        self._cache0: Optional[Dict] = None
+
+    # ------------------------------------------------------------- lifecycle
+    def start(self) -> float:
+        self._t0 = time.perf_counter()
+        self._cache0 = _api.cache_stats()
+        return self._t0
+
+    def stop(self) -> None:
+        self._t1 = time.perf_counter()
+
+    def now(self) -> float:
+        return time.perf_counter()
+
+    def submitted(self, rid: int, arrival: float, prompt_len: int) -> None:
+        self.requests[rid] = RequestStats(rid, arrival, prompt_len)
+
+    def admitted(self, rid: int, bucket_len: int) -> None:
+        r = self.requests[rid]
+        r.admitted = time.perf_counter()
+        r.bucket_len = bucket_len
+
+    def prefill_done(self, rid: int, dt: float) -> None:
+        self.prefill_s += dt
+        self.requests[rid].first_token = time.perf_counter()
+        self.requests[rid].n_tokens += 1
+
+    def decode_step_done(self, dt: float, rids: List[int],
+                         dropped: Optional[float] = None) -> None:
+        self.decode_s += dt
+        self.decode_steps += 1
+        if dropped is not None:
+            self.dropped.append(float(dropped))
+        for rid in rids:
+            r = self.requests[rid]
+            r.step_s.append(dt)
+            r.n_tokens += 1
+
+    def finished(self, rid: int) -> None:
+        self.requests[rid].finished = time.perf_counter()
+
+    # --------------------------------------------------------------- summary
+    def cache_delta(self) -> Dict[str, Dict[str, int]]:
+        """Per-cache counter deltas since :meth:`start`."""
+        now = _api.cache_stats()
+        base = self._cache0 or {}
+        out: Dict[str, Dict[str, int]] = {}
+        for name, stats in now.items():
+            b = base.get(name, {})
+            out[name] = {k: stats[k] - b.get(k, 0)
+                         for k in ("hits", "misses", "evictions")}
+            out[name]["size"] = stats["size"]
+        return out
+
+    def summary(self) -> Dict:
+        if self._t1 is None:
+            self.stop()
+        elapsed = (self._t1 or time.perf_counter()) - (self._t0 or 0.0)
+        done = [r for r in self.requests.values() if r.finished is not None]
+        ttfts = [r.ttft for r in done if r.ttft is not None]
+        tpots = [r.tpot for r in done if r.tpot is not None]
+        n_tokens = sum(r.n_tokens for r in self.requests.values())
+        caches = self.cache_delta()
+        plans = caches.get("plans", {})
+        lookups = plans.get("hits", 0) + plans.get("misses", 0)
+        hit_rate = (plans.get("hits", 0) / lookups) if lookups else None
+        return {
+            "requests": len(self.requests),
+            "completed": len(done),
+            "elapsed_s": elapsed,
+            "prefill_s": self.prefill_s,
+            "decode_s": self.decode_s,
+            "decode_steps": self.decode_steps,
+            "tokens": n_tokens,
+            "tokens_per_s": n_tokens / elapsed if elapsed > 0 else None,
+            "decode_tok_per_s": (
+                sum(len(r.step_s) for r in self.requests.values())
+                / self.decode_s if self.decode_s > 0 else None),
+            "ttft_p50_s": percentile(ttfts, 50),
+            "ttft_p99_s": percentile(ttfts, 99),
+            "tpot_p50_s": percentile(tpots, 50),
+            "tpot_p99_s": percentile(tpots, 99),
+            "plan_lookups": lookups,
+            "plans_per_second": lookups / elapsed if elapsed > 0 else None,
+            "plan_cache": plans,
+            "plan_cache_hit_rate": hit_rate,
+            "caches": caches,
+            "dropped_mean": (sum(self.dropped) / len(self.dropped)
+                             if self.dropped else 0.0),
+            "dropped_max": max(self.dropped) if self.dropped else 0.0,
+        }

@@ -1,0 +1,185 @@
+"""Plan-based sparse hot path: MoE dispatch and attention scoring as
+``DistBSR`` x ``DistDense`` products through ``plan_matmul``.
+
+This is the point where the paper's engine meets the model stack:
+
+* **MoE dispatch/combine** — token-choice routing *is* SpMM (see
+  ``models/moe.py``): the dispatch operator ``D`` is a {0,1}-sparse
+  (expert-slots x tokens) matrix and ``dispatch = D @ X``,
+  ``combine = (D * probs)^T @ Y``.  Here those two products literally run
+  through the plan API on the stationary-A (``ring_a``) schedule — expert
+  slots stay put, activations ride the ring — with ``D`` tiled at
+  bucketed capacity so consecutive decode steps (whose routing structure
+  differs, but whose bucketed abstract shapes coincide) reuse one cached,
+  jitted executable.
+* **Attention scoring** — per (batch, head) blocks stacked block-diagonal
+  make ``S = Q_bd @ K_bd^T`` a genuinely block-sparse SpGEMM
+  (``output="sparse"``: only diagonal blocks are ever computed or
+  stored), and the probability matrix ``P`` (block-diagonal *and*
+  block-triangular under the causal/local mask) feeds the combine
+  ``O = P_bsr @ V`` as a second SpMM.  Both structures are a function of
+  the padded bucket only, so every tenant in a bucket shares the plans.
+
+Routing math is :func:`repro.models.moe.route_tokens` — the same function
+the dense reference uses — so the two paths route identically and outputs
+match token for token.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.api import DistBSR, DistDense, make_grid_mesh, matmul
+from ..models import attention as attn_mod
+from ..models import moe as moe_mod
+from ..models.common import apply_rope, rope, softcap
+from ..models.config import ModelConfig
+
+# MoE dispatch is expert-stationary (the paper's stationary-A schedule);
+# the scoring SpGEMM needs a sparse-output body, which ring_a doesn't
+# have, so scores ride ring_c.
+SPMM_ALGORITHM = "ring_a"
+SPGEMM_ALGORITHM = "ring_c"
+
+
+class SparseOps:
+    """Shared mesh + tiling config for the engine's plan-based operators.
+
+    One instance per :class:`~repro.serving.ServeEngine`; holding the mesh
+    here keeps ``_mesh_key`` stable across calls so plans actually cache.
+    """
+
+    def __init__(self, g: int = 1, block_size: int = 8, mesh=None):
+        self.g = g
+        self.block_size = block_size
+        self.mesh = mesh if mesh is not None else make_grid_mesh(g)
+
+    # ------------------------------------------------------------------ SpMM
+    def spmm(self, a_dense: np.ndarray, x, algorithm: str = SPMM_ALGORITHM):
+        """``a @ x`` with a materialized-sparse left operand.
+
+        ``a_dense`` is tiled into a capacity-bucketed :class:`DistBSR`;
+        the plan is fetched from (or added to) the shared LRU cache keyed
+        on the bucketed abstract shapes.
+        """
+        a = DistBSR.from_dense(a_dense, g=self.g,
+                               block_size=self.block_size)
+        b = DistDense.for_rhs(x, a, allow_pad=True)
+        return matmul(a, b, algorithm=algorithm, mesh=self.mesh)
+
+    # ---------------------------------------------------------------- SpGEMM
+    def spgemm_sparse(self, a_dense: np.ndarray, b_dense: np.ndarray
+                      ) -> DistBSR:
+        """Sparse-output ``a @ b`` for two materialized-sparse operands."""
+        a = DistBSR.from_dense(a_dense, g=self.g, block_size=self.block_size)
+        b = DistBSR.from_dense(b_dense, g=self.g, block_size=self.block_size)
+        return matmul(a, b, algorithm=SPGEMM_ALGORITHM, mesh=self.mesh,
+                      output="sparse")
+
+
+# ---------------------------------------------------------------------------
+# MoE forward on the plan API
+# ---------------------------------------------------------------------------
+def sparse_moe_forward(ops: SparseOps, p: Dict, x, cfg: ModelConfig
+                       ) -> Tuple[jnp.ndarray, Dict]:
+    """Drop-in for :func:`repro.models.moe.moe_forward` routing dispatch
+    and combine through ``plan_matmul``.  x: [B, T, d] -> (y, aux)."""
+    m = cfg.moe
+    b, t, d = x.shape
+    n = b * t
+    e, k = m.n_experts, m.top_k
+    xf = x.reshape(n, d)
+
+    r = moe_mod.route_tokens(p["router"], xf, cfg)
+    cap, G, ng = r["cap"], r["G"], r["ng"]
+    top_e = np.asarray(r["top_e"])                       # [n, k] host sync
+    slot = np.asarray(r["slot"])
+    keep = np.asarray(r["keep"])
+
+    # dispatch operator D: one unit row per (group, expert, capacity slot)
+    gidx = (np.arange(n) // ng)[:, None]                 # [n, 1]
+    rows = (gidx * e + top_e) * cap + slot               # [n, k]
+    toks = np.broadcast_to(np.arange(n)[:, None], (n, k))
+    dtype = np.dtype(jnp.dtype(x.dtype).name)
+    disp = np.zeros((G * e * cap, n), dtype)
+    np.add.at(disp, (rows[keep], toks[keep]), 1.0)
+
+    buf = ops.spmm(disp, xf)                             # [G*e*cap, d]
+    xe = buf.reshape(G, e, cap, d).astype(x.dtype)
+    ye = moe_mod.expert_ffn(p, xe, cfg)                  # [G, e, cap, d]
+
+    # combine operator W = (D * probs)^T: [n, G*e*cap], k nnz per row
+    top_p = np.asarray(r["top_p"])
+    comb = np.zeros((n, G * e * cap), dtype)
+    np.add.at(comb, (toks[keep], rows[keep]), top_p[keep])
+    y = ops.spmm(comb, ye.reshape(G * e * cap, d))       # [n, d]
+    y = y.astype(x.dtype).reshape(b, t, d)
+    return y, moe_mod.router_aux(r, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Block-sparse attention on the plan API
+# ---------------------------------------------------------------------------
+def _block_diag(mats: np.ndarray) -> np.ndarray:
+    """[h, r, c] -> [h*r, h*c] block-diagonal."""
+    h, r, c = mats.shape
+    out = np.zeros((h * r, h * c), mats.dtype)
+    for i in range(h):
+        out[i * r:(i + 1) * r, i * c:(i + 1) * c] = mats[i]
+    return out
+
+
+def sparse_attn_forward(ops: SparseOps, p: Dict, x, cfg: ModelConfig,
+                        kind: str, positions, cache: Optional[Dict] = None):
+    """Drop-in for :func:`repro.models.attention.attn_forward` (prefill)
+    with scoring and combine on the plan API.
+
+    Per-(batch, head) Q/K/V panels are stacked block-diagonally so the
+    whole batch's scoring is one sparse-output SpGEMM and the masked
+    probability matrix (block-diagonal x block-causal) drives one SpMM —
+    block structure depends only on the padded shape, so plans are shared
+    across every request in a bucket.
+    """
+    b, t, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h, kh = cfg.n_heads, cfg.n_kv_heads
+    grp = h // kh
+    q, k, v = attn_mod._project_qkv(p, x, cfg)
+    sin, cos = rope(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+
+    # stack per-(batch, query-head) panels; kv heads repeat across the group
+    qh = np.asarray(q.transpose(0, 2, 1, 3).reshape(b * h, t, hd),
+                    np.float32) * (hd ** -0.5)
+    k_rep = jnp.repeat(k.transpose(0, 2, 1, 3), grp, axis=1)
+    v_rep = jnp.repeat(v.transpose(0, 2, 1, 3), grp, axis=1)
+    kh_np = np.asarray(k_rep.reshape(b * h, t, hd), np.float32)
+
+    # scoring: S_bd = Q_bd @ K_bd^T — sparse x sparse, sparse output
+    s_bsr = ops.spgemm_sparse(_block_diag(qh),
+                              _block_diag(kh_np.transpose(0, 2, 1)))
+    s_full = jnp.asarray(s_bsr.densify())
+    bh = b * h
+    diag = jnp.arange(bh)
+    scores = s_full.reshape(bh, t, bh, t)[diag, :, diag, :]   # [bh, t, t]
+    scores = softcap(scores, cfg.attn_softcap)
+
+    # mask + softmax (identical math to the dense _sdpa reference)
+    mask = np.asarray(attn_mod._pair_mask(cfg, kind, positions, positions))
+    logits = jnp.where(jnp.asarray(mask)[None], scores, attn_mod.NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # combine: O = P_bd @ V — the mask prunes whole blocks of P
+    pv = _block_diag(np.asarray(probs * mask[None], np.float32))
+    o = ops.spmm(pv, jnp.asarray(
+        v_rep.reshape(bh * t, hd), jnp.float32))              # [bh*t, hd]
+    out = (jnp.asarray(o).reshape(b, h, t, hd)
+           .transpose(0, 2, 1, 3).reshape(b, t, h * hd).astype(x.dtype))
+    out = jnp.einsum("bte,ed->btd", out, p["wo"].astype(x.dtype))
+    if cache is None:
+        return out, None
+    return out, attn_mod._write_prefill(cache, k, v, positions, cfg, kind)

@@ -1,0 +1,259 @@
+"""Serving-subsystem tests.
+
+Covers the four contracts the serving layer makes:
+
+* **Continuous batching is invisible**: a ServeEngine with fewer decode
+  slots than requests (slots recycled mid-run, mixed prompt lengths,
+  bucket-padded prefill) decodes exactly what unbatched
+  ``lm.greedy_decode`` does, on both the dense and the sparse hot path.
+* **Bucketed shapes share plans**: after one tenant warms a bucket, a
+  second tenant with a *different* prompt of bucketed-equal shape drives
+  zero new executable traces through ``plan_matmul`` — pure plan-cache
+  hits (``api.add_trace_hook`` counts traces).
+* **Eviction rebuilds, never corrupts**: with the plan LRU shrunk below
+  the working set, alternating buckets churn the cache (evictions grow)
+  yet every decoded stream still matches the dense reference.
+* **Zero drops at the smoke capacity factor**: the MoE dropped-token
+  stat threaded into the metrics layer reads 0 end-to-end.
+
+Plus unit tests for the batcher (bucketing, padding soundness per model
+family) and the metrics math, and the ``check_api`` ban on importing
+``repro.serving.engine`` directly.
+"""
+import importlib.util
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import api
+from repro.models import lm, transformer as tf
+from repro.serving import (ServeEngine, ServingMetrics, bucket_for,
+                           effective_bucket, percentile)
+
+MAX_LEN = 48
+
+
+def _params(arch, seed=0):
+    cfg = get_config(arch, smoke=True)
+    return cfg, tf.init_params(cfg, jax.random.PRNGKey(seed))
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+            for n in lens]
+
+
+def _reference(params, cfg, toks, steps):
+    out = lm.greedy_decode(params, {"tokens": jnp.asarray(toks[None])},
+                           cfg, steps=steps, max_len=MAX_LEN)
+    return np.asarray(out)[0]
+
+
+# ---------------------------------------------------------------------------
+# batcher: bucketing + padding soundness
+# ---------------------------------------------------------------------------
+def test_bucket_for_rounds_up():
+    assert bucket_for(1) == 8
+    assert bucket_for(8) == 8
+    assert bucket_for(9) == 16
+    assert bucket_for(512) == 512
+    with pytest.raises(ValueError, match="exceeds largest bucket"):
+        bucket_for(513)
+
+
+def test_padding_soundness_per_family():
+    """Global attention pads to the bucket; recurrent layers ('r'/'m')
+    fold pad tokens into their state, so they degrade to exact length."""
+    attn = get_config("llama3-8b", smoke=True)
+    assert effective_bucket(attn, 12, MAX_LEN) == 16
+    rec = get_config("recurrentgemma-2b", smoke=True)
+    assert effective_bucket(rec, 12, MAX_LEN) == 12
+    # exact-at-bucket lengths never pad, so they're fine for everyone
+    assert effective_bucket(rec, 8, MAX_LEN) == 8
+
+
+def test_batcher_rejects_overflowing_request():
+    cfg = get_config("llama3-8b", smoke=True)
+    eng = ServeEngine(cfg, params={}, max_len=16)
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        eng.submit(np.zeros(12, np.int32), max_new_tokens=8)
+
+
+# ---------------------------------------------------------------------------
+# metrics math
+# ---------------------------------------------------------------------------
+def test_percentile_linear_interpolation():
+    assert np.isnan(percentile([], 50))
+    assert percentile([3.0], 99) == 3.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 50) == 2.5
+    assert percentile([1.0, 2.0, 3.0, 4.0], 0) == 1.0
+    assert percentile([1.0, 2.0, 3.0, 4.0], 100) == 4.0
+
+
+def test_metrics_lifecycle_aggregates():
+    m = ServingMetrics()
+    t0 = m.start()
+    m.submitted(0, t0, prompt_len=4)
+    m.admitted(0, bucket_len=8)
+    m.prefill_done(0, 0.5)
+    m.decode_step_done(0.1, [0], dropped=0.0)
+    m.decode_step_done(0.3, [0], dropped=0.0)
+    m.finished(0)
+    m.stop()
+    s = m.summary()
+    assert s["completed"] == 1
+    assert s["tokens"] == 3                       # 1 prefill + 2 decode
+    assert s["decode_steps"] == 2
+    assert s["prefill_s"] == pytest.approx(0.5)
+    assert s["decode_s"] == pytest.approx(0.4)
+    assert s["tpot_p50_s"] == pytest.approx(0.2)  # mean of the 2 steps
+    assert s["ttft_p50_s"] >= 0.0
+    assert s["dropped_mean"] == 0.0 and s["dropped_max"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# continuous batching == unbatched dense reference
+# ---------------------------------------------------------------------------
+def test_dense_engine_matches_reference():
+    """3 requests through 2 slots: slot recycling mid-run, mixed prompt
+    lengths (12/9 pad to bucket 16, 8 is exact), per-request positions."""
+    cfg, params = _params("llama3-8b")
+    prompts = _prompts(cfg, (12, 9, 8))
+    eng = ServeEngine(cfg, params=params, max_batch=2, max_len=MAX_LEN)
+    for toks in prompts:
+        eng.submit(toks, max_new_tokens=4)
+    results = eng.run()
+    for rid, toks in enumerate(prompts):
+        np.testing.assert_array_equal(
+            results[rid], _reference(params, cfg, toks, 4),
+            err_msg=f"request {rid}")
+    assert eng.summary()["completed"] == 3
+
+
+def test_dense_engine_no_padding_family():
+    """Recurrent models serve at exact lengths (padding unsound) and still
+    match the reference."""
+    cfg, params = _params("recurrentgemma-2b")
+    prompts = _prompts(cfg, (11, 7))
+    eng = ServeEngine(cfg, params=params, max_batch=2, max_len=MAX_LEN)
+    for toks in prompts:
+        eng.submit(toks, max_new_tokens=3)
+    results = eng.run()
+    for rid, toks in enumerate(prompts):
+        np.testing.assert_array_equal(
+            results[rid], _reference(params, cfg, toks, 3),
+            err_msg=f"request {rid}")
+
+
+def test_sparse_engine_matches_reference_and_drops_nothing():
+    """MoE dispatch + prefill attention scoring on the DistBSR/plan_matmul
+    path: decoded tokens equal the dense reference and the dropped-token
+    stat is zero at the smoke configs' default capacity factor."""
+    cfg, params = _params("olmoe-1b-7b")
+    prompts = _prompts(cfg, (12, 9))
+    api.clear_plan_cache()
+    eng = ServeEngine(cfg, params=params, max_batch=2, max_len=MAX_LEN,
+                      sparse=True)
+    for toks in prompts:
+        eng.submit(toks, max_new_tokens=3)
+    results = eng.run()
+    for rid, toks in enumerate(prompts):
+        np.testing.assert_array_equal(
+            results[rid], _reference(params, cfg, toks, 3),
+            err_msg=f"request {rid}")
+    s = eng.summary()
+    assert s["decode_steps"] > 0
+    assert s["dropped_mean"] == 0.0 and s["dropped_max"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# plan-cache sharing across tenants
+# ---------------------------------------------------------------------------
+def test_second_tenant_reuses_first_tenants_plans():
+    """Two tenants, different prompts, bucketed-equal shape (12 and 9 both
+    pad to 16): after tenant A warms the bucket, tenant B's entire sparse
+    prefill runs through cached MatmulPlans — zero new executable traces,
+    only hits."""
+    cfg, params = _params("llama3-8b")
+    a, b = _prompts(cfg, (12, 9))
+    api.clear_plan_cache()
+    eng = ServeEngine(cfg, params=params, max_batch=2, max_len=MAX_LEN,
+                      sparse=True)
+    eng.submit(a, max_new_tokens=3)
+    eng.run()                                     # tenant A warms bucket 16
+    before = api.cache_stats()["plans"]
+    assert before["misses"] > 0                   # A actually built plans
+    seen = []
+    hook = api.add_trace_hook(lambda plan: seen.append(plan))
+    try:
+        eng.submit(b, max_new_tokens=3)
+        results = eng.run()
+    finally:
+        api.remove_trace_hook(hook)
+    after = api.cache_stats()["plans"]
+    assert seen == [], "tenant B should not trace any new executable"
+    assert after["misses"] == before["misses"]
+    assert after["hits"] > before["hits"]
+    np.testing.assert_array_equal(results[1], _reference(params, cfg, b, 3))
+
+
+def test_plan_cache_eviction_rebuilds_under_churn():
+    """Shrink the plan LRU below one bucket's working set and alternate
+    buckets: plans churn (evictions grow, misses on re-entry) but every
+    decoded stream still matches the dense reference."""
+    cfg, params = _params("llama3-8b")
+    prompts = _prompts(cfg, (6, 20, 7))           # buckets 8, 32, 8
+    cache = api._PLAN_CACHE
+    old_max = cache.maxsize
+    api.clear_plan_cache()
+    cache.maxsize = 1
+    try:
+        eng = ServeEngine(cfg, params=params, max_batch=1, max_len=MAX_LEN,
+                          sparse=True)
+        for toks in prompts:
+            eng.submit(toks, max_new_tokens=2)
+        results = eng.run()
+        stats = api.cache_stats()["plans"]
+        assert stats["evictions"] > 0
+        assert stats["size"] <= 1
+        for rid, toks in enumerate(prompts):
+            np.testing.assert_array_equal(
+                results[rid], _reference(params, cfg, toks, 2),
+                err_msg=f"request {rid}")
+    finally:
+        cache.maxsize = old_max
+        api.clear_plan_cache()
+
+
+# ---------------------------------------------------------------------------
+# check_api: repro.serving.engine is internal to serving/
+# ---------------------------------------------------------------------------
+def _load_check_api():
+    path = pathlib.Path(__file__).resolve().parents[1] / "tools" \
+        / "check_api.py"
+    spec = importlib.util.spec_from_file_location("check_api_serving", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_check_api_flags_engine_import(tmp_path):
+    (tmp_path / "examples").mkdir()
+    (tmp_path / "src" / "repro" / "serving").mkdir(parents=True)
+    (tmp_path / "examples" / "bad.py").write_text(
+        "from repro.serving.engine import ServeEngine\n")
+    (tmp_path / "examples" / "bad2.py").write_text(
+        "from repro.serving import engine\n")
+    (tmp_path / "src" / "repro" / "serving" / "ok.py").write_text(
+        "from .engine import ServeEngine\n")
+    (tmp_path / "examples" / "ok2.py").write_text(
+        "from repro.serving import ServeEngine\n")
+    found = _load_check_api().violations(str(tmp_path))
+    assert len(found) == 2
+    assert any("bad.py" in f for f in found)
+    assert any("bad2.py" in f for f in found)

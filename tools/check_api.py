@@ -68,6 +68,14 @@ FORBIDDEN_MODULES = {
         "dirs": ("examples", "benchmarks", "tools", "tests", "src/repro"),
         "allow": ("src/repro/core",),
     },
+    # The serving engine's slot/cache-splicing internals are not API:
+    # import ServeEngine from repro.serving (the package __init__), which
+    # owns the admission/batching/metrics surface.
+    "repro.serving.engine": {
+        "parent": "repro.serving", "leaf": "engine",
+        "dirs": ("examples", "benchmarks", "tools", "tests", "src/repro"),
+        "allow": ("src/repro/serving",),
+    },
 }
 
 
