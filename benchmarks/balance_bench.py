@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import sys
 import time
 
@@ -50,10 +49,9 @@ def main() -> int:
         args.scale, args.repeats = 8, 1
         args.block_size, args.n_cols = 16, 32
 
-    os.environ["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={DEVICES} "
-        + os.environ.get("XLA_FLAGS", ""))
-    import jax.numpy as jnp  # noqa: E402  (after XLA_FLAGS)
+    from repro.runtime.platform import set_host_device_count
+    set_host_device_count(DEVICES, overlap=True)
+    import jax.numpy as jnp  # noqa: E402  (after flag setup)
     import numpy as np
 
     from repro.core import api

@@ -10,12 +10,14 @@ rest run in-process.
   PYTHONPATH=src python -m benchmarks.run --json     # write BENCH_kernels.json
 
 ``--json`` runs the kernel micro-bench plus the balanced-tiling,
-dense-vs-sparse-output SpGEMM, static-work-stealing and padded-vs-packed
-wire experiments (R-MAT on a 4x4 grid, each in a 16-device subprocess)
-and writes ``BENCH_kernels.json`` at the repo root: plan build time,
-per-multiply time, padded-flop waste, output footprint,
-``wire_bytes_padded`` vs ``wire_bytes_packed`` and predicted-vs-measured
-cost per algorithm — the perf-trajectory baseline for future PRs.  It also
+dense-vs-sparse-output SpGEMM, static-work-stealing, padded-vs-packed
+wire and overlap-A/B experiments (R-MAT on a 4x4 grid, each in a
+16-device subprocess) and writes ``BENCH_kernels.json`` at the repo
+root: plan build time, per-multiply time, padded-flop waste, output
+footprint, ``wire_bytes_padded`` vs ``wire_bytes_packed``,
+per-schedule ``comm_exposed`` with overlap on vs off, and
+predicted-vs-measured cost per algorithm — the perf-trajectory
+baseline for future PRs.  It also
 captures a ``serve_trace`` section (``serve_bench``: Poisson arrivals
 through the sparse ``ServeEngine``) with p50/p99 TTFT/TPOT,
 plans-per-second and the plan-cache hit rate.  Each
@@ -36,8 +38,8 @@ REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
 def _subprocess_env(devices: int) -> dict:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    from repro.runtime.platform import subprocess_env
+    env = subprocess_env(devices, overlap=True)
     src = os.path.join(REPO_ROOT, "src")
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
     return env
@@ -78,6 +80,11 @@ def _machine_fit_section(payload: dict) -> dict:
         fm = _load_fit_machine()
         records = fm.collect_records(payload)
         fitted, diag = fm.fit(records, roofline.TPU_V5E)
+        eff, ov_diag = fm.fit_overlap_eff(payload)
+        if eff is not None:
+            import dataclasses
+            fitted = dataclasses.replace(fitted, overlap_eff=eff)
+        diag.update(ov_diag)
         drift = []
         for rec in records:
             pred_nominal = _predicted_time(rec["cm"], rec["alg"],
@@ -116,6 +123,7 @@ def _write_json(smoke: bool) -> None:
             ("benchmarks.spgemm_bench", "spgemm_rmat_4x4", 16),
             ("benchmarks.steal_bench", "steal_rmat_4x4", 16),
             ("benchmarks.wire_bench", "wire_rmat_4x4", 16),
+            ("benchmarks.overlap_bench", "overlap_rmat_4x4", 16),
             ("benchmarks.serve_bench", "serve_trace", 1)):
         raw = _run_subprocess(module, devices, *extra, quiet=True)
         try:
@@ -171,13 +179,16 @@ def main() -> None:
         kernels_bench.main(smoke=True)
         ok = True
         # wire_bench additionally *asserts* packed wire bytes <= padded and
-        # packed results allclose to padded; serve_bench asserts the
-        # serving contract (dense-reference match, plan hits > misses,
-        # zero dropped tokens) — both exit non-zero on violation
+        # packed results allclose to padded; overlap_bench asserts the
+        # overlap A-B contract (double-buffered results allclose to bulk,
+        # exposed comm no worse beyond measurement tolerance); serve_bench
+        # asserts the serving contract (dense-reference match, plan hits >
+        # misses, zero dropped tokens) — all exit non-zero on violation
         for module, devices in (("benchmarks.balance_bench", 16),
                                 ("benchmarks.spgemm_bench", 16),
                                 ("benchmarks.steal_bench", 16),
                                 ("benchmarks.wire_bench", 16),
+                                ("benchmarks.overlap_bench", 16),
                                 ("benchmarks.serve_bench", 1)):
             raw = _run_subprocess(module, devices, "--smoke", quiet=True)
             name = module.rsplit(".", 1)[1]

@@ -21,7 +21,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import sys
 import time
 
@@ -54,9 +53,8 @@ def main() -> int:
     if args.smoke:
         args.scale, args.repeats = 9, 2
 
-    os.environ["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={DEVICES} "
-        + os.environ.get("XLA_FLAGS", ""))
+    from repro.runtime.platform import set_host_device_count
+    set_host_device_count(DEVICES, overlap=True)
     import numpy as np
 
     from repro.core import api

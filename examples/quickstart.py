@@ -14,10 +14,13 @@ re-pad, no re-skew, no re-trace (``plan.traces`` stays at 1).
 import os
 import sys
 
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax.numpy as jnp
+from repro.runtime.platform import set_host_device_count  # noqa: E402
+
+set_host_device_count(4)      # before jax init (single XLA_FLAGS write site)
+
+import jax.numpy as jnp  # noqa: E402
 import numpy as np
 
 from repro.core import api

@@ -11,10 +11,13 @@ placements are shared) and comparing against a dense-numpy oracle.
 import os
 import sys
 
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
+from repro.runtime.platform import set_host_device_count  # noqa: E402
+
+set_host_device_count(4)      # before jax init (single XLA_FLAGS write site)
+
+import numpy as np  # noqa: E402
 
 from repro.core import api
 from repro.core.api import DistBSR

@@ -134,6 +134,11 @@ class _Geom:
     axc: str
     out_dtype: object
     c_store: int = 0  # packed C slots per tile (sparse-output plans only)
+    overlap: bool = False
+    # split-step double-buffered bodies (plan_matmul(overlap=...)): each
+    # scanned step issues step t+1's collective BEFORE step t's
+    # accumulate, carrying a two-slot buffer per stream, so XLA's async
+    # collectives can hide the transfer under the local matmul
 
 
 # ---------------------------------------------------------------------------
@@ -473,6 +478,27 @@ def _sparse_body_summa_bcast(a, b, pairs, geom: _Geom):
     """Bulk-synchronous SUMMA with packed sparse output."""
     my_row = lax.axis_index(geom.axr)
     my_col = lax.axis_index(geom.axc)
+    if geom.overlap:
+        # split-step (see _body_summa_bcast): step t carries inner step
+        # t's panels and pairs while broadcasting step t+1's panels.
+        a_c = _tree_bcast(a, geom.axc, jnp.int32(0), my_col)
+        b_c = _tree_bcast(b, geom.axr, jnp.int32(0), my_row)
+
+        def step(carry, xs):
+            a_k, b_k, c = carry
+            k, pa, pb, ps = xs
+            a_n = _tree_bcast(a, geom.axc, k, my_col)
+            b_n = _tree_bcast(b, geom.axr, k, my_row)
+            c = c + _sparse_step(a_k, b_k, pa, pb, ps, geom)
+            return (a_n, b_n, c), None
+
+        (a_l, b_l, c), _ = lax.scan(
+            step, (a_c, b_c, _sparse_c0(a, geom)),
+            (jnp.arange(1, geom.g), pairs["pa"][:-1], pairs["pb"][:-1],
+             pairs["ps"][:-1]))
+        c = c + _sparse_step(a_l, b_l, pairs["pa"][-1], pairs["pb"][-1],
+                             pairs["ps"][-1], geom)
+        return c.astype(geom.out_dtype)
 
     def step(c, xs):
         k, pa, pb, ps = xs
@@ -510,6 +536,28 @@ def _sparse_body_ring_c(a, b, pairs, geom: _Geom):
     ring in stored block form (its densified tile never exists), and the
     scanned step consumes the step-scheduled pair lists as scan inputs.
     """
+    if geom.overlap:
+        # two-slot double buffer (see _body_ring_c); scan input t pairs
+        # with the tile of generation t, so the xs are sliced to g-1 and
+        # the last pair list feeds the epilogue accumulate.
+        a_f = _tree_ppermute(a, geom.axc, geom.g)
+        b_f = _tree_ppermute(b, geom.axr, geom.g)
+
+        def step(carry, xs):
+            a_t, b_t, a_f, b_f, c = carry
+            pa, pb, ps = xs
+            a_n = _tree_ppermute(a_f, geom.axc, geom.g)
+            b_n = _tree_ppermute(b_f, geom.axr, geom.g)
+            c = c + _sparse_step(a_t, b_t, pa, pb, ps, geom)
+            return (a_f, b_f, a_n, b_n, c), None
+
+        (a_l, b_l, _, _, c), _ = lax.scan(
+            step, (a, b, a_f, b_f, _sparse_c0(a, geom)),
+            (pairs["pa"][:-1], pairs["pb"][:-1], pairs["ps"][:-1]))
+        c = c + _sparse_step(a_l, b_l, pairs["pa"][-1], pairs["pb"][-1],
+                             pairs["ps"][-1], geom)
+        return c.astype(geom.out_dtype)
+
     def step(carry, xs):
         a_t, b_t, c = carry
         pa, pb, ps = xs
@@ -557,6 +605,31 @@ def _packed_body_ring_c(a, b, aux, geom: _Geom):
     xs = {"ag": aux["a_gidx"], "ar": aux["a_rows"], "ac": aux["a_cols"]}
     if b_packed:
         xs["bd"] = aux["b_dmap"]
+    c0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
+    if geom.overlap:
+        # two-slot double buffer (see _body_ring_c); consume maps for
+        # step t pair with tile generation t, so xs slice to g-1 and the
+        # final maps feed the epilogue accumulate.
+        last = {k: v[-1] for k, v in xs.items()}
+        xs = {k: v[:-1] for k, v in xs.items()}
+        a_f = lax.ppermute(a["blocks"], geom.axc, _ring_perm(geom.g))
+        b_f = lax.ppermute(b0, geom.axr, _ring_perm(geom.g))
+
+        def step(carry, xs):
+            a_blk, b_buf, a_f, b_f, c = carry
+            a_n = lax.ppermute(a_f, geom.axc, _ring_perm(geom.g))
+            b_n = lax.ppermute(b_f, geom.axr, _ring_perm(geom.g))
+            b_dense = _packed_b_dense(b_buf, xs["bd"], geom) if b_packed \
+                else b_buf
+            c = c + _packed_a_mm(a_blk, xs["ag"], xs["ar"], xs["ac"],
+                                 b_dense, geom)
+            return (a_f, b_f, a_n, b_n, c), None
+
+        (a_l, b_l, _, _, c), _ = lax.scan(
+            step, (a["blocks"], b0, a_f, b_f, c0), xs)
+        b_dense = _packed_b_dense(b_l, last["bd"], geom) if b_packed else b_l
+        return c + _packed_a_mm(a_l, last["ag"], last["ar"], last["ac"],
+                                b_dense, geom)
 
     def step(carry, xs):
         a_blk, b_buf, c = carry
@@ -568,7 +641,6 @@ def _packed_body_ring_c(a, b, aux, geom: _Geom):
                              geom)
         return (a_n, b_n, c), None
 
-    c0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
     (_, _, c), _ = lax.scan(step, (a["blocks"], b0, c0), xs)
     return c
 
@@ -586,6 +658,40 @@ def _packed_body_ring_c_bidir(a, b, aux, geom: _Geom):
     xs = {"fg": aux["a_gidx"], "fr": aux["a_rows"], "fc": aux["a_cols"],
           "bg": aux["a_gidx_bwd"], "br": aux["a_rows_bwd"],
           "bc": aux["a_cols_bwd"]}
+    c_l0 = _pvary(jnp.zeros((geom.tm, half), dtype=geom.out_dtype), geom)
+    c_r0 = _pvary(jnp.zeros((geom.tm, geom.tn - half),
+                            dtype=geom.out_dtype), geom)
+    if geom.overlap:
+        # four streams x two slots (see _body_ring_c_bidir), consume maps
+        # sliced so step t's maps meet tile generation t
+        last = {k: v[-1] for k, v in xs.items()}
+        xs = {k: v[:-1] for k, v in xs.items()}
+        a_ff = lax.ppermute(a["blocks"], geom.axc, _ring_perm(geom.g, +1))
+        a_bf = lax.ppermute(a["blocks"], geom.axc, _ring_perm(geom.g, -1))
+        b_ff = lax.ppermute(b_fwd, geom.axr, _ring_perm(geom.g, +1))
+        b_bf = lax.ppermute(b_bwd, geom.axr, _ring_perm(geom.g, -1))
+
+        def step(carry, xs):
+            a_f, a_b, b_f, b_b, a_ff, a_bf, b_ff, b_bf, c_l, c_r = carry
+            a_fn = lax.ppermute(a_ff, geom.axc, _ring_perm(geom.g, +1))
+            a_bn = lax.ppermute(a_bf, geom.axc, _ring_perm(geom.g, -1))
+            b_fn = lax.ppermute(b_ff, geom.axr, _ring_perm(geom.g, +1))
+            b_bn = lax.ppermute(b_bf, geom.axr, _ring_perm(geom.g, -1))
+            c_l = c_l + _packed_a_mm(a_f, xs["fg"], xs["fr"], xs["fc"],
+                                     b_f, geom)
+            c_r = c_r + _packed_a_mm(a_b, xs["bg"], xs["br"], xs["bc"],
+                                     b_b, geom)
+            return (a_ff, a_bf, b_ff, b_bf, a_fn, a_bn, b_fn, b_bn,
+                    c_l, c_r), None
+
+        (a_fl, a_bl, b_fl, b_bl, _, _, _, _, c_l, c_r), _ = lax.scan(
+            step, (a["blocks"], a["blocks"], b_fwd, b_bwd,
+                   a_ff, a_bf, b_ff, b_bf, c_l0, c_r0), xs)
+        c_l = c_l + _packed_a_mm(a_fl, last["fg"], last["fr"], last["fc"],
+                                 b_fl, geom)
+        c_r = c_r + _packed_a_mm(a_bl, last["bg"], last["br"], last["bc"],
+                                 b_bl, geom)
+        return jnp.concatenate([c_l, c_r], axis=1)
 
     def step(carry, xs):
         a_f, a_b, b_f, b_b, c_l, c_r = carry
@@ -599,9 +705,6 @@ def _packed_body_ring_c_bidir(a, b, aux, geom: _Geom):
                                  geom)
         return (a_fn, a_bn, b_fn, b_bn, c_l, c_r), None
 
-    c_l0 = _pvary(jnp.zeros((geom.tm, half), dtype=geom.out_dtype), geom)
-    c_r0 = _pvary(jnp.zeros((geom.tm, geom.tn - half),
-                            dtype=geom.out_dtype), geom)
     (_, _, _, _, c_l, c_r), _ = lax.scan(
         step, (a["blocks"], a["blocks"], b_fwd, b_bwd, c_l0, c_r0), xs)
     return jnp.concatenate([c_l, c_r], axis=1)
@@ -616,6 +719,25 @@ def _packed_body_ring_a(a, b, aux, geom: _Geom):
     ROADMAP's sparse-output ring_a item).
     """
     acc0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
+    if geom.overlap:
+        # B stream two-slot only — the accumulator ring is a serial
+        # dependence chain and cannot be double-buffered (see _body_ring_a)
+        b_f = lax.ppermute(b["blocks"], geom.axr, _ring_perm(geom.g))
+
+        def step(carry, bd):
+            b_blk, b_f, acc = carry
+            b_n = lax.ppermute(b_f, geom.axr, _ring_perm(geom.g))
+            acc = acc + _local_mm(
+                a, {"dense": _packed_b_dense(b_blk, bd, geom)}, geom)
+            acc = lax.ppermute(acc, geom.axc, _ring_perm(geom.g))
+            return (b_f, b_n, acc), None
+
+        (b_l, _, acc), _ = lax.scan(step, (b["blocks"], b_f, acc0),
+                                    aux["b_dmap"][:-1])
+        acc = acc + _local_mm(
+            a, {"dense": _packed_b_dense(b_l, aux["b_dmap"][-1], geom)},
+            geom)
+        return lax.ppermute(acc, geom.axc, _ring_perm(geom.g))
 
     def step(carry, bd):
         b_blk, acc = carry
@@ -666,18 +788,42 @@ def _packed_body_summa_bcast(a, b, aux, geom: _Geom):
     if b_packed:
         xs["bd"] = aux["b_dmap"]
 
-    def step(c, xs):
-        k = xs["k"]
+    def bcast(k):
         a_k = lax.psum(jnp.where(my_col == k, a["blocks"],
                                  jnp.zeros_like(a["blocks"])), geom.axc)
         b_k = lax.psum(jnp.where(my_row == k, b0, jnp.zeros_like(b0)),
                        geom.axr)
+        return a_k, b_k
+
+    c0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
+    if geom.overlap:
+        # split-step (see _body_summa_bcast): broadcast inner step k while
+        # accumulating the carried panels of step k-1
+        last = {k: v[-1] for k, v in xs.items()}
+        xs = {k: v[1:] if k == "k" else v[:-1] for k, v in xs.items()}
+        a_c, b_c = bcast(jnp.int32(0))
+
+        def step(carry, xs):
+            a_k, b_k, c = carry
+            a_n, b_n = bcast(xs["k"])
+            b_dense = _packed_b_dense(b_k, xs["bd"], geom) if b_packed \
+                else b_k
+            c = c + _packed_a_mm(a_k, xs["ag"], xs["ar"], xs["ac"],
+                                 b_dense, geom)
+            return (a_n, b_n, c), None
+
+        (a_l, b_l, c), _ = lax.scan(step, (a_c, b_c, c0), xs)
+        b_dense = _packed_b_dense(b_l, last["bd"], geom) if b_packed else b_l
+        return c + _packed_a_mm(a_l, last["ag"], last["ar"], last["ac"],
+                                b_dense, geom)
+
+    def step(c, xs):
+        a_k, b_k = bcast(xs["k"])
         b_dense = _packed_b_dense(b_k, xs["bd"], geom) if b_packed else b_k
         c = c + _packed_a_mm(a_k, xs["ag"], xs["ar"], xs["ac"], b_dense,
                              geom)
         return c, None
 
-    c0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
     c, _ = lax.scan(step, c0, xs)
     return c
 
@@ -758,13 +904,29 @@ def _body_summa_bcast(a, b, geom: _Geom):
     b = _densify_b(b, geom)
     my_row = lax.axis_index(geom.axr)
     my_col = lax.axis_index(geom.axc)
+    c0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
+    if geom.overlap:
+        # split-step: broadcast inner step k+1 before accumulating step k's
+        # carried panels, so the collective overlaps the local matmul
+        a_c = _tree_bcast(a, geom.axc, jnp.int32(0), my_col)
+        b_c = _tree_bcast(b, geom.axr, jnp.int32(0), my_row)
+
+        def step(carry, k):
+            a_k, b_k, c = carry
+            a_n = _tree_bcast(a, geom.axc, k, my_col)
+            b_n = _tree_bcast(b, geom.axr, k, my_row)
+            c = c + _local_mm(a_k, b_k, geom)
+            return (a_n, b_n, c), None
+
+        (a_l, b_l, c), _ = lax.scan(step, (a_c, b_c, c0),
+                                    jnp.arange(1, geom.g))
+        return c + _local_mm(a_l, b_l, geom)
 
     def step(c, k):
         a_k = _tree_bcast(a, geom.axc, k, my_col)  # bcast A[:, k] along rows
         b_k = _tree_bcast(b, geom.axr, k, my_row)  # bcast B[k, :] along cols
         return c + _local_mm(a_k, b_k, geom), None
 
-    c0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
     c, _ = lax.scan(step, c0, jnp.arange(geom.g))
     return c
 
@@ -776,7 +938,12 @@ def _body_summa_bcast(a, b, geom: _Geom):
                     wire_planner=_wire_planner_summa_ag,
                     k_order=lambda i, j, t, g: t + 0 * (i + j))
 def _body_summa_ag(a, b, geom: _Geom):
-    """All-gather SUMMA: one big up-front collective, g x tile footprint."""
+    """All-gather SUMMA: one big up-front collective, g x tile footprint.
+
+    No overlap variant: the schedule is wire-amortized — every inner step
+    depends on the single up-front all-gather, so there is no per-step
+    transfer to double-buffer (the gather gates all compute).
+    """
     b = _densify_b(b, geom)
     a_g = {k: lax.all_gather(v, geom.axc) for k, v in a.items()}
     b_g = {k: lax.all_gather(v, geom.axr) for k, v in b.items()}
@@ -800,6 +967,28 @@ def _body_summa_ag(a, b, geom: _Geom):
 def _body_ring_c(a, b, geom: _Geom):
     """Paper Alg 2 (stationary-C): skewed placement + neighbour ppermute."""
     b = _densify_b(b, geom)
+    c0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
+    if geom.overlap:
+        # Split-step double buffer: the carry holds the tile being
+        # consumed AND the tile in flight, so the transfer consumed at
+        # step t+1 was issued at step t-1 — a full local matmul of slack
+        # for the collective-permute DMA.  The prologue issues step 1's
+        # transfer, the scan runs g-1 steps, and the epilogue accumulates
+        # the last tile with nothing left to prefetch: g permutes per
+        # stream total, exactly the bulk body's wire traffic.
+        a_f = _tree_ppermute(a, geom.axc, geom.g)
+        b_f = _tree_ppermute(b, geom.axr, geom.g)
+
+        def step(carry, _):
+            a_t, b_t, a_f, b_f, c = carry
+            a_n = _tree_ppermute(a_f, geom.axc, geom.g)   # step t+2's tile
+            b_n = _tree_ppermute(b_f, geom.axr, geom.g)
+            c = c + _local_mm(a_t, b_t, geom)
+            return (a_f, b_f, a_n, b_n, c), None
+
+        (a_l, b_l, _, _, c), _ = lax.scan(step, (a, b, a_f, b_f, c0), None,
+                                          length=geom.g - 1)
+        return c + _local_mm(a_l, b_l, geom)
 
     def step(carry, _):
         a_t, b_t, c = carry
@@ -810,7 +999,6 @@ def _body_ring_c(a, b, geom: _Geom):
         c = c + _local_mm(a_t, b_t, geom)
         return (a_n, b_n, c), None
 
-    c0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
     (_, _, c), _ = lax.scan(step, (a, b, c0), None, length=geom.g)
     return c
 
@@ -823,6 +1011,24 @@ def _body_ring_a(a, b, geom: _Geom):
     """Paper Alg 1 (stationary-A): B rides the ring, partial C rides back."""
     b = _densify_b(b, geom)
     acc0 = _pvary(jnp.zeros((geom.tm, geom.tn), dtype=geom.out_dtype), geom)
+    if geom.overlap:
+        # Only the B stream double-buffers: the partial-C permute depends
+        # on the accumulate it follows (the ride-home chain is inherently
+        # serial), so C's hop count stays g while B's transfers gain a
+        # full matmul of slack.
+        b_f = _tree_ppermute(b, geom.axr, geom.g)
+
+        def step(carry, _):
+            b_t, b_f, acc = carry
+            b_n = _tree_ppermute(b_f, geom.axr, geom.g)
+            acc = acc + _local_mm(a, b_t, geom)
+            acc = lax.ppermute(acc, geom.axc, _ring_perm(geom.g))
+            return (b_f, b_n, acc), None
+
+        (b_l, _, acc), _ = lax.scan(step, (b, b_f, acc0), None,
+                                    length=geom.g - 1)
+        acc = acc + _local_mm(a, b_l, geom)
+        return lax.ppermute(acc, geom.axc, _ring_perm(geom.g))
 
     def step(carry, _):
         b_t, acc = carry
@@ -860,6 +1066,33 @@ def _body_ring_c_bidir(a, b, geom: _Geom):
     half = geom.tn // 2
     b_fwd = {"dense": b["dense"][:, :half]}
     b_bwd = {"dense": b["dense"][:, half:]}
+    c_l0 = _pvary(jnp.zeros((geom.tm, half), dtype=geom.out_dtype), geom)
+    c_r0 = _pvary(jnp.zeros((geom.tm, geom.tn - half), dtype=geom.out_dtype),
+                  geom)
+    if geom.overlap:
+        # four streams, each with a two-slot buffer (see _body_ring_c)
+        a_ff = _tree_ppermute(a, geom.axc, geom.g, +1)
+        a_bf = _tree_ppermute(a, geom.axc, geom.g, -1)
+        b_ff = _tree_ppermute(b_fwd, geom.axr, geom.g, +1)
+        b_bf = _tree_ppermute(b_bwd, geom.axr, geom.g, -1)
+
+        def step(carry, _):
+            a_f, a_b, b_f, b_b, a_ff, a_bf, b_ff, b_bf, c_l, c_r = carry
+            a_fn = _tree_ppermute(a_ff, geom.axc, geom.g, +1)
+            a_bn = _tree_ppermute(a_bf, geom.axc, geom.g, -1)
+            b_fn = _tree_ppermute(b_ff, geom.axr, geom.g, +1)
+            b_bn = _tree_ppermute(b_bf, geom.axr, geom.g, -1)
+            c_l = c_l + _local_mm(a_f, b_f, geom)
+            c_r = c_r + _local_mm(a_b, b_b, geom)
+            return (a_ff, a_bf, b_ff, b_bf, a_fn, a_bn, b_fn, b_bn,
+                    c_l, c_r), None
+
+        (a_fl, a_bl, b_fl, b_bl, _, _, _, _, c_l, c_r), _ = lax.scan(
+            step, (a, a, b_fwd, b_bwd, a_ff, a_bf, b_ff, b_bf, c_l0, c_r0),
+            None, length=geom.g - 1)
+        c_l = c_l + _local_mm(a_fl, b_fl, geom)
+        c_r = c_r + _local_mm(a_bl, b_bl, geom)
+        return jnp.concatenate([c_l, c_r], axis=1)
 
     def step(carry, _):
         a_f, a_b, b_f, b_b, c_l, c_r = carry
@@ -872,9 +1105,6 @@ def _body_ring_c_bidir(a, b, geom: _Geom):
         c_r = c_r + _local_mm(a_b, b_b, geom)
         return (a_fn, a_bn, b_fn, b_bn, c_l, c_r), None
 
-    c_l0 = _pvary(jnp.zeros((geom.tm, half), dtype=geom.out_dtype), geom)
-    c_r0 = _pvary(jnp.zeros((geom.tm, geom.tn - half), dtype=geom.out_dtype),
-                  geom)
     (_, _, _, _, c_l, c_r), _ = lax.scan(
         step, (a, a, b_fwd, b_bwd, c_l0, c_r0), None, length=geom.g)
     return jnp.concatenate([c_l, c_r], axis=1)
@@ -894,10 +1124,11 @@ def _steal_plan_for(a_h: "DistMatrix", b_h: "DistMatrix", geom: _Geom,
     skey = a_h.structure_key() if isinstance(a_h, DistBSR) else None
     if not (wire == "packed" and isinstance(a_h, DistBSR)):
         wire = "padded"      # dense A has no packable steal3d traffic
-    key = (a_h.abstract_key(), b_h.abstract_key(), skey, wire)
+    key = (a_h.abstract_key(), b_h.abstract_key(), skey, wire, geom.overlap)
     sp = _STEAL_CACHE.get(key)
     if sp is None:
-        sp = _steal3d.build_steal_plan(a_h, b_h, geom, wire=wire)
+        sp = _steal3d.build_steal_plan(a_h, b_h, geom, wire=wire,
+                                       overlap=geom.overlap)
         _STEAL_CACHE[key] = sp
     return sp
 
@@ -953,47 +1184,57 @@ def _body_steal3d(a, b, aux, geom: _Geom, splan: "_steal3d.StealPlan"):
     b_tiles = lax.all_gather(b_dense, geom.axr)          # [g, tk, tn]
     # moved tiles: one ppermute round per hop distance, source-side static
     # gather indices select what each source packs (paper's "one moving
-    # tile" for locality-constrained steals)
+    # tile" for locality-constrained steals).  Issued here, before any
+    # accumulate — on the overlap path (splan.overlap) the own-item
+    # segment depends only on the panel gathers, so these transfers fly
+    # while it computes.
     if packed:
         # flat segments: strides differ per round (per-move real max)
-        segs = [a_tiles.reshape((-1,) + a_tiles.shape[-2:])]
-        for delta, rcap in zip(splan.a_deltas, splan.a_round_cap):
-            buf = a_tiles[aux[f"amk{delta}"]][:, :rcap]
-            segs.append(
-                lax.ppermute(buf, geom.axr, _steal3d_perm(g, delta))
-                .reshape((-1,) + a_tiles.shape[-2:]))
-        segs.append(_pvary(jnp.zeros((1,) + a_tiles.shape[-2:],
-                                     a_tiles.dtype), geom))
-        a_pool = jnp.concatenate(segs)
+        moved_a = [
+            lax.ppermute(a_tiles[aux[f"amk{delta}"]][:, :rcap], geom.axr,
+                         _steal3d_perm(g, delta))
+            .reshape((-1,) + a_tiles.shape[-2:])
+            for delta, rcap in zip(splan.a_deltas, splan.a_round_cap)]
     else:
-        pool = [a_tiles]
-        for delta in splan.a_deltas:
-            buf = a_tiles[aux[f"amk{delta}"]]
-            pool.append(lax.ppermute(buf, geom.axr,
-                                     _steal3d_perm(g, delta)))
-        a_pool = jnp.concatenate(pool) if len(pool) > 1 else pool[0]
-        zero_a = _pvary(jnp.zeros((1,) + a_pool.shape[1:], a_pool.dtype),
-                        geom)
-        a_pool = jnp.concatenate([a_pool, zero_a])
-    b_pool = [b_tiles]
-    for delta in splan.b_deltas:
-        buf = b_tiles[aux[f"bmk{delta}"]]
-        b_pool.append(lax.ppermute(buf, geom.axc, _steal3d_perm(g, delta)))
-    b_pool = jnp.concatenate(b_pool) if len(b_pool) > 1 else b_pool[0]
-    pa, pb, ps = aux["pa"], aux["pb"], aux["ps"]
-    if splan.a_kind == "bsr":
-        blocks = a_pool if packed \
-            else a_pool.reshape((-1,) + a_pool.shape[-2:])
-        b_flat = b_pool.reshape(-1, b_pool.shape[-1])
-        c = kops.steal_pair_accumulate(blocks, b_flat, pa, pb, ps,
-                                       n_slots=splan.n_slots,
-                                       impl=geom.impl)
-        c = c.reshape(splan.n_out, geom.tm, geom.tn)
+        moved_a = [lax.ppermute(a_tiles[aux[f"amk{delta}"]], geom.axr,
+                                _steal3d_perm(g, delta))
+                   for delta in splan.a_deltas]
+    moved_b = [lax.ppermute(b_tiles[aux[f"bmk{delta}"]], geom.axc,
+                            _steal3d_perm(g, delta))
+               for delta in splan.b_deltas]
+    if packed:
+        panel_a = a_tiles.reshape((-1,) + a_tiles.shape[-2:])
+        zero_a = _pvary(jnp.zeros((1,) + a_tiles.shape[-2:],
+                                  a_tiles.dtype), geom)
     else:
-        prods = jnp.einsum("pij,pjk->pik", a_pool[pa], b_pool[pb],
+        panel_a = a_tiles
+        zero_a = _pvary(jnp.zeros((1,) + a_tiles.shape[1:],
+                                  a_tiles.dtype), geom)
+    a_pool = jnp.concatenate([panel_a] + moved_a + [zero_a])
+    b_pool = jnp.concatenate([b_tiles] + moved_b) if moved_b else b_tiles
+
+    def _accum(a_p, b_p, pa, pb, ps):
+        if splan.a_kind == "bsr":
+            blocks = a_p if packed else a_p.reshape((-1,) + a_p.shape[-2:])
+            b_flat = b_p.reshape(-1, b_p.shape[-1])
+            cc = kops.steal_pair_accumulate(blocks, b_flat, pa, pb, ps,
+                                            n_slots=splan.n_slots,
+                                            impl=geom.impl)
+            return cc.reshape(splan.n_out, geom.tm, geom.tn)
+        prods = jnp.einsum("pij,pjk->pik", a_p[pa], b_p[pb],
                            preferred_element_type=jnp.float32)
-        c = jax.ops.segment_sum(prods, ps, num_segments=splan.n_out,
-                                indices_are_sorted=True)
+        return jax.ops.segment_sum(prods, ps, num_segments=splan.n_out,
+                                   indices_are_sorted=True)
+
+    if splan.overlap:
+        # two-segment split: own items (panel-only pool, zero block right
+        # after the g panel tiles) accumulate while the moved-tile rounds
+        # are in flight; stolen items consume the full pools after
+        a_own = jnp.concatenate([panel_a, zero_a])
+        c = _accum(a_own, b_tiles, aux["pa0"], aux["pb0"], aux["ps0"]) \
+            + _accum(a_pool, b_pool, aux["pa1"], aux["pb1"], aux["ps1"])
+    else:
+        c = _accum(a_pool, b_pool, aux["pa"], aux["pb"], aux["ps"])
     own = c[0]
     if packed:
         # row-packed reduce rounds: ship only the block-rows the sender's
@@ -1572,16 +1813,39 @@ def _assemble_cost(alg: Algorithm, g: int, a_bytes, b_bytes, c_bytes,
     }
 
 
-def _predicted_time(cm: Dict[str, float], alg: Algorithm,
-                    machine: "_roofline.Machine") -> float:
-    """Alpha-beta-gamma seconds for one execution — the auto-select score.
+def _overlap_eff(alg: Algorithm, machine: "_roofline.Machine",
+                 overlap: str) -> float:
+    """The comm-hiding fraction the cost model credits this schedule.
+
+    ``"off"`` serializes everything.  ``"on"`` credits the machine's
+    fitted ``overlap_eff`` to every schedule whose per-step transfers the
+    split-step bodies can double-buffer — i.e. all but the wire-amortized
+    ones (summa_ag's single up-front gather gates all compute; nothing to
+    hide under).  ``"auto"`` (the scoring default) credits it only to the
+    RDMA-style prefetch schedules, which reproduces the legacy
+    sum-vs-max scoring exactly at the preset ``overlap_eff = 1.0``:
+    bulk-synchronous schedules pay ``comp + comm`` (a barrier per stage),
+    rings pay ``comp + max(0, comm - comp) = max(comp, comm)`` — the
+    paper's SS3.3 overlap claim as a scheduling preference.
+    """
+    if overlap == "off":
+        return 0.0
+    if overlap == "on":
+        return 0.0 if alg.wire_amortized else machine.overlap_eff
+    return machine.overlap_eff if alg.style != "bsp" else 0.0
+
+
+def _time_breakdown(cm: Dict[str, float], alg: Algorithm,
+                    machine: "_roofline.Machine",
+                    overlap: str = "auto") -> Dict[str, float]:
+    """Alpha-beta-gamma time decomposition for one execution.
 
     Compute time is capped by the local roofline; wire time is serialized
     bytes over the per-chip link share (credited for ``duplex``) plus a
-    per-message alpha term (``machine.hop_latency``).  Bulk-synchronous
-    schedules pay compute + comm (a barrier per stage forbids overlap);
-    the RDMA-style rings prefetch, so they pay max(compute, comm) — the
-    paper's SS3.3 overlap claim, encoded as a scheduling preference.
+    per-message alpha term (``machine.hop_latency``).  The overlap term
+    (:func:`_overlap_eff`, ``machine.overlap_eff``) converts raw comm
+    into *exposed* comm — ``max(0, comm - eff * comp)`` — and the
+    predicted seconds are ``comp + exposed``.
     """
     t_comp = cm["total_flops"] / _roofline.local_peak(cm["ai_local"], machine)
     if "n_msgs" in cm:
@@ -1594,9 +1858,24 @@ def _predicted_time(cm: Dict[str, float], alg: Algorithm,
         msgs = n_msgs * (1.0 if alg.wire_amortized else cm["steps"])
     t_comm = cm["total_net_bytes"] / (machine.net_bw * alg.duplex) \
         + msgs * machine.hop_latency
-    if alg.style == "bsp":
-        return t_comp + t_comm
-    return max(t_comp, t_comm)
+    eff = _overlap_eff(alg, machine, overlap)
+    exposed = max(0.0, t_comm - eff * t_comp)
+    return {
+        "t_comp": t_comp,
+        "t_comm": t_comm,
+        "t_comm_exposed": exposed,
+        "msgs": float(msgs),
+        "duplex": float(alg.duplex),
+        "overlap_eff": eff,
+        "predicted_s": t_comp + exposed,
+    }
+
+
+def _predicted_time(cm: Dict[str, float], alg: Algorithm,
+                    machine: "_roofline.Machine",
+                    overlap: str = "auto") -> float:
+    """Predicted seconds for one execution — the auto-select score."""
+    return _time_breakdown(cm, alg, machine, overlap)["predicted_s"]
 
 
 class MatmulPlan:
@@ -1617,9 +1896,14 @@ class MatmulPlan:
                  wire: str = "padded", packs: Tuple[str, ...] = (),
                  wire_aux: Optional[Dict[str, np.ndarray]] = None,
                  wire_caps: Optional[Dict[str, int]] = None,
-                 wire_fps: Optional[Dict[str, str]] = None):
+                 wire_fps: Optional[Dict[str, str]] = None,
+                 overlap: str = "auto"):
         self.algorithm = algorithm
         self.geom = geom
+        # the overlap mode this plan was built under ("auto"|"on"|"off");
+        # geom.overlap holds the resolved body structure, this records
+        # the request for cost reporting (cost_model / predicted_cost)
+        self.overlap = overlap
         self.mesh = mesh
         self._a_key = a_key
         self._b_key = b_key
@@ -1913,16 +2197,25 @@ class MatmulPlan:
                 np.asarray(a.counts, dtype=np.float64))
             out["per_stage_imbalance"] = per_stage
             out["end_to_end_imbalance"] = end_to_end
+        out["duplex"] = float(self.algorithm.duplex)
+        out["overlap"] = self.overlap
         return out
 
     def predicted_cost(self, machine: Optional["_roofline.Machine"] = None
                        ) -> float:
         """Predicted seconds per execution (the ``algorithm="auto"`` score)."""
         machine = machine or _roofline.TPU_V5E
-        return _predicted_time(self.cost_model(), self.algorithm, machine)
+        return _predicted_time(self.cost_model(), self.algorithm, machine,
+                               self.overlap)
 
     def predicted_perf(self, machine: "_roofline.Machine") -> Dict[str, float]:
-        """Paper SS4 inter-node roofline prediction for this plan."""
+        """Paper SS4 inter-node roofline prediction for this plan.
+
+        Besides the roofline point, includes the alpha-beta-gamma time
+        breakdown under this plan's overlap mode: ``t_comp``, ``t_comm``,
+        ``t_comm_exposed`` (comm left over after hiding
+        ``overlap_eff * t_comp`` of it), and ``predicted_s``.
+        """
         cm = self.cost_model()
         peak = _roofline.local_peak(cm["ai_local"], machine)
         return {
@@ -1930,6 +2223,7 @@ class MatmulPlan:
                                                  cm["ai_local"], machine),
             "local_peak": peak,
             "net_bound": cm["ai_net"] * machine.net_bw < peak,
+            **_time_breakdown(cm, self.algorithm, machine, self.overlap),
             **cm,
         }
 
@@ -2034,7 +2328,8 @@ def _coerce_pair(a, b, *, g: Optional[int] = None, allow_pad: bool = False
 
 
 def _geometry(a_h: DistMatrix, b_h: DistMatrix, *, impl: Optional[str],
-              axis_row: str, axis_col: str, c_store: int = 0) -> _Geom:
+              axis_row: str, axis_col: str, c_store: int = 0,
+              overlap: bool = False) -> _Geom:
     a_bsr = isinstance(a_h, DistBSR)
     b_bsr = isinstance(b_h, DistBSR)
     return _Geom(
@@ -2043,7 +2338,8 @@ def _geometry(a_h: DistMatrix, b_h: DistMatrix, *, impl: Optional[str],
         b_nbr=(b_h.tile_shape[0] // b_h.block_size) if b_bsr else 0,
         b_nbc=(b_h.tile_shape[1] // b_h.block_size) if b_bsr else 0,
         impl=impl, axr=axis_row, axc=axis_col,
-        out_dtype=jnp.promote_types(a_h.dtype, b_h.dtype), c_store=c_store)
+        out_dtype=jnp.promote_types(a_h.dtype, b_h.dtype), c_store=c_store,
+        overlap=overlap)
 
 
 def _symbolic_for(a_h: DistBSR, b_h: DistBSR) -> "SymbolicProduct":
@@ -2095,6 +2391,24 @@ def _mesh_key(mesh):
         return mesh
     except TypeError:
         return id(mesh)
+
+
+def _resolve_overlap(overlap: str) -> str:
+    """Validate the ``overlap=`` request ("auto" | "on" | "off").
+
+    ``"auto"`` (default) builds the split-step double-buffered bodies for
+    the scanned schedules (steal3d's segment split stays opt-in — see
+    :func:`plan_matmul`) and
+    scores schedules with the legacy per-style overlap preference;
+    ``"on"`` additionally credits the fitted ``machine.overlap_eff`` to
+    every non-amortized schedule when scoring; ``"off"`` builds the
+    bulk-synchronous bodies and serializes comm in every score (the A/B
+    baseline ``benchmarks/overlap_bench.py`` measures against).
+    """
+    if overlap not in ("auto", "on", "off"):
+        raise ValueError(f"unknown overlap {overlap!r}; one of "
+                         "('auto', 'on', 'off')")
+    return overlap
 
 
 def _resolve_wire(wire: str, output: str) -> str:
@@ -2157,7 +2471,8 @@ def auto_select(a, b, *, machine: Optional["_roofline.Machine"] = None,
                 g: Optional[int] = None, allow_pad: bool = False,
                 axis_row: str = "row", axis_col: str = "col",
                 registry: Optional[AlgorithmRegistry] = None,
-                output: str = "dense", wire: str = "auto", _symbolic=None
+                output: str = "dense", wire: str = "auto",
+                overlap: str = "auto", _symbolic=None
                 ) -> Tuple[str, Dict[str, float]]:
     """Score every registered schedule for ``a @ b``; pick the cheapest.
 
@@ -2175,11 +2490,18 @@ def auto_select(a, b, *, machine: Optional["_roofline.Machine"] = None,
     terms (each schedule's packable operands at their wire capacities;
     steal3d's packed gather/moved/reduce rounds), so the choice flips
     where shipping only real blocks changes the comm/compute trade.
+
+    ``overlap`` feeds the cost model's comm-hiding term (see
+    :func:`_overlap_eff`): ``"on"`` credits the machine's fitted
+    ``overlap_eff`` to every non-amortized schedule, so with a fitted
+    machine the choice can flip toward a schedule whose comm hides
+    under its compute.
     """
     a_h, b_h = _coerce_pair(a, b, g=g, allow_pad=allow_pad)
     machine = machine or _roofline.TPU_V5E
     registry = registry or REGISTRY
     wire = _resolve_wire(wire, output)
+    overlap = _resolve_overlap(overlap)
     if wire == "packed" and not (isinstance(a_h, DistBSR)
                                  or isinstance(b_h, DistBSR)):
         raise ValueError(
@@ -2195,9 +2517,13 @@ def auto_select(a, b, *, machine: Optional["_roofline.Machine"] = None,
         sym = _symbolic if _symbolic is not None else _symbolic_for(a_h, b_h)
         candidates = [alg for alg in candidates
                       if alg.sparse_body is not None]
+    # geom.overlap here only reaches the steal3d planner cache (cost
+    # scoring never reads it); match plan_matmul's opt-in rule so the
+    # scoring build is the one a steal3d win then reuses.
     geom = _geometry(a_h, b_h, impl=None, axis_row=axis_row,
                      axis_col=axis_col,
-                     c_store=sym.store_capacity if sym else 0)
+                     c_store=sym.store_capacity if sym else 0,
+                     overlap=overlap == "on")
     a_key, b_key = a_h.abstract_key(), b_h.abstract_key()
     scores = {}
     for alg in candidates:
@@ -2212,7 +2538,7 @@ def auto_select(a, b, *, machine: Optional["_roofline.Machine"] = None,
                     del caps["b"]
             cm = _cost_model(alg, geom, a_key, b_key, symbolic=sym,
                              wire_caps=caps)
-        scores[alg.name] = _predicted_time(cm, alg, machine)
+        scores[alg.name] = _predicted_time(cm, alg, machine, overlap)
     if not scores:
         raise ValueError("no algorithms registered" if output != "sparse"
                          else "no sparse-output algorithms registered")
@@ -2232,7 +2558,7 @@ def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
                 machine: Optional["_roofline.Machine"] = None,
                 output: str = "dense",
                 sparse_threshold: Optional[float] = None,
-                wire: str = "auto") -> MatmulPlan:
+                wire: str = "auto", overlap: str = "auto") -> MatmulPlan:
     """Build (or fetch from the shared cache) a plan for ``a @ b``.
 
     ``a`` / ``b`` may be :class:`DistMatrix` handles (preferred — placement
@@ -2267,8 +2593,21 @@ def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
     Packed plans join the cache keyed on the packed operands' structure
     fingerprints; a schedule with no packable traffic for these operands
     (e.g. ``ring_a`` with a dense B) degrades to its padded plan.
+
+    ``overlap`` selects the schedule bodies' dependence structure:
+    ``"auto"`` (default) and ``"on"`` build the split-step
+    double-buffered bodies — step t+1's collective issues *before* step
+    t's accumulate, carrying a two-slot buffer per stream, so the
+    compiler/runtime can fly transfers under compute — while ``"off"``
+    builds the bulk-synchronous bodies (the measurement baseline).
+    Exception: steal3d's own/stolen segment split costs an extra kernel
+    dispatch, so ``"auto"`` keeps its bulk single-segment plan and only
+    explicit ``"on"`` splits it.  The mode also feeds auto-selection's
+    comm-hiding credit (see :func:`auto_select`) and joins the cache
+    key.
     """
     a_h, b_h = _coerce_pair(a, b, g=g, allow_pad=allow_pad)
+    overlap = _resolve_overlap(overlap)
     if output not in ("dense", "sparse", "auto"):
         raise ValueError(f"unknown output {output!r}; one of "
                          "('dense', 'sparse', 'auto')")
@@ -2299,7 +2638,8 @@ def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
     if algorithm == "auto":
         algorithm, auto_scores = auto_select(
             a_h, b_h, machine=machine, axis_row=axis_row, axis_col=axis_col,
-            allow_pad=allow_pad, output=output, wire=wire, _symbolic=sym)
+            allow_pad=allow_pad, output=output, wire=wire, overlap=overlap,
+            _symbolic=sym)
     alg = REGISTRY.get(algorithm)
     if sym is not None and alg.sparse_body is None:
         raise ValueError(
@@ -2326,8 +2666,8 @@ def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
         if not packs:
             wire = "padded"
     mesh = _prep_mesh(mesh, a_h.g, axis_row, axis_col)
-    key = (alg.name, impl, axis_row, axis_col, allow_pad, _mesh_key(mesh),
-           a_h.abstract_key(), b_h.abstract_key())
+    key = (alg.name, impl, axis_row, axis_col, allow_pad, overlap,
+           _mesh_key(mesh), a_h.abstract_key(), b_h.abstract_key())
     if sym is not None:
         # pair lists are baked into the executable, so the structure is
         # part of the plan's identity, not just its abstract shapes
@@ -2347,9 +2687,17 @@ def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
             if auto_scores is not None and plan.auto_scores is None:
                 plan.auto_scores = auto_scores   # record for introspection
             return plan
+    # Scanned schedules double-buffer on "auto" (the split is a pure
+    # scan reordering — free).  steal3d's own/stolen segment split costs
+    # a second kernel dispatch, which only pays for itself when the
+    # stolen-tile transfers are genuinely asynchronous — so it is
+    # opt-in: explicit overlap="on" only.
+    body_overlap = (overlap == "on") if alg.static_planner is not None \
+        else (overlap != "off")
     geom = _geometry(a_h, b_h, impl=impl, axis_row=axis_row,
                      axis_col=axis_col,
-                     c_store=sym.store_capacity if sym else 0)
+                     c_store=sym.store_capacity if sym else 0,
+                     overlap=body_overlap)
     steal = alg.static_planner(a_h, b_h, geom, wire=wire) \
         if alg.static_planner is not None else None
     wire_aux = wire_caps = wire_fps = None
@@ -2375,7 +2723,8 @@ def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
                       allow_pad=allow_pad, requested=requested,
                       auto_scores=auto_scores, symbolic=sym, steal=steal,
                       wire=wire, packs=packs, wire_aux=wire_aux,
-                      wire_caps=wire_caps, wire_fps=wire_fps)
+                      wire_caps=wire_caps, wire_fps=wire_fps,
+                      overlap=overlap)
     if cache:
         _PLAN_CACHE[key] = plan
     return plan
@@ -2388,7 +2737,7 @@ def matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
            machine: Optional["_roofline.Machine"] = None,
            output: str = "dense",
            sparse_threshold: Optional[float] = None,
-           wire: str = "auto"):
+           wire: str = "auto", overlap: str = "auto"):
     """Polymorphic distributed ``a @ b``.
 
     Dispatches sparse x dense -> SpMM, sparse x sparse -> SpGEMM, and
@@ -2403,5 +2752,6 @@ def matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
     plan = plan_matmul(a_h, b_h, algorithm=algorithm, mesh=mesh, impl=impl,
                        axis_row=axis_row, axis_col=axis_col,
                        allow_pad=allow_pad, machine=machine, output=output,
-                       sparse_threshold=sparse_threshold, wire=wire)
+                       sparse_threshold=sparse_threshold, wire=wire,
+                       overlap=overlap)
     return plan(a_h, b_h)

@@ -33,13 +33,24 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class Machine:
-    """Per-accelerator constants (SI bytes/s, flop/s)."""
+    """Per-accelerator constants (SI bytes/s, flop/s).
+
+    ``overlap_eff`` is the overlap term of the cost model: the fraction
+    of a schedule's compute time its communication can hide under when
+    the schedule's dependence structure permits prefetch (the paper's
+    SS3.3 asynchronous-transfer claim).  Per-step exposed comm becomes
+    ``max(0, comm - overlap_eff * comp)`` — 1.0 is perfect hiding
+    (exposed = comm beyond compute, the classic ``max(comp, comm)``),
+    0.0 is fully serialized (``comp + comm``).  Fitted from measured
+    overlap-on vs -off A/B runs by ``tools/fit_machine.py``.
+    """
     name: str
     arith_peak: float       # flop/s (fp32 for V100 per paper; bf16 for TPU)
     mem_bw: float           # HBM bytes/s
     net_bw: float           # per-chip share of injection bandwidth, bytes/s
     word_bytes: int = 4
     hop_latency: float = 1e-6   # per-message latency (the alpha term), s
+    overlap_eff: float = 1.0    # comm-hiding fraction (see docstring)
 
 
 # Paper SS4/SS6: V100 16 TF fp32; Summit dual-rail EDR = 23 GB/s per node,

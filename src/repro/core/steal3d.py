@@ -83,6 +83,7 @@ class StealPlan:
     a_round_cap: Tuple[int, ...] = ()
                                    # packed per-move-round real max
                                    # (parallel to ``a_deltas``)
+    overlap: bool = False          # two-segment pair lists (see below)
 
 
 def _item_cost_grid(a_h, g: int) -> Tuple[np.ndarray, Optional[object]]:
@@ -103,7 +104,8 @@ def _item_cost_grid(a_h, g: int) -> Tuple[np.ndarray, Optional[object]]:
 
 def build_steal_plan(a_h, b_h, geom, *, locality: str = "locality",
                      comm_penalty: float = 1.0,
-                     wire: str = "padded") -> StealPlan:
+                     wire: str = "padded",
+                     overlap: bool = False) -> StealPlan:
     """Compile the stealing equilibrium for ``a_h @ b_h`` into a StealPlan.
 
     ``geom`` is the plan's :class:`repro.core.api._Geom`; handles are
@@ -116,6 +118,17 @@ def build_steal_plan(a_h, b_h, geom, *, locality: str = "locality",
     partial-C reduce rounds ship only the block-rows each sender's items
     can touch.  The LPT assignment — and therefore the executed makespan
     — is identical to the padded plan; only the bytes on the wire shrink.
+
+    ``overlap=True`` additionally splits each device's pair list into two
+    segments so the body can overlap the moved-tile ppermute rounds with
+    compute: segment 0 (``pa0``/``pb0``/``ps0``) holds the *own* items —
+    (i, k, j) with i == r and j == c, executable straight off the panel
+    gathers — and segment 1 (``pa1``/``pb1``/``ps1``) the stolen items
+    that need moved tiles.  Each segment is independently slot-sorted
+    with its own coverage pairs (the two partial outputs sum), and
+    segment 0's pair indices address the *panel-only* pool (zero block
+    appended directly after the g panel tiles).  The assignment, cost
+    dict and combined pair lists are identical to the non-overlap build.
     """
     g = geom.g
     n_dev = g * g
@@ -350,56 +363,82 @@ def build_steal_plan(a_h, b_h, geom, *, locality: str = "locality",
         zero_a = a_flat_zero
     else:
         zero_a = a_pool_tiles * store_a if sparse_a else a_pool_tiles
-    per_dev_pairs = []
-    for d in range(n_dev):
-        pa, pb, ps = [], [], []
-        for (i, k, j) in items[d]:
-            o = out_idx[d][(i, j)]
-            if sparse_a:
-                sl = np.nonzero(sa.real[i, k])[0]
-                if packed and not len(sl):
-                    # a structurally empty tile contributes no pairs; its
-                    # move round may have been dropped above, so it has no
-                    # packed pool position to reference either
-                    continue
-                if packed:
-                    # packed pool: real blocks are the tile's flat prefix
-                    pa.append(a_pos[d][(i, k)] + np.arange(len(sl)))
+
+    def _pair_arrays(item_sets, z_a):
+        """Slot-sorted pair arrays for a per-device item subset, with
+        coverage pairs referencing the zero-A index ``z_a``."""
+        per_dev_pairs = []
+        for d in range(n_dev):
+            pa, pb, ps = [], [], []
+            for (i, k, j) in item_sets[d]:
+                o = out_idx[d][(i, j)]
+                if sparse_a:
+                    sl = np.nonzero(sa.real[i, k])[0]
+                    if packed and not len(sl):
+                        # a structurally empty tile contributes no pairs;
+                        # its move round may have been dropped above, so it
+                        # has no packed pool position to reference either
+                        continue
+                    if packed:
+                        # packed pool: real blocks are the tile's flat
+                        # prefix
+                        pa.append(a_pos[d][(i, k)] + np.arange(len(sl)))
+                    else:
+                        pa.append(a_pos[d][(i, k)] * store_a + sl)
+                    pb.append(b_pos[d][(k, j)] * b_chunks
+                              + sa.cols[i, k][sl].astype(np.int64))
+                    ps.append(o * nbr + sa.rows[i, k][sl].astype(np.int64))
                 else:
-                    pa.append(a_pos[d][(i, k)] * store_a + sl)
-                pb.append(b_pos[d][(k, j)] * b_chunks
-                          + sa.cols[i, k][sl].astype(np.int64))
-                ps.append(o * nbr + sa.rows[i, k][sl].astype(np.int64))
+                    pa.append(np.array([a_pos[d][(i, k)]]))
+                    pb.append(np.array([b_pos[d][(k, j)]]))
+                    ps.append(np.array([o]))
+            pa = np.concatenate(pa) if pa else np.zeros(0, np.int64)
+            pb = np.concatenate(pb) if pb else np.zeros(0, np.int64)
+            ps = np.concatenate(ps) if ps else np.zeros(0, np.int64)
+            if sparse_a:
+                # one coverage pair per slot (inert: zero A block), merged
+                # in slot order — the kernel's first-visit zeroing contract
+                ps_all = np.concatenate([ps, np.arange(n_slots)])
+                order = np.argsort(ps_all, kind="stable")
+                pa = np.concatenate([pa, np.full(n_slots, z_a)])[order]
+                pb = np.concatenate([pb, np.zeros(n_slots, np.int64)])[order]
+                ps = ps_all[order]
             else:
-                pa.append(np.array([a_pos[d][(i, k)]]))
-                pb.append(np.array([b_pos[d][(k, j)]]))
-                ps.append(np.array([o]))
-        pa = np.concatenate(pa) if pa else np.zeros(0, np.int64)
-        pb = np.concatenate(pb) if pb else np.zeros(0, np.int64)
-        ps = np.concatenate(ps) if ps else np.zeros(0, np.int64)
-        if sparse_a:
-            # one coverage pair per slot (inert: zero A block), merged in
-            # slot order — the kernel's first-visit zeroing contract
-            ps_all = np.concatenate([ps, np.arange(n_slots)])
-            order = np.argsort(ps_all, kind="stable")
-            pa = np.concatenate([pa, np.full(n_slots, zero_a)])[order]
-            pb = np.concatenate([pb, np.zeros(n_slots, np.int64)])[order]
-            ps = ps_all[order]
-        else:
-            order = np.argsort(ps, kind="stable")
-            pa, pb, ps = pa[order], pb[order], ps[order]
-        per_dev_pairs.append((pa, pb, ps))
-    pair_cap = bucket_capacity(max(len(p[0]) for p in per_dev_pairs))
-    pa_arr = np.full((g, g, pair_cap), zero_a, dtype=np.int32)
-    pb_arr = np.zeros((g, g, pair_cap), dtype=np.int32)
-    ps_arr = np.full((g, g, pair_cap), n_slots - 1, dtype=np.int32)
-    for d, (pa, pb, ps) in enumerate(per_dev_pairs):
-        r, c = divmod(d, g)
-        n = len(pa)
-        pa_arr[r, c, :n] = pa
-        pb_arr[r, c, :n] = pb
-        ps_arr[r, c, :n] = ps
-    aux["pa"], aux["pb"], aux["ps"] = pa_arr, pb_arr, ps_arr
+                order = np.argsort(ps, kind="stable")
+                pa, pb, ps = pa[order], pb[order], ps[order]
+            per_dev_pairs.append((pa, pb, ps))
+        cap = bucket_capacity(max(len(p[0]) for p in per_dev_pairs))
+        pa_arr = np.full((g, g, cap), z_a, dtype=np.int32)
+        pb_arr = np.zeros((g, g, cap), dtype=np.int32)
+        ps_arr = np.full((g, g, cap), n_slots - 1, dtype=np.int32)
+        for d, (pa, pb, ps) in enumerate(per_dev_pairs):
+            r, c = divmod(d, g)
+            n = len(pa)
+            pa_arr[r, c, :n] = pa
+            pb_arr[r, c, :n] = pb
+            ps_arr[r, c, :n] = ps
+        return cap, pa_arr, pb_arr, ps_arr
+
+    pair_cap, pa_arr, pb_arr, ps_arr = _pair_arrays(items, zero_a)
+    if overlap:
+        # two-segment split: own items run straight off the panel gathers
+        # (segment 0, addressing the panel-only pool whose zero block sits
+        # right after the g panel tiles), stolen items wait for the moved
+        # tiles (segment 1, addressing the full pool as usual)
+        own_items, stolen_items = [], []
+        for d in range(n_dev):
+            r, c = divmod(d, g)
+            own_items.append([t for t in items[d]
+                              if t[0] == r and t[2] == c])
+            stolen_items.append([t for t in items[d]
+                                 if not (t[0] == r and t[2] == c)])
+        zero0 = g * wc if packed else (g * store_a if sparse_a else g)
+        _, aux["pa0"], aux["pb0"], aux["ps0"] = _pair_arrays(own_items,
+                                                             zero0)
+        _, aux["pa1"], aux["pb1"], aux["ps1"] = _pair_arrays(stolen_items,
+                                                             zero_a)
+    else:
+        aux["pa"], aux["pb"], aux["ps"] = pa_arr, pb_arr, ps_arr
 
     # ---- cost model (what auto_select scores) ----------------------------
     w_a = np.dtype(a_h.dtype).itemsize
@@ -459,4 +498,5 @@ def build_steal_plan(a_h, b_h, geom, *, locality: str = "locality",
         b_move_cap=tuple(b_move_cap), row_deltas=tuple(row_deltas),
         col_deltas=tuple(col_deltas), aux=aux, assignment=asg,
         a_fingerprint=sa.fingerprint if sparse_a else None, cost=cost,
-        wire=wire, a_wire_capacity=wc, a_round_cap=tuple(a_round_cap))
+        wire=wire, a_wire_capacity=wc, a_round_cap=tuple(a_round_cap),
+        overlap=overlap)

@@ -1,10 +1,12 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# The two lines above MUST run before any other import (jax locks the device
-# count at first init).  REPRO_DRYRUN_DEVICES overrides for quick local runs.
-if os.environ.get("REPRO_DRYRUN_DEVICES"):
-    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
-                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+from repro.runtime.platform import set_host_device_count
+
+# Must run before the first jax backend init (jax locks the device count
+# then) — runtime.platform is the repo's single XLA_FLAGS write site.
+# REPRO_DRYRUN_DEVICES overrides the full-pod fake count for quick local
+# runs.
+set_host_device_count(int(os.environ.get("REPRO_DRYRUN_DEVICES", 512)))
 
 """Multi-pod dry-run driver.
 

@@ -22,7 +22,8 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["analyze_hlo", "HloStats", "COLLECTIVE_KINDS"]
+__all__ = ["analyze_hlo", "analyze_overlap", "HloStats", "OverlapReport",
+           "COLLECTIVE_KINDS"]
 
 COLLECTIVE_KINDS = (
     "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
@@ -311,3 +312,97 @@ def _collective_kind(opcode: str) -> Optional[str]:
         if op == k or op == k + "-done":
             return k if not op.endswith("-done") else None
     return None
+
+
+# ---------------------------------------------------------------------------
+# Overlap analysis: did the compiler keep the start/done slack we created?
+# ---------------------------------------------------------------------------
+# Opcodes whose execution can hide an in-flight collective.  Fusions count:
+# on every real backend the local matmul/accumulate of a schedule step
+# compiles to a fusion (or a dot/convolution kept standalone).
+_COMPUTE_OPS = frozenset({"dot", "convolution", "reduce"})
+
+
+def _is_compute(opcode: str) -> bool:
+    return opcode in _COMPUTE_OPS or opcode.startswith("fusion")
+
+
+@dataclasses.dataclass
+class OverlapReport:
+    """How the compiled module treats its collectives (see analyze_overlap).
+
+    ``overlapped``: async (``-start``/``-done``) collective pairs with at
+    least one compute op scheduled strictly between start and done —
+    transfers the runtime can fly under compute.  ``serialized``: async
+    pairs whose done immediately follows the start (the slack the
+    split-step bodies create was scheduled away).  ``sync``: collectives
+    never split into start/done at all (always blocking).
+    """
+    overlapped: int = 0
+    serialized: int = 0
+    sync: int = 0
+    pairs: List[Tuple[str, str, int]] = dataclasses.field(
+        default_factory=list)   # (kind, start name, compute ops between)
+
+    @property
+    def async_total(self) -> int:
+        return self.overlapped + self.serialized
+
+    @property
+    def eligible_fraction(self) -> float:
+        """Fraction of async collectives with compute to hide under."""
+        return self.overlapped / self.async_total if self.async_total else 0.0
+
+
+def analyze_overlap(text: str) -> OverlapReport:
+    """Classify every collective in an HLO module as overlap-eligible or not.
+
+    Walks each computation in scheduled (textual) order.  A collective
+    issued as an ``X-start`` whose matching ``X-done`` (or
+    ``async-done`` consuming it) appears later with compute ops in
+    between is *overlapped* — the program order gives the runtime room to
+    run the transfer under that compute.  A start whose done is adjacent
+    is *serialized*; a collective emitted in its fused blocking form is
+    *sync*.  This is the verification half of the engine's split-step
+    double-buffered bodies: after compiling with
+    ``repro.runtime.platform`` overlap flags, the collective-permutes of
+    a ring schedule's scan body should classify as overlapped.
+    """
+    report = OverlapReport()
+    for name, (lines, _) in _split_computations(text).items():
+        instrs = _parse_instrs(lines)
+        for idx, instr in enumerate(instrs):
+            op = instr.opcode
+            kind = next((k for k in COLLECTIVE_KINDS
+                         if op == k + "-start"), None)
+            if kind is None and op == "async-start":
+                # async-wrapped form: async-start(...), calls=<collective>
+                m = re.search(r"calls=%?([\w.\-]+)", instr.attrs)
+                kind = "async"
+                if m:
+                    for k in COLLECTIVE_KINDS:
+                        if k in m.group(1):
+                            kind = k
+                            break
+            if kind is not None:
+                # find the matching done: the later instruction consuming
+                # this start's value
+                compute = 0
+                done_idx = None
+                for j in range(idx + 1, len(instrs)):
+                    if instr.name in instrs[j].operands and (
+                            instrs[j].opcode.endswith("-done")):
+                        done_idx = j
+                        break
+                    if _is_compute(instrs[j].opcode):
+                        compute += 1
+                if done_idx is None:
+                    continue    # malformed/truncated module
+                if compute:
+                    report.overlapped += 1
+                else:
+                    report.serialized += 1
+                report.pairs.append((kind, instr.name, compute))
+            elif op in COLLECTIVE_KINDS:
+                report.sync += 1
+    return report

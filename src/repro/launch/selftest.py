@@ -1,6 +1,7 @@
 """Multi-device correctness self-test (run as a subprocess).
 
-Sets ``XLA_FLAGS`` *before* importing jax, builds a small host-device mesh,
+Plants the fake-device XLA flags (via ``repro.runtime.platform``) *before*
+the first jax backend init, builds a small host-device mesh,
 and checks the distributed algorithms against dense references.  Used by
 ``tests/test_distributed.py`` and as a launch-time preflight on real
 clusters (a node that fails its self-test is drained before training
@@ -16,7 +17,6 @@ Usage:  python -m repro.launch.selftest --devices 4 --check all
 from __future__ import annotations
 
 import argparse
-import os
 import sys
 
 
@@ -33,10 +33,9 @@ def _parse():
 
 def main() -> int:
     args = _parse()
-    os.environ["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={args.devices} "
-        + os.environ.get("XLA_FLAGS", ""))
-    import jax  # noqa: E402  (after XLA_FLAGS)
+    from repro.runtime.platform import set_host_device_count
+    set_host_device_count(args.devices, overlap=True)
+    import jax  # noqa: E402  (after flag setup)
     import jax.numpy as jnp
     import numpy as np
 

@@ -37,7 +37,7 @@ from .common import BATCH_AXES, MODEL_AXIS, constrain, dense_init
 from .config import ModelConfig
 
 __all__ = ["init_moe", "moe_specs", "moe_forward", "route_tokens",
-           "expert_ffn", "router_aux", "selftest_distributed"]
+           "route_meta", "expert_ffn", "router_aux", "selftest_distributed"]
 
 
 def init_moe(cfg: ModelConfig, key) -> Dict:
@@ -68,6 +68,23 @@ def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
     return max(c, m.top_k)
 
 
+def route_meta(n_tokens: int, cfg: ModelConfig) -> Tuple[int, int, int]:
+    """Static routing geometry ``(cap, G, ng)`` as plain python ints.
+
+    A pure function of the (padded) token count and config.  Host-side
+    dispatch planning (the serving engine's sparse operator builder) and
+    the traced router share this one implementation, so the ints never
+    enter a jit trace and both paths agree on capacity by construction.
+    """
+    m = cfg.moe
+    G = max(1, cfg.moe_dispatch_groups)
+    while n_tokens % G:
+        G //= 2
+    ng = n_tokens // G
+    cap = max(_capacity(n_tokens, cfg) // G, m.top_k)
+    return cap, G, ng
+
+
 def route_tokens(router, xf, cfg: ModelConfig) -> Dict:
     """Shared router math: softmax -> top-k -> per-group capacity slots.
 
@@ -80,10 +97,7 @@ def route_tokens(router, xf, cfg: ModelConfig) -> Dict:
     m = cfg.moe
     n = xf.shape[0]
     e, k = m.n_experts, m.top_k
-    G = max(1, cfg.moe_dispatch_groups)
-    while n % G:
-        G //= 2
-    ng = n // G
+    cap, G, ng = route_meta(n, cfg)
 
     logits = jnp.einsum("nd,de->ne", xf.astype(jnp.float32),
                         router.astype(jnp.float32))
@@ -92,7 +106,6 @@ def route_tokens(router, xf, cfg: ModelConfig) -> Dict:
     top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
 
     # per-group capacity assignment (slot = rank within group+expert)
-    cap = max(_capacity(n, cfg) // G, k)
     onehot = jax.nn.one_hot(top_e, e, dtype=jnp.int32)        # [n, k, e]
     flat = onehot.reshape(G, ng * k, e)
     ranks = (jnp.cumsum(flat, axis=1) - flat)                 # excl, per group

@@ -1,2 +1,4 @@
 from .fault import StragglerDetector, RestartableLoop, PreemptionSignal  # noqa: F401
 from .elastic import choose_mesh_shape  # noqa: F401
+from . import platform  # noqa: F401
+from .platform import set_platform, set_host_device_count  # noqa: F401

@@ -10,9 +10,11 @@ from .batcher import (DEFAULT_BUCKETS, Request, RequestBatcher, bucket_for,
                       effective_bucket, padding_supported)
 from .engine import ServeEngine
 from .metrics import ServingMetrics, percentile, sync_elapsed
+from .sparse import segment_trace_counts
 
 __all__ = [
     "ServeEngine", "Request", "RequestBatcher", "ServingMetrics",
     "DEFAULT_BUCKETS", "bucket_for", "effective_bucket",
     "padding_supported", "percentile", "sync_elapsed",
+    "segment_trace_counts",
 ]

@@ -117,6 +117,11 @@ class ServeEngine:
             return fn
         cfg, max_len, cdt = self.cfg, self.max_len, self._cache_dtype
         if self.sparse:
+            # The sparse forward interleaves host-side operator
+            # construction with device math, so it cannot be one trace;
+            # its pure-jax segments are jitted per bucket inside
+            # serving/sparse.py (see segment_trace_counts), and the
+            # matmuls themselves run through cached MatmulPlans.
             def fn(params, toks, lengths):
                 caches = tf.init_cache(cfg, 1, max_len, cdt)
                 logits, caches, _ = tf.forward_unscanned(

@@ -23,8 +23,20 @@ This is the point where the paper's engine meets the model stack:
 Routing math is :func:`repro.models.moe.route_tokens` — the same function
 the dense reference uses — so the two paths route identically and outputs
 match token for token.
+
+**Jit granularity.**  The hot path alternates device math with host-side
+sparse-operator construction (numpy scatter of the dispatch matrix,
+block-diagonal stacking), so the whole forward cannot be one trace.
+Instead every pure-jax segment — router, expert FFN, QKV projection+RoPE,
+masked softmax, output projection — is a module-level ``jax.jit`` whose
+trace cache keys on the padded bucket shape (``cfg`` is a static arg):
+one trace per bucket, shared by every tenant in it, exactly like the
+plan cache underneath.  Static routing geometry comes from
+:func:`repro.models.moe.route_meta` so no python int is ever traced.
 """
 from __future__ import annotations
+
+import functools
 
 from typing import Dict, Optional, Tuple
 
@@ -81,6 +93,84 @@ class SparseOps:
 
 
 # ---------------------------------------------------------------------------
+# Jitted segments (one trace per bucket; cfg static, ints via route_meta)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnums=2)
+def _route_segment(router, xf, cfg: ModelConfig) -> Dict:
+    """Router math for one bucket — :func:`route_tokens` minus the static
+    ints (those come from ``route_meta`` on the host side)."""
+    r = moe_mod.route_tokens(router, xf, cfg)
+    return {k: v for k, v in r.items() if k not in ("cap", "G", "ng")}
+
+
+@functools.partial(jax.jit, static_argnums=2)
+def _expert_segment(p: Dict, xe, cfg: ModelConfig):
+    return moe_mod.expert_ffn(p, xe, cfg)
+
+
+@functools.partial(jax.jit, static_argnums=3)
+def _qkv_segment(p: Dict, x, positions, cfg: ModelConfig):
+    """Projection + RoPE + kv-head repeat, laid out for block-diagonal
+    stacking: (q_scaled [bh,t,hd], k_rep [bh,t,hd], v_flat [bh*t,hd],
+    k_roped, v) — the last two feed the prefill cache write."""
+    b, t, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h, kh = cfg.n_heads, cfg.n_kv_heads
+    grp = h // kh
+    q, k, v = attn_mod._project_qkv(p, x, cfg)
+    sin, cos = rope(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    qh = (q.transpose(0, 2, 1, 3).reshape(b * h, t, hd)
+          .astype(jnp.float32)) * (hd ** -0.5)
+    k_rep = jnp.repeat(k.transpose(0, 2, 1, 3), grp, axis=1)
+    v_rep = jnp.repeat(v.transpose(0, 2, 1, 3), grp, axis=1)
+    kh_f = k_rep.reshape(b * h, t, hd).astype(jnp.float32)
+    v_f = v_rep.reshape(b * h * t, hd).astype(jnp.float32)
+    return qh, kh_f, v_f, k, v
+
+
+@functools.partial(jax.jit, static_argnums=2)
+def _prob_segment(s_full, mask, cfg: ModelConfig):
+    """Diagonal-block extraction + softcap + mask + softmax; returns the
+    already-masked probability matrix (exact zeros off-mask) ready for
+    block-diagonal stacking into the combine SpMM."""
+    t = mask.shape[-1]
+    bh = s_full.shape[0] // t
+    diag = jnp.arange(bh)
+    scores = s_full.reshape(bh, t, bh, t)[diag, :, diag, :]   # [bh, t, t]
+    scores = softcap(scores, cfg.attn_softcap)
+    logits = jnp.where(mask[None], scores, attn_mod.NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return probs * mask[None].astype(probs.dtype)
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def _out_segment(o, wo, cfg: ModelConfig, b: int, dtype):
+    hd = cfg.resolved_head_dim
+    h = cfg.n_heads
+    t = o.shape[0] // (b * h)
+    out = (o.reshape(b, h, t, hd).transpose(0, 2, 1, 3)
+           .reshape(b, t, h * hd).astype(dtype))
+    return jnp.einsum("bte,ed->btd", out, wo.astype(dtype))
+
+
+_JIT_SEGMENTS = {
+    "route": _route_segment,
+    "expert_ffn": _expert_segment,
+    "qkv_rope": _qkv_segment,
+    "probs": _prob_segment,
+    "out_proj": _out_segment,
+}
+
+
+def segment_trace_counts() -> Dict[str, int]:
+    """Traces accumulated per jitted prefill segment — one per distinct
+    bucket shape.  Test hook: same-bucket tenants must not grow these."""
+    return {k: f._cache_size() for k, f in _JIT_SEGMENTS.items()}
+
+
+# ---------------------------------------------------------------------------
 # MoE forward on the plan API
 # ---------------------------------------------------------------------------
 def sparse_moe_forward(ops: SparseOps, p: Dict, x, cfg: ModelConfig
@@ -93,8 +183,8 @@ def sparse_moe_forward(ops: SparseOps, p: Dict, x, cfg: ModelConfig
     e, k = m.n_experts, m.top_k
     xf = x.reshape(n, d)
 
-    r = moe_mod.route_tokens(p["router"], xf, cfg)
-    cap, G, ng = r["cap"], r["G"], r["ng"]
+    cap, G, ng = moe_mod.route_meta(n, cfg)              # static ints
+    r = _route_segment(p["router"], xf, cfg)             # jitted per bucket
     top_e = np.asarray(r["top_e"])                       # [n, k] host sync
     slot = np.asarray(r["slot"])
     keep = np.asarray(r["keep"])
@@ -109,7 +199,7 @@ def sparse_moe_forward(ops: SparseOps, p: Dict, x, cfg: ModelConfig
 
     buf = ops.spmm(disp, xf)                             # [G*e*cap, d]
     xe = buf.reshape(G, e, cap, d).astype(x.dtype)
-    ye = moe_mod.expert_ffn(p, xe, cfg)                  # [G, e, cap, d]
+    ye = _expert_segment(p, xe, cfg)                     # [G, e, cap, d]
 
     # combine operator W = (D * probs)^T: [n, G*e*cap], k nnz per row
     top_p = np.asarray(r["top_p"])
@@ -143,43 +233,24 @@ def sparse_attn_forward(ops: SparseOps, p: Dict, x, cfg: ModelConfig,
     block structure depends only on the padded shape, so plans are shared
     across every request in a bucket.
     """
-    b, t, _ = x.shape
-    hd = cfg.resolved_head_dim
-    h, kh = cfg.n_heads, cfg.n_kv_heads
-    grp = h // kh
-    q, k, v = attn_mod._project_qkv(p, x, cfg)
-    sin, cos = rope(positions, hd, cfg.rope_theta)
-    q = apply_rope(q, sin, cos)
-    k = apply_rope(k, sin, cos)
-
+    b = x.shape[0]
     # stack per-(batch, query-head) panels; kv heads repeat across the group
-    qh = np.asarray(q.transpose(0, 2, 1, 3).reshape(b * h, t, hd),
-                    np.float32) * (hd ** -0.5)
-    k_rep = jnp.repeat(k.transpose(0, 2, 1, 3), grp, axis=1)
-    v_rep = jnp.repeat(v.transpose(0, 2, 1, 3), grp, axis=1)
-    kh_np = np.asarray(k_rep.reshape(b * h, t, hd), np.float32)
+    qh, kh_f, v_f, k, v = _qkv_segment(p, x, positions, cfg)
+    kh_np = np.asarray(kh_f, np.float32)
 
     # scoring: S_bd = Q_bd @ K_bd^T — sparse x sparse, sparse output
-    s_bsr = ops.spgemm_sparse(_block_diag(qh),
+    s_bsr = ops.spgemm_sparse(_block_diag(np.asarray(qh, np.float32)),
                               _block_diag(kh_np.transpose(0, 2, 1)))
     s_full = jnp.asarray(s_bsr.densify())
-    bh = b * h
-    diag = jnp.arange(bh)
-    scores = s_full.reshape(bh, t, bh, t)[diag, :, diag, :]   # [bh, t, t]
-    scores = softcap(scores, cfg.attn_softcap)
 
-    # mask + softmax (identical math to the dense _sdpa reference)
+    # softcap + mask + softmax (identical math to the dense _sdpa reference)
     mask = np.asarray(attn_mod._pair_mask(cfg, kind, positions, positions))
-    logits = jnp.where(jnp.asarray(mask)[None], scores, attn_mod.NEG_INF)
-    probs = jax.nn.softmax(logits, axis=-1)
+    pm = _prob_segment(s_full, jnp.asarray(mask), cfg)
 
     # combine: O = P_bd @ V — the mask prunes whole blocks of P
-    pv = _block_diag(np.asarray(probs * mask[None], np.float32))
-    o = ops.spmm(pv, jnp.asarray(
-        v_rep.reshape(bh * t, hd), jnp.float32))              # [bh*t, hd]
-    out = (jnp.asarray(o).reshape(b, h, t, hd)
-           .transpose(0, 2, 1, 3).reshape(b, t, h * hd).astype(x.dtype))
-    out = jnp.einsum("bte,ed->btd", out, p["wo"].astype(x.dtype))
+    pv = _block_diag(np.asarray(pm, np.float32))
+    o = ops.spmm(pv, v_f)                                     # [bh*t, hd]
+    out = _out_segment(jnp.asarray(o), p["wo"], cfg, b, x.dtype)
     if cache is None:
         return out, None
     return out, attn_mod._write_prefill(cache, k, v, positions, cfg, kind)

@@ -600,6 +600,27 @@ def test_check_api_flags_deprecated_import(tmp_path):
     assert len(found) == 1 and "bad.py" in found[0]
 
 
+def test_check_api_flags_xla_flag_writes(tmp_path):
+    """XLA_FLAGS has exactly one allowed write site
+    (src/repro/runtime/platform.py); direct assignment or setdefault
+    anywhere else is flagged."""
+    (tmp_path / "examples").mkdir()
+    (tmp_path / "src" / "repro" / "runtime").mkdir(parents=True)
+    (tmp_path / "examples" / "bad.py").write_text(
+        "import os\nos.environ['XLA_FLAGS'] = '--foo'\n")
+    (tmp_path / "examples" / "bad2.py").write_text(
+        "import os\nos.environ.setdefault('XLA_FLAGS', '--foo')\n")
+    (tmp_path / "examples" / "ok.py").write_text(
+        "from repro.runtime.platform import set_host_device_count\n"
+        "set_host_device_count(4)\n")
+    (tmp_path / "src" / "repro" / "runtime" / "platform.py").write_text(
+        "import os\nos.environ['XLA_FLAGS'] = '--allowed-here'\n")
+    found = _load_check_api().violations(str(tmp_path))
+    assert len(found) == 2
+    assert any("bad.py" in f for f in found)
+    assert any("bad2.py" in f for f in found)
+
+
 def test_check_api_flags_kernel_bypass(tmp_path):
     """examples/benchmarks must not bypass plan_matmul by importing the
     Pallas kernel module directly."""

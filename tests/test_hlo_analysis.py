@@ -61,3 +61,78 @@ def test_no_collectives_on_single_device():
     x = jnp.zeros((8, 8))
     stats = analyze_hlo(_compile_text(lambda x: x * 2, x))
     assert stats.total_collective_bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# Overlap classification (analyze_overlap)
+# ---------------------------------------------------------------------------
+from repro.launch.hlo_analysis import analyze_overlap  # noqa: E402
+
+_OVERLAPPED_HLO = """
+HloModule overlap_fixture
+
+ENTRY %main (p0: f32[8,8], p1: f32[8,8]) -> f32[8,8] {
+  %p0 = f32[8,8] parameter(0)
+  %p1 = f32[8,8] parameter(1)
+  %cp-start = f32[8,8] collective-permute-start(%p0), source_target_pairs={{0,1},{1,0}}
+  %dot.0 = f32[8,8] dot(%p1, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %cp-done = f32[8,8] collective-permute-done(%cp-start)
+  ROOT %add = f32[8,8] add(%cp-done, %dot.0)
+}
+"""
+
+_SERIALIZED_HLO = """
+HloModule serial_fixture
+
+ENTRY %main (p0: f32[8,8], p1: f32[8,8]) -> f32[8,8] {
+  %p0 = f32[8,8] parameter(0)
+  %p1 = f32[8,8] parameter(1)
+  %cp-start = f32[8,8] collective-permute-start(%p0), source_target_pairs={{0,1},{1,0}}
+  %cp-done = f32[8,8] collective-permute-done(%cp-start)
+  %dot.0 = f32[8,8] dot(%p1, %cp-done), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %out = f32[8,8] add(%dot.0, %dot.0)
+}
+"""
+
+_SYNC_HLO = """
+HloModule sync_fixture
+
+ENTRY %main (p0: f32[8,8]) -> f32[8,8] {
+  %p0 = f32[8,8] parameter(0)
+  %cp = f32[8,8] collective-permute(%p0), source_target_pairs={{0,1},{1,0}}
+  ROOT %dot.0 = f32[8,8] dot(%cp, %cp), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_overlap_eligible_collective_detected():
+    rep = analyze_overlap(_OVERLAPPED_HLO)
+    assert rep.overlapped == 1
+    assert rep.serialized == 0
+    assert rep.sync == 0
+    kind, name, n_compute = rep.pairs[0]
+    assert kind == "collective-permute"
+    assert n_compute == 1
+    assert rep.eligible_fraction == 1.0
+
+
+def test_serialized_start_done_pair_detected():
+    rep = analyze_overlap(_SERIALIZED_HLO)
+    assert rep.overlapped == 0
+    assert rep.serialized == 1
+    assert rep.eligible_fraction == 0.0
+
+
+def test_sync_collective_detected():
+    rep = analyze_overlap(_SYNC_HLO)
+    assert rep.sync == 1
+    assert rep.async_total == 0
+
+
+def test_overlap_report_on_real_module():
+    """analyze_overlap must agree with analyze_hlo's collective census on a
+    real compiled module (1 CPU device: no collectives at all)."""
+    x = jnp.zeros((8, 8))
+    txt = _compile_text(lambda x: (x @ x) * 2, x)
+    rep = analyze_overlap(txt)
+    assert rep.overlapped == rep.serialized == rep.sync == 0

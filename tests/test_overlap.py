@@ -1,0 +1,140 @@
+"""Overlap A-B correctness: double-buffered schedules match bulk ones.
+
+The split-step bodies (``overlap="on"``: step t+1's collective issued
+before step t's accumulate, two-slot carry per stream) must be a pure
+re-ordering — bit-for-bit-close to the bulk-synchronous bodies
+(``overlap="off"``) across the full dispatch matrix: every registered
+schedule x spmm/spgemm x padded/packed wire x dense/sparse output.
+
+Also pins the *structure* of the overlap bodies via jaxpr inspection:
+the scanned steps stay free of sort/scatter bloat (same contract
+test_api.py enforces for the bulk bodies), and the double-buffered scan
+actually carries the extra buffer slots (wider carry than bulk) — the
+dependence slack the latency-hiding scheduler needs.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import api
+from repro.core.api import REGISTRY, DistBSR, DistDense, plan_matmul
+from repro.core.bsr import random_sparse
+from repro.core.dist import make_grid_mesh
+
+G = 1  # the main pytest process owns a single CPU device
+
+
+@pytest.fixture(scope="module")
+def operands():
+    a_d = random_sparse(16, 16, 0.3, seed=0)
+    b = np.random.default_rng(3).standard_normal((16, 8)).astype(np.float32)
+    b_sp = random_sparse(16, 16, 0.25, seed=1)
+    a_h = DistBSR.from_dense(a_d, g=G, block_size=4)
+    b_h = DistDense.for_rhs(jnp.asarray(b), a_h)
+    b_sp_h = DistBSR.from_dense(b_sp, g=G, block_size=4)
+    mesh = make_grid_mesh(G)
+    return a_d, b, b_sp, a_h, b_h, b_sp_h, mesh
+
+
+def _as_dense(c):
+    return np.asarray(c.densify() if hasattr(c, "densify") else c)
+
+
+def _cells(alg: str, kind: str):
+    """The (wire, output) cells this (algorithm, kind) pair supports."""
+    cells = [("padded", "dense"), ("packed", "dense")]
+    if kind == "spgemm" and REGISTRY.get(alg).sparse_body is not None:
+        cells += [("padded", "sparse"), ("packed", "sparse")]
+    return cells
+
+
+@pytest.mark.parametrize("kind", ["spmm", "spgemm"])
+@pytest.mark.parametrize("alg", api.algorithms())
+def test_overlap_on_matches_off_across_dispatch_matrix(operands, alg, kind):
+    a_d, b, b_sp, a_h, b_h, b_sp_h, mesh = operands
+    rhs_h = b_h if kind == "spmm" else b_sp_h
+    ref = a_d @ (b if kind == "spmm" else b_sp)
+    for wire, output in _cells(alg, kind):
+        plans = {
+            ov: plan_matmul(a_h, rhs_h, mesh=mesh, algorithm=alg,
+                            impl="ref", wire=wire, output=output,
+                            overlap=ov, cache=False)
+            for ov in ("on", "off")}
+        got = {ov: _as_dense(p(a_h, rhs_h)) for ov, p in plans.items()}
+        np.testing.assert_allclose(
+            got["on"], got["off"], atol=1e-4,
+            err_msg=f"{alg}/{kind}/{wire}/{output}: overlap=on diverges "
+                    "from overlap=off")
+        np.testing.assert_allclose(
+            got["on"], ref, atol=1e-4,
+            err_msg=f"{alg}/{kind}/{wire}/{output}: overlap=on wrong result")
+
+
+# ---------------------------------------------------------------------------
+# jaxpr structure of the double-buffered bodies
+# ---------------------------------------------------------------------------
+def _subjaxprs(v):
+    from jax import core as jcore
+    if isinstance(v, jcore.ClosedJaxpr):
+        yield v.jaxpr
+    elif isinstance(v, jcore.Jaxpr):
+        yield v
+    elif isinstance(v, (list, tuple)):
+        for x in v:
+            yield from _subjaxprs(x)
+
+
+def _iter_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from _iter_eqns(sub)
+
+
+def _scan_eqns(plan, a_h, rhs_h):
+    pa = a_h.placed(plan.algorithm.a_placement)
+    pb = rhs_h.placed(plan.algorithm.b_placement)
+    jaxpr = jax.make_jaxpr(lambda a, b: plan._exec(a, b))(pa, pb).jaxpr
+    return [e for e in _iter_eqns(jaxpr) if e.primitive.name == "scan"]
+
+
+@pytest.mark.parametrize("kind", ["spmm", "spgemm"])
+@pytest.mark.parametrize("alg", ["ring_c", "ring_a", "ring_c_bidir"])
+def test_overlap_scan_step_free_of_sort_and_scatter(operands, alg, kind):
+    """Two-slot buffering must not smuggle sort/scatter into the hot loop."""
+    _a_d, _b, _b_sp, a_h, b_h, b_sp_h, mesh = operands
+    rhs_h = b_h if kind == "spmm" else b_sp_h
+    # impl="interpret": the ref-impl local kernel accumulates via
+    # scatter-add, which would mask body-structure regressions (same
+    # choice as test_api.py's bulk-body hot-loop test)
+    plan = plan_matmul(a_h, rhs_h, mesh=mesh, algorithm=alg,
+                       impl="interpret", overlap="on", cache=False)
+    scans = _scan_eqns(plan, a_h, rhs_h)
+    assert scans, "expected a scanned ring loop in the overlap plan"
+    prims = {sub.primitive.name
+             for eqn in scans for sub in _iter_eqns(eqn.params["jaxpr"].jaxpr)}
+    offenders = {p for p in prims if "sort" in p or "scatter" in p}
+    assert not offenders, (
+        f"hot-loop bloat in overlap {alg}/{kind} scan step: "
+        f"{sorted(offenders)}")
+
+
+@pytest.mark.parametrize("alg", ["ring_c", "ring_a", "ring_c_bidir"])
+def test_overlap_scan_carries_extra_buffer_slots(operands, alg):
+    """The double-buffered scan carries strictly more state than the bulk
+    scan — the second buffer slot that decouples step t+1's transfer from
+    step t's accumulate."""
+    _a_d, _b, _b_sp, a_h, b_h, _b_sp_h, mesh = operands
+    carries = {}
+    for ov in ("on", "off"):
+        plan = plan_matmul(a_h, b_h, mesh=mesh, algorithm=alg, impl="ref",
+                           overlap=ov, cache=False)
+        scans = _scan_eqns(plan, a_h, b_h)
+        assert scans, f"expected a scanned ring loop (overlap={ov})"
+        carries[ov] = max(e.params["num_carry"] for e in scans)
+    assert carries["on"] > carries["off"], (
+        f"{alg}: overlap=on scan carry ({carries['on']}) not wider than "
+        f"bulk ({carries['off']}) — double buffer missing from the carry")

@@ -230,6 +230,29 @@ def test_plan_cache_eviction_rebuilds_under_churn():
         api.clear_plan_cache()
 
 
+def test_sparse_prefill_trace_count_stable_across_tenants():
+    """The jitted sparse-prefill segments (router / expert FFN / QKV+RoPE /
+    masked softmax / output projection) trace once per bucket: a second
+    tenant with a different prompt of bucketed-equal shape adds zero new
+    traces to any segment."""
+    from repro.serving import segment_trace_counts
+    cfg, params = _params("olmoe-1b-7b")
+    a, b = _prompts(cfg, (12, 9))                 # both pad to bucket 16
+    api.clear_plan_cache()
+    eng = ServeEngine(cfg, params=params, max_batch=2, max_len=MAX_LEN,
+                      sparse=True)
+    eng.submit(a, max_new_tokens=3)
+    eng.run()                                     # tenant A warms bucket 16
+    warm = segment_trace_counts()
+    assert warm["route"] > 0 and warm["expert_ffn"] > 0
+    assert warm["qkv_rope"] > 0 and warm["probs"] > 0 and warm["out_proj"] > 0
+    eng.submit(b, max_new_tokens=3)
+    results = eng.run()
+    assert segment_trace_counts() == warm, \
+        "same-bucket tenant must not retrace any prefill segment"
+    np.testing.assert_array_equal(results[1], _reference(params, cfg, b, 3))
+
+
 # ---------------------------------------------------------------------------
 # check_api: repro.serving.engine is internal to serving/
 # ---------------------------------------------------------------------------

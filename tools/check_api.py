@@ -19,6 +19,15 @@ Three classes of violation:
   pair-list -> executable coupling.  Importing them anywhere outside
   ``src/repro/core`` bypasses the structure-keyed plan cache.
 
+One more hygiene rule rides along: ``XLA_FLAGS`` is read by XLA exactly
+once, at first backend init, so scattered ``os.environ`` writes are
+silently dead or clobber each other.  ``repro/runtime/platform.py`` is
+the repo's single allowed write site (merge semantics + init guard);
+every other file must go through its ``set_platform`` /
+``set_host_device_count`` / ``subprocess_env`` helpers, and this script
+flags any direct ``...["XLA_FLAGS"] = ...`` / ``.setdefault("XLA_FLAGS",
+...)`` elsewhere.
+
 This script AST-scans each module's watched directories for imports and
 exits non-zero on any hit outside the allowed prefixes.  It is also run by
 ``tests/test_api.py`` so the guard rides tier-1.
@@ -79,6 +88,38 @@ FORBIDDEN_MODULES = {
 }
 
 
+# XLA_FLAGS write ban: scanned dirs and the single allowed writer.
+XLA_FLAG_DIRS = ("src/repro", "examples", "benchmarks", "tools", "tests")
+XLA_FLAG_ALLOW = ("src/repro/runtime/platform.py",)
+
+
+def _is_xla_key(node) -> bool:
+    return isinstance(node, ast.Constant) and node.value == "XLA_FLAGS"
+
+
+def _xla_flag_hits(tree: ast.AST) -> List:
+    """Direct XLA_FLAGS writes: ``env["XLA_FLAGS"] = ...`` (any mapping)
+    and ``.setdefault("XLA_FLAGS", ...)``."""
+    hits = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                if isinstance(t, ast.Subscript) and _is_xla_key(t.slice):
+                    hits.append(
+                        (node.lineno, 'sets ["XLA_FLAGS"] directly '
+                         "(use repro.runtime.platform)"))
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if (isinstance(f, ast.Attribute) and f.attr == "setdefault"
+                    and node.args and _is_xla_key(node.args[0])):
+                hits.append(
+                    (node.lineno, 'setdefault("XLA_FLAGS", ...) '
+                     "(use repro.runtime.platform)"))
+    return hits
+
+
 def _module_hits(tree: ast.AST, mod: str, parent: str, leaf: str) -> List:
     hits = []
     for node in ast.walk(tree):
@@ -117,6 +158,17 @@ def violations(root: Optional[str] = None) -> List[str]:
                 for lineno, desc in _module_hits(tree, mod, cfg["parent"],
                                                  cfg["leaf"]):
                     out.append(f"{rel}:{lineno}: {desc}")
+    for sub in XLA_FLAG_DIRS:
+        base = root_path / sub
+        if not base.is_dir():
+            continue
+        for path in sorted(base.glob("**/*.py")):
+            rel = path.relative_to(root_path)
+            if rel.as_posix() in XLA_FLAG_ALLOW:
+                continue
+            tree = ast.parse(path.read_text(), filename=str(path))
+            for lineno, desc in _xla_flag_hits(tree):
+                out.append(f"{rel}:{lineno}: {desc}")
     return sorted(set(out))
 
 

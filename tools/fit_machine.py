@@ -15,6 +15,16 @@ the records recovers ``1/net_bw`` and ``hop_latency`` — the ROADMAP's
 "auto-scheduling calibration": fit the machine the fleet actually is,
 instead of trusting nominal v5e constants.
 
+The overlap A/B section (``overlap_rmat_4x4``) additionally calibrates
+``Machine.overlap_eff`` — the fraction of compute time the double-buffered
+bodies actually hide communication under.  Each schedule's record pairs
+the split-step (on) and bulk (off) per-multiply times with the host
+roofline's compute floor, so the realized hiding is
+``clip((t_off - t_on) / t_comp, 0, 1)`` per schedule and the fitted value
+is the median over the non-wire-amortized schedules.  The calibrated
+preset carries it into ``auto_select``'s exposed-comm term
+(``max(0, t_comm - overlap_eff * t_comp)``).
+
 Usage:
     python tools/fit_machine.py [BENCH_kernels.json]
     python tools/fit_machine.py --write MACHINE_calibrated.json
@@ -227,6 +237,41 @@ def collect_records(payload: Dict) -> List[Dict]:
         + _wire_records(payload)
 
 
+def fit_overlap_eff(payload: Dict) -> Tuple[Optional[float], Dict]:
+    """Fit ``Machine.overlap_eff`` from the overlap A/B section.
+
+    ``overlap_rmat_4x4`` records min-of-repeats per-multiply times with
+    the double-buffered (on) and bulk (off) bodies plus the harness
+    roofline's compute floor ``t_comp``; the hiding a schedule realized
+    is ``clip((t_off - t_on) / t_comp, 0, 1)``.  Wire-amortized
+    schedules are skipped (their bodies have no overlap variant), as are
+    segment-split ones (steal3d: its A/B delta measures the opt-in
+    second dispatch, not scan-step hiding).
+    Returns ``(median_eff | None, diagnostics)``.
+    """
+    from repro.core import api
+
+    algos = payload.get("overlap_rmat_4x4", {}).get("algorithms", {})
+    effs: Dict[str, float] = {}
+    for name, rec in algos.items():
+        if name not in api.REGISTRY:
+            continue
+        alg = api.REGISTRY.get(name)
+        if alg.wire_amortized or alg.static_planner is not None:
+            continue
+        t_on = rec.get("per_multiply_s_on")
+        t_off = rec.get("per_multiply_s_off")
+        t_comp = rec.get("t_comp_host_s")
+        if not t_comp or t_on is None or t_off is None:
+            continue
+        effs[name] = min(max((t_off - t_on) / t_comp, 0.0), 1.0)
+    if not effs:
+        return None, {"overlap_records": 0}
+    eff = float(np.median(list(effs.values())))
+    return eff, {"overlap_records": len(effs), "overlap_eff": eff,
+                 "overlap_eff_per_alg": effs}
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("bench_json", nargs="?",
@@ -249,11 +294,19 @@ def main(argv: Optional[List[str]] = None) -> int:
         print(f"no predicted-vs-measured records in {args.bench_json}")
         return 1
     fitted, diag = fit(records, base)
+    eff, ov_diag = fit_overlap_eff(payload)
+    if eff is not None:
+        fitted = dataclasses.replace(fitted, overlap_eff=eff)
+    diag.update(ov_diag)
     print(f"fit over {diag['n_used']}/{diag['n_records']} records "
           f"(rms residual {diag['rms_residual_s']:.2e} s):")
     print(f"  net_bw      {base.net_bw:.3e} -> {fitted.net_bw:.3e} B/s")
     print(f"  hop_latency {base.hop_latency:.3e} -> "
           f"{fitted.hop_latency:.3e} s")
+    if eff is not None:
+        print(f"  overlap_eff {base.overlap_eff:.3f} -> "
+              f"{fitted.overlap_eff:.3f} "
+              f"(median over {ov_diag['overlap_records']} schedules)")
     from repro.core.api import _predicted_time
     for rec in records:
         t_fit = _predicted_time(rec["cm"], rec["alg"], fitted)
