@@ -26,11 +26,10 @@ import numpy as np
 
 
 def _time(fn, repeats: int = 3) -> float:
-    fn()                       # warm (compile / cache)
-    t0 = time.perf_counter()
-    for _ in range(repeats):
-        fn()
-    return (time.perf_counter() - t0) / repeats
+    # obs.timed blocks on fn's result before reading the clock (async
+    # dispatch can't smear) — the check_api-sanctioned timing helper.
+    from repro.obs import timed
+    return timed(fn, repeats=repeats, warmup=1)
 
 
 def _plan_reuse_rows(calls: int = 10):
@@ -132,6 +131,77 @@ def _algorithm_rows(smoke: bool = False) -> Dict:
     choice, scores = api.auto_select(a_h, b_h, machine=TPU_V5E)
     return {"algorithms": out,
             "auto_selection": {"choice": choice, "scores": scores}}
+
+
+def obs_drift_section(smoke: bool = False,
+                      trace_path: str = None) -> Dict:
+    """Traced bench pass: per-algorithm predicted-vs-measured drift.
+
+    Runs the g=1 geometry twice around a traced window: (A) per-multiply
+    with tracing disabled, (B) traced calls — each records a span and a
+    drift pair through the normal ``MatmulPlan.__call__`` path — then
+    (C) per-multiply with tracing disabled again.  The section reports
+    the per-algorithm drift ratios (``obs.drift_report()``), the trace's
+    schema validity, and asserts the disabled path stayed within noise
+    of the never-traced one (A vs C) — tracing must cost nothing when
+    off.  ``trace_path`` additionally writes the Chrome trace JSON.
+    """
+    import jax.numpy as jnp
+
+    from repro import obs
+    from repro.core import api
+    from repro.core.api import DistBSR, DistDense
+    from repro.core.bsr import random_sparse
+
+    m = 128 if smoke else 512
+    a_d = random_sparse(m, m, 0.08, seed=5)
+    b = np.random.default_rng(5).standard_normal((m, 64)).astype(np.float32)
+    a_h = DistBSR.from_dense(a_d, g=1, block_size=32)
+    b_h = DistDense.for_rhs(jnp.asarray(b), a_h)
+    algs = ("ring_c", "summa_bcast") if smoke else tuple(api.algorithms())
+    reps = 3 if smoke else 5
+    plans = {}
+    for alg in algs:
+        plans[alg] = api.plan_matmul(a_h, b_h, algorithm=alg, impl="ref",
+                                     cache=False)
+        plans[alg](a_h, b_h).block_until_ready()   # compile before timing
+    before = {alg: _time(lambda p=p: p(a_h, b_h).block_until_ready(),
+                         repeats=reps) for alg, p in plans.items()}
+    obs.enable(clear=True)
+    obs.reset_drift()
+    with obs.span("bench.obs_drift", smoke=smoke):
+        # one plan build under tracing so the exported trace carries
+        # plan-build spans next to the per-multiply ones
+        api.plan_matmul(a_h, b_h, algorithm=algs[0], impl="ref",
+                        cache=False)
+        for p in plans.values():
+            for _ in range(reps):
+                p(a_h, b_h)
+    obs.disable()
+    report = obs.drift_report()
+    trace = obs.export_trace(trace_path)
+    problems = obs.validate_trace(trace)
+    after = {alg: _time(lambda p=p: p(a_h, b_h).block_until_ready(),
+                        repeats=reps) for alg, p in plans.items()}
+    # Disabled-mode overhead gate: total per-multiply time after the traced
+    # window (tracing off again) must sit within noise of the never-traced
+    # baseline.  Generous slack — fake-device CPU timings jitter — but a
+    # forgotten always-on clock/block would blow well past it.
+    t_before = sum(before.values())
+    t_after = sum(after.values())
+    overhead_ok = t_after <= t_before * 1.5 + 5e-3
+    drift = {alg: report[key] for alg in algs
+             if (key := f"{alg}/{plans[alg].wire}/auto") in report}
+    return {
+        "drift": drift,
+        "trace_events": len(trace["traceEvents"]),
+        "trace_valid": not problems,
+        "trace_problems": problems[:10],
+        "span_names": sorted({e["name"] for e in trace["traceEvents"]}),
+        "per_multiply_untraced_s": before,
+        "per_multiply_after_disable_s": after,
+        "disabled_overhead_ok": bool(overhead_ok),
+    }
 
 
 def run(repeats: int = 3, smoke: bool = False):

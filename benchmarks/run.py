@@ -133,6 +133,13 @@ def _write_json(smoke: bool) -> None:
             payload[section] = {"error": f"unparseable output: {e}"}
             raw = ""   # degrade like the empty-output case (exit 1 below)
         all_ok = all_ok and bool(raw)
+    # traced pass: per-algorithm predicted-vs-measured drift ratios from
+    # the live obs registry + Chrome-trace schema check (in-process, g=1)
+    try:
+        payload["obs_drift"] = kernels_bench.obs_drift_section(smoke=smoke)
+    except Exception as e:                     # noqa: BLE001 (diagnostic)
+        payload["obs_drift"] = {"error": f"{type(e).__name__}: {e}"}
+        all_ok = False
     # every baseline refresh re-fits the cost model's network constants
     # from its own records and records the drift
     payload["machine_fit"] = _machine_fit_section(payload)
@@ -194,6 +201,25 @@ def main() -> None:
             name = module.rsplit(".", 1)[1]
             print(f"smoke,{name},{'ok' if raw else 'FAILED'}")
             ok = ok and bool(raw)
+        # traced obs pass: exports a Chrome trace, schema-validates it,
+        # reports per-algorithm drift ratios, and asserts tracing
+        # disabled leaves per-multiply timings within noise of untraced
+        import tempfile
+        from benchmarks import kernels_bench as kb
+        with tempfile.NamedTemporaryFile(suffix=".json",
+                                         delete=False) as tf:
+            trace_path = tf.name
+        try:
+            sec = kb.obs_drift_section(smoke=True, trace_path=trace_path)
+            obs_ok = sec["trace_valid"] and sec["disabled_overhead_ok"] \
+                and bool(sec["drift"])
+            ratios = ";".join(f"{a}={d['ratio']:.1f}"
+                              for a, d in sorted(sec["drift"].items()))
+            print(f"smoke,obs_trace,{'ok' if obs_ok else 'FAILED'};"
+                  f"events={sec['trace_events']};{ratios}")
+        finally:
+            os.unlink(trace_path)
+        ok = ok and obs_ok
         # exercise the machine-fit wiring against the committed baseline
         # (a full refresh re-fits from its own fresh records)
         baseline = os.path.join(REPO_ROOT, "BENCH_kernels.json")

@@ -75,6 +75,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -83,6 +84,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from .. import obs as _obs
 from ..compat import pvary, shard_map
 from ..kernels import ops as kops
 from ..kernels import ref as kref
@@ -245,6 +247,13 @@ class _LRUCache:
     def clear(self) -> None:
         self._d.clear()
 
+    def reset_counters(self) -> None:
+        """Zero hit/miss/eviction counters (entries stay).  Lets a serving
+        process window its plan-reuse rate without dropping hot plans."""
+        self.evictions = 0
+        self.hits = 0
+        self.misses = 0
+
 
 # Cache caps: small multiples of what a serving process legitimately keeps
 # hot (a handful of operand structures x a few schedules/outputs each).
@@ -280,15 +289,42 @@ def plan_cache_size() -> int:
     return len(_PLAN_CACHE)
 
 
-def cache_stats() -> Dict[str, Dict[str, int]]:
-    """Sizes, caps, hit/miss and eviction counts of the plan-layer caches."""
-    return {name: {"size": len(c), "maxsize": c.maxsize,
-                   "evictions": c.evictions,
-                   "hits": c.hits, "misses": c.misses}
-            for name, c in (("plans", _PLAN_CACHE),
-                            ("symbolic", _SYMBOLIC_CACHE),
-                            ("density", _DENSITY_CACHE),
-                            ("steal", _STEAL_CACHE))}
+def cache_stats(reset: bool = False) -> Dict[str, Dict[str, int]]:
+    """Sizes, caps, hit/miss and eviction counts of the plan-layer caches.
+
+    ``reset=True`` zeroes the hit/miss/eviction counters *after* reading
+    them (cache entries stay), so long-running serving processes can window
+    plan-reuse rates without a process restart.  The returned dict always
+    holds the pre-reset values.
+    """
+    caches = (("plans", _PLAN_CACHE), ("symbolic", _SYMBOLIC_CACHE),
+              ("density", _DENSITY_CACHE), ("steal", _STEAL_CACHE))
+    out = {name: {"size": len(c), "maxsize": c.maxsize,
+                  "evictions": c.evictions,
+                  "hits": c.hits, "misses": c.misses}
+           for name, c in caches}
+    if reset:
+        for _, c in caches:
+            c.reset_counters()
+    return out
+
+
+# The plan caches surface in obs snapshots as a pull-time callback: the
+# registry reads cache_stats() lazily, so there is no per-hit instrument
+# update and no duplicate counter state.
+_obs.registry().register_callback("plan_caches", cache_stats)
+
+# Machine preset scoring the *predicted* side of drift records (measured
+# side is always the blocking wall clock).  Default matches the bench
+# tables' predicted_s_v5e column; harnesses on other hardware override.
+_DRIFT_MACHINE: Optional["_roofline.Machine"] = None
+
+
+def set_drift_machine(machine) -> None:
+    """Set the Machine used for the predicted side of obs drift records
+    (``None`` restores the TPU_V5E default)."""
+    global _DRIFT_MACHINE
+    _DRIFT_MACHINE = machine
 
 
 def _evict_plans_for_algorithm(name: str) -> None:
@@ -1127,8 +1163,9 @@ def _steal_plan_for(a_h: "DistMatrix", b_h: "DistMatrix", geom: _Geom,
     key = (a_h.abstract_key(), b_h.abstract_key(), skey, wire, geom.overlap)
     sp = _STEAL_CACHE.get(key)
     if sp is None:
-        sp = _steal3d.build_steal_plan(a_h, b_h, geom, wire=wire,
-                                       overlap=geom.overlap)
+        with _obs.span("plan_build.steal", wire=wire):
+            sp = _steal3d.build_steal_plan(a_h, b_h, geom, wire=wire,
+                                           overlap=geom.overlap)
         _STEAL_CACHE[key] = sp
     return sp
 
@@ -2036,6 +2073,17 @@ class MatmulPlan:
             in_specs = (blocks_spec, blocks_spec, pair_spec)
             out_specs = P(geom.axr, geom.axc, None, None, None)
 
+        # named_scope is trace-time-only HLO metadata: XLA profiles (and
+        # hlo_analysis.scope_op_counts) attribute device time to this
+        # plan's schedule by name, at zero runtime cost and zero added
+        # retraces (tests assert plan.traces stays 1).
+        inner_fn = fn
+        scope_label = f"plan.{algorithm.name}.{wire}"
+
+        def fn(*operands):
+            with jax.named_scope(scope_label):
+                return inner_fn(*operands)
+
         self._exec = jax.jit(shard_map(
             fn, mesh=mesh,
             in_specs=in_specs,
@@ -2059,6 +2107,32 @@ class MatmulPlan:
         return "dense" if self.symbolic is None else "sparse"
 
     def __call__(self, a, b):
+        # Tracing off (the default): straight to the executable — no clock
+        # reads, no blocking, async dispatch preserved.
+        if not _obs.enabled():
+            return self._execute(a, b)
+        t0 = time.perf_counter()
+        sp = _obs.span(f"multiply.{self.algorithm.name}", kind=self.kind,
+                       wire=self.wire, output=self.output,
+                       overlap=self.overlap)
+        with sp:
+            out = self._execute(a, b)
+            # Per-multiply seconds follow the sync_elapsed discipline:
+            # block on the result tree, then read the clock.
+            tree = out.tiled.blocks if isinstance(out, DistBSR) else out
+            measured = _obs.sync_elapsed(t0, tree)
+            sp.note(measured_s=measured)
+        machine = _DRIFT_MACHINE or _roofline.TPU_V5E
+        cm = self.cost_model()
+        _obs.record_drift(
+            self.algorithm.name, self.wire, self.overlap,
+            predicted_s=_predicted_time(cm, self.algorithm, machine,
+                                        self.overlap),
+            measured_s=measured, cm=cm, kind=self.kind,
+            machine=machine.name)
+        return out
+
+    def _execute(self, a, b):
         a_h, b_h = _coerce_pair(a, b, g=self.geom.g,
                                 allow_pad=self._allow_pad)
         if (a_h.abstract_key(), b_h.abstract_key()) != (self._a_key,
@@ -2347,7 +2421,8 @@ def _symbolic_for(a_h: DistBSR, b_h: DistBSR) -> "SymbolicProduct":
     key = (a_h.structure_key(), b_h.structure_key())
     sym = _SYMBOLIC_CACHE.get(key)
     if sym is None:
-        sym = _symbolic.symbolic_spgemm(a_h.tiled, b_h.tiled)
+        with _obs.span("plan_build.symbolic"):
+            sym = _symbolic.symbolic_spgemm(a_h.tiled, b_h.tiled)
         _SYMBOLIC_CACHE[key] = sym
     return sym
 
@@ -2551,7 +2626,7 @@ def auto_select(a, b, *, machine: Optional["_roofline.Machine"] = None,
 SPARSE_OUTPUT_DENSITY_THRESHOLD = 0.25
 
 
-def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
+def _plan_matmul_impl(a, b, *, algorithm: str = "ring_c", mesh=None,
                 impl: Optional[str] = None, g: Optional[int] = None,
                 axis_row: str = "row", axis_col: str = "col",
                 allow_pad: bool = False, cache: bool = True,
@@ -2636,10 +2711,11 @@ def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
             "wire='padded'")
     sym = _symbolic_for(a_h, b_h) if output == "sparse" else None
     if algorithm == "auto":
-        algorithm, auto_scores = auto_select(
-            a_h, b_h, machine=machine, axis_row=axis_row, axis_col=axis_col,
-            allow_pad=allow_pad, output=output, wire=wire, overlap=overlap,
-            _symbolic=sym)
+        with _obs.span("plan_build.auto_select"):
+            algorithm, auto_scores = auto_select(
+                a_h, b_h, machine=machine, axis_row=axis_row,
+                axis_col=axis_col, allow_pad=allow_pad, output=output,
+                wire=wire, overlap=overlap, _symbolic=sym)
     alg = REGISTRY.get(algorithm)
     if sym is not None and alg.sparse_body is None:
         raise ValueError(
@@ -2702,32 +2778,51 @@ def plan_matmul(a, b, *, algorithm: str = "ring_c", mesh=None,
         if alg.static_planner is not None else None
     wire_aux = wire_caps = wire_fps = None
     if wire == "packed" and steal is None:
-        a_po = a_h.packed_operand() if "a" in packs else None
-        b_po = b_h.packed_operand() if "b" in packs else None
-        wire_caps = {t: po.wire_capacity for t, po in
-                     (("a", a_po), ("b", b_po)) if po is not None}
-        wire_fps = {t: po.fingerprint for t, po in
-                    (("a", a_po), ("b", b_po)) if po is not None}
-        if sym is not None:
-            # compose the stored->packed slot maps into the pair lists
-            wire_aux = {
-                "pa": _wire.remap_pairs_packed(sym.pair_a, a_po, "a"),
-                "pb": _wire.remap_pairs_packed(sym.pair_b, b_po, "b"),
-            }
-        else:
-            wire_aux = alg.wire_planner(a_po, b_po, geom)
+        with _obs.span("plan_build.wire", packs="".join(packs)):
+            a_po = a_h.packed_operand() if "a" in packs else None
+            b_po = b_h.packed_operand() if "b" in packs else None
+            wire_caps = {t: po.wire_capacity for t, po in
+                         (("a", a_po), ("b", b_po)) if po is not None}
+            wire_fps = {t: po.fingerprint for t, po in
+                        (("a", a_po), ("b", b_po)) if po is not None}
+            if sym is not None:
+                # compose the stored->packed slot maps into the pair lists
+                wire_aux = {
+                    "pa": _wire.remap_pairs_packed(sym.pair_a, a_po, "a"),
+                    "pb": _wire.remap_pairs_packed(sym.pair_b, b_po, "b"),
+                }
+            else:
+                wire_aux = alg.wire_planner(a_po, b_po, geom)
     elif steal is not None and steal.wire == "packed":
         wire_caps = {"a": steal.a_wire_capacity}
-    plan = MatmulPlan(alg, geom,
-                      mesh, a_h.abstract_key(), b_h.abstract_key(),
-                      allow_pad=allow_pad, requested=requested,
-                      auto_scores=auto_scores, symbolic=sym, steal=steal,
-                      wire=wire, packs=packs, wire_aux=wire_aux,
-                      wire_caps=wire_caps, wire_fps=wire_fps,
-                      overlap=overlap)
+    with _obs.span("plan_build.executable", algorithm=alg.name):
+        plan = MatmulPlan(alg, geom,
+                          mesh, a_h.abstract_key(), b_h.abstract_key(),
+                          allow_pad=allow_pad, requested=requested,
+                          auto_scores=auto_scores, symbolic=sym,
+                          steal=steal, wire=wire, packs=packs,
+                          wire_aux=wire_aux, wire_caps=wire_caps,
+                          wire_fps=wire_fps, overlap=overlap)
     if cache:
         _PLAN_CACHE[key] = plan
     return plan
+
+
+def plan_matmul(a, b, **kw) -> MatmulPlan:
+    sp = _obs.span("plan_build",
+                   algorithm=str(kw.get("algorithm", "ring_c")),
+                   output=str(kw.get("output", "dense")),
+                   wire=str(kw.get("wire", "auto")),
+                   overlap=str(kw.get("overlap", "auto")))
+    hits0 = _PLAN_CACHE.hits
+    with sp:
+        plan = _plan_matmul_impl(a, b, **kw)
+        sp.note(algorithm=plan.algorithm.name, wire=plan.wire,
+                output=plan.output, cached=_PLAN_CACHE.hits > hits0)
+    return plan
+
+
+plan_matmul.__doc__ = _plan_matmul_impl.__doc__
 
 
 def matmul(a, b, *, algorithm: str = "ring_c", mesh=None,

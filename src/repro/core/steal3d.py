@@ -39,6 +39,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from .. import obs as _obs
 from . import roofline as _roofline
 from . import wire as _wire
 from .grid import bucket_capacity
@@ -490,6 +491,14 @@ def build_steal_plan(a_h, b_h, geom, *, locality: str = "locality",
         "owner_makespan": asg.owner_makespan,
         "n_moved_items": float(asg.n_moved),
     }
+    # steal3d's stolen-work accounting feeds the process-wide registry:
+    # moved-tile bytes are the paper's stealing cost, worth watching as a
+    # running total across every plan a serving process builds.
+    reg = _obs.registry()
+    reg.counter("steal3d.plans_built", wire=wire).inc()
+    reg.counter("steal3d.moved_tile_bytes").inc(float(moved_bytes))
+    reg.counter("steal3d.moved_items").inc(float(asg.n_moved))
+    reg.histogram("steal3d.lpt_makespan").observe(float(asg.makespan))
     return StealPlan(
         g=g, a_kind="bsr" if sparse_a else "dense", n_out=n_out,
         n_slots=n_slots, pair_capacity=pair_cap, store_a=store_a,

@@ -22,8 +22,8 @@ import dataclasses
 import re
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["analyze_hlo", "analyze_overlap", "HloStats", "OverlapReport",
-           "COLLECTIVE_KINDS"]
+__all__ = ["analyze_hlo", "analyze_overlap", "scope_op_counts", "HloStats",
+           "OverlapReport", "COLLECTIVE_KINDS"]
 
 COLLECTIVE_KINDS = (
     "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
@@ -406,3 +406,34 @@ def analyze_overlap(text: str) -> OverlapReport:
             elif op in COLLECTIVE_KINDS:
                 report.sync += 1
     return report
+
+
+_OP_NAME_RE = re.compile(r'metadata=\{[^}]*op_name="([^"]*)"')
+
+
+def scope_op_counts(text: str, scope: Optional[str] = None
+                    ) -> Dict[str, int]:
+    """Count HLO instructions per ``jax.named_scope`` label.
+
+    ``MatmulPlan`` wraps every schedule body in
+    ``jax.named_scope("plan.<algorithm>.<wire>")`` and the serving
+    segments in ``serve.*`` scopes; the labels survive into the compiled
+    module's ``metadata={op_name=...}`` strings, so an XLA profile — or
+    this compile-time proxy — attributes device ops to schedule steps by
+    name.  Returns ``{scope_component: n_instructions}`` over every
+    scope component seen (path components of each op_name, deduplicated
+    per instruction); with ``scope=`` given, only components containing
+    that substring are counted.
+    """
+    counts: Dict[str, int] = {}
+    for m in _OP_NAME_RE.finditer(text):
+        seen = set()
+        for comp in m.group(1).split("/"):
+            comp = comp.strip()
+            if not comp or comp in seen:
+                continue
+            seen.add(comp)
+            if scope is not None and scope not in comp:
+                continue
+            counts[comp] = counts.get(comp, 0) + 1
+    return counts

@@ -26,7 +26,7 @@ def _parse():
     p.add_argument("--check", default="all",
                    choices=["all", "spmm", "spgemm", "spgemm_sparse",
                             "dense", "api", "balance", "steal3d", "wire",
-                            "moe", "train_parallel"])
+                            "moe", "train_parallel", "obs"])
     p.add_argument("--seed", type=int, default=0)
     return p.parse_args()
 
@@ -274,6 +274,44 @@ def main() -> int:
         print(f"  [{'ok' if ok else 'FAIL'}] moe/ring_dispatch")
         if not ok:
             failures.append("moe_ring")
+
+    if args.check in ("all", "obs"):
+        print("== execution tracing + drift tracking ==")
+        import json as _json
+        import os as _os
+        import tempfile as _tempfile
+
+        from repro import obs
+        a_d = random_sparse(32, 32, 0.2, seed=args.seed + 6)
+        b = rng.standard_normal((32, 8)).astype(np.float32)
+        a_h = DistBSR.from_dense(a_d, g=1, block_size=4)
+        b_h = DistDense.for_rhs(jnp.asarray(b), a_h)
+        obs.enable(clear=True)
+        obs.reset_drift()
+        plan = api.plan_matmul(a_h, b_h, algorithm="ring_c", impl="ref",
+                               cache=False)
+        for _ in range(3):
+            out = plan(a_h, b_h)
+        obs.disable()
+        check("obs/traced_result", out, a_d @ b)
+        names = {e["name"] for e in obs.events()}
+        check_flag("obs/plan_build_span", "plan_build" in names)
+        check_flag("obs/multiply_span", "multiply.ring_c" in names)
+        fd, path = _tempfile.mkstemp(suffix=".json")
+        _os.close(fd)
+        try:
+            obs.export_trace(path)
+            with open(path) as f:
+                trace = _json.load(f)
+        finally:
+            _os.unlink(path)
+        check_flag("obs/trace_schema_valid",
+                   not obs.validate_trace(trace))
+        drift = obs.drift_report()
+        check_flag(f"obs/drift_recorded ({len(drift)} keys)",
+                   any(d["n"] >= 3 for d in drift.values()))
+        check_flag("obs/disabled_is_noop",
+                   obs.span("x") is obs.span("y"))
 
     if args.check in ("all", "train_parallel"):
         print("== data/tensor-parallel train step equivalence ==")

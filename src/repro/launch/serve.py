@@ -55,14 +55,31 @@ def main(argv=None) -> int:
     p.add_argument("--sparse", action="store_true",
                    help="route MoE dispatch / attention scoring through "
                         "the DistBSR plan engine")
+    p.add_argument("--trace", metavar="PATH", default=None,
+                   help="record an execution trace of the serve run and "
+                        "write Chrome-trace JSON to PATH (open in "
+                        "ui.perfetto.dev; summarize with "
+                        "tools/trace_view.py)")
     args = p.parse_args(argv)
 
+    from repro import obs
     from repro.configs import get_config
     cfg = get_config(args.arch, smoke=args.smoke)
     if cfg.is_encoder:
         raise SystemExit(f"{args.arch} is encoder-only; no serve path")
+    if args.trace:
+        obs.enable(clear=True)
     out = serve(cfg, requests=args.requests, prompt_len=args.prompt_len,
                 gen_len=args.gen_len, seed=args.seed, sparse=args.sparse)
+    if args.trace:
+        obs.disable()
+        trace = obs.export_trace(args.trace)
+        print(f"[serve] wrote {len(trace['traceEvents'])} trace events "
+              f"to {args.trace}")
+        drift = obs.drift_report()
+        for key, d in sorted(drift.items()):
+            print(f"[serve] drift {key}: ratio {d['ratio']:.2f} "
+                  f"over {d['n']} multiplies")
     m = out["metrics"]
     print(f"[serve] prefill {out['prefill_s']:.2f}s, "
           f"decode {out['decode_s']:.2f}s "

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs as _obs
 from ..core import api as _api
 from ..models import lm, transformer as tf
 from ..models.config import ModelConfig
@@ -140,17 +141,22 @@ class ServeEngine:
         slot = next(s for s in range(self.max_batch)
                     if s not in self.active)
         toks_np, length = self.batcher.padded(req)
-        self.metrics.admitted(req.rid, toks_np.shape[1])
-        t0 = time.perf_counter()
-        fn = self._prefill_for(toks_np.shape[1])
-        last, row, row_pos = fn(self.params, jnp.asarray(toks_np),
-                                jnp.asarray([length], jnp.int32))
-        tok = jnp.argmax(last, axis=-1).astype(jnp.int32)      # [1]
-        self.caches = self._insert_fn(self.caches, row,
-                                      jnp.asarray(slot, jnp.int32))
-        self.pos = self.pos.at[slot].set(length)
-        self.tokens = self.tokens.at[slot, 0].set(tok[0])
-        dt = sync_elapsed(t0, (self.caches, self.tokens))
+        sp = _obs.span("serve.admit", rid=req.rid, bucket=toks_np.shape[1])
+        with sp:
+            self.metrics.admitted(req.rid, toks_np.shape[1])
+            t0 = time.perf_counter()
+            with _obs.span("serve.prefill", rid=req.rid,
+                           bucket=toks_np.shape[1]):
+                fn = self._prefill_for(toks_np.shape[1])
+                last, row, row_pos = fn(self.params, jnp.asarray(toks_np),
+                                        jnp.asarray([length], jnp.int32))
+                tok = jnp.argmax(last, axis=-1).astype(jnp.int32)  # [1]
+                self.caches = self._insert_fn(self.caches, row,
+                                              jnp.asarray(slot, jnp.int32))
+                self.pos = self.pos.at[slot].set(length)
+                self.tokens = self.tokens.at[slot, 0].set(tok[0])
+                dt = sync_elapsed(t0, (self.caches, self.tokens))
+            sp.note(prefill_s=dt)
         self.metrics.prefill_done(req.rid, dt)
         st = _Active(req.rid, req.max_new_tokens)
         st.out.append(int(tok[0]))
@@ -167,6 +173,10 @@ class ServeEngine:
 
     # ---------------------------------------------------------------- decode
     def _decode_step(self) -> None:
+        with _obs.span("serve.decode_step", batch=len(self.active)) as sp:
+            self._decode_step_inner(sp)
+
+    def _decode_step_inner(self, sp) -> None:
         t0 = time.perf_counter()
         if self.sparse:
             logits, caches, aux = tf.decode_step_unscanned(
@@ -184,6 +194,7 @@ class ServeEngine:
         self.pos = self.pos + jnp.asarray(active_mask)
         self.tokens = tok[:, None]
         dt = sync_elapsed(t0, (self.tokens, self.caches))
+        sp.note(step_s=dt)
         dropped = (float(aux["dropped"]) / self._n_moe
                    if self._n_moe else None)
         rids = [st.rid for st in self.active.values()]

@@ -1,10 +1,15 @@
 """Serving metrics: per-request TTFT/TPOT, aggregate percentiles, and
-plan-cache reuse rates.
+plan-cache reuse rates — built on the :mod:`repro.obs` metrics registry.
 
 The engine records wall-clock per measurement window (every timed section
 blocks on its outputs via :func:`sync_elapsed`, so async dispatch can never
 smear prefill work into the decode window — the bug the old
-``launch/serve.py`` loop had).  Plan-cache counters come from
+``launch/serve.py`` loop had).  Aggregate series (prefill/decode seconds,
+decode-step counts, TTFT/TPOT/dropped-token distributions) live as
+instruments in a per-run :class:`~repro.obs.MetricsRegistry` rather than
+ad-hoc attributes: ``summary()`` is a read of the registry plus the
+request table, and the same run registry can be snapshot alongside the
+process-wide ``obs.registry()``.  Plan-cache counters come from
 ``repro.core.api.cache_stats()``; ``plans_per_second`` is plan-cache
 lookups (hits + misses) over the serving interval, i.e. how often the
 engine reached for a ``MatmulPlan`` while under traffic.
@@ -15,28 +20,13 @@ import dataclasses
 import time
 from typing import Dict, List, Optional
 
-import jax
-
+from .. import obs as _obs
 from ..core import api as _api
 
-
-def sync_elapsed(t0: float, tree) -> float:
-    """Block until ``tree``'s arrays are ready, return seconds since t0."""
-    jax.block_until_ready(tree)
-    return time.perf_counter() - t0
-
-
-def percentile(xs: List[float], q: float) -> float:
-    """Linear-interpolated percentile; nan for an empty sample."""
-    if not xs:
-        return float("nan")
-    s = sorted(xs)
-    if len(s) == 1:
-        return float(s[0])
-    f = (len(s) - 1) * q / 100.0
-    lo = int(f)
-    hi = min(lo + 1, len(s) - 1)
-    return float(s[lo] + (s[hi] - s[lo]) * (f - lo))
+# Timing + percentile helpers moved to repro.obs (the one sanctioned home
+# for jax wall-timing); re-exported here for compatibility.
+sync_elapsed = _obs.sync_elapsed
+percentile = _obs.percentile
 
 
 @dataclasses.dataclass
@@ -67,17 +57,29 @@ class RequestStats:
 
 
 class ServingMetrics:
-    """Aggregates request lifecycles + cache counters for one serve run."""
+    """Aggregates request lifecycles + cache counters for one serve run.
 
-    def __init__(self):
+    Holds its own :class:`~repro.obs.MetricsRegistry` (pass ``registry=``
+    to share one): per-run windows need isolated counters, while the
+    process-wide ``obs.registry()`` keeps cross-run totals via the
+    plan-cache callback.  ``registry.snapshot()`` exposes the raw series.
+    """
+
+    def __init__(self, registry: Optional[_obs.MetricsRegistry] = None):
+        self.registry = registry or _obs.MetricsRegistry()
         self.requests: Dict[int, RequestStats] = {}
-        self.prefill_s = 0.0
-        self.decode_s = 0.0
-        self.decode_steps = 0
-        self.dropped: List[float] = []
         self._t0: Optional[float] = None
         self._t1: Optional[float] = None
         self._cache0: Optional[Dict] = None
+        r = self.registry
+        self._prefill_s = r.counter("serve.prefill_s")
+        self._decode_s = r.counter("serve.decode_s")
+        self._decode_steps = r.counter("serve.decode_steps")
+        self._completed = r.counter("serve.completed")
+        self._step_h = r.histogram("serve.decode_step_s")
+        self._ttft_h = r.histogram("serve.ttft_s")
+        self._tpot_h = r.histogram("serve.tpot_s")
+        self._dropped_h = r.histogram("serve.dropped_tokens")
 
     # ------------------------------------------------------------- lifecycle
     def start(self) -> float:
@@ -100,23 +102,30 @@ class ServingMetrics:
         r.bucket_len = bucket_len
 
     def prefill_done(self, rid: int, dt: float) -> None:
-        self.prefill_s += dt
+        self._prefill_s.inc(dt)
         self.requests[rid].first_token = time.perf_counter()
         self.requests[rid].n_tokens += 1
 
     def decode_step_done(self, dt: float, rids: List[int],
                          dropped: Optional[float] = None) -> None:
-        self.decode_s += dt
-        self.decode_steps += 1
+        self._decode_s.inc(dt)
+        self._decode_steps.inc()
+        self._step_h.observe(dt)
         if dropped is not None:
-            self.dropped.append(float(dropped))
+            self._dropped_h.observe(float(dropped))
         for rid in rids:
             r = self.requests[rid]
             r.step_s.append(dt)
             r.n_tokens += 1
 
     def finished(self, rid: int) -> None:
-        self.requests[rid].finished = time.perf_counter()
+        r = self.requests[rid]
+        r.finished = time.perf_counter()
+        self._completed.inc()
+        if r.ttft is not None:
+            self._ttft_h.observe(r.ttft)
+        if r.tpot is not None:
+            self._tpot_h.observe(r.tpot)
 
     # --------------------------------------------------------------- summary
     def cache_delta(self) -> Dict[str, Dict[str, int]]:
@@ -135,36 +144,34 @@ class ServingMetrics:
         if self._t1 is None:
             self.stop()
         elapsed = (self._t1 or time.perf_counter()) - (self._t0 or 0.0)
-        done = [r for r in self.requests.values() if r.finished is not None]
-        ttfts = [r.ttft for r in done if r.ttft is not None]
-        tpots = [r.tpot for r in done if r.tpot is not None]
         n_tokens = sum(r.n_tokens for r in self.requests.values())
+        decode_s = self._decode_s.value
         caches = self.cache_delta()
         plans = caches.get("plans", {})
         lookups = plans.get("hits", 0) + plans.get("misses", 0)
         hit_rate = (plans.get("hits", 0) / lookups) if lookups else None
+        dropped = self._dropped_h
         return {
             "requests": len(self.requests),
-            "completed": len(done),
+            "completed": int(self._completed.value),
             "elapsed_s": elapsed,
-            "prefill_s": self.prefill_s,
-            "decode_s": self.decode_s,
-            "decode_steps": self.decode_steps,
+            "prefill_s": self._prefill_s.value,
+            "decode_s": decode_s,
+            "decode_steps": int(self._decode_steps.value),
             "tokens": n_tokens,
             "tokens_per_s": n_tokens / elapsed if elapsed > 0 else None,
             "decode_tok_per_s": (
                 sum(len(r.step_s) for r in self.requests.values())
-                / self.decode_s if self.decode_s > 0 else None),
-            "ttft_p50_s": percentile(ttfts, 50),
-            "ttft_p99_s": percentile(ttfts, 99),
-            "tpot_p50_s": percentile(tpots, 50),
-            "tpot_p99_s": percentile(tpots, 99),
+                / decode_s if decode_s > 0 else None),
+            "ttft_p50_s": self._ttft_h.percentile(50),
+            "ttft_p99_s": self._ttft_h.percentile(99),
+            "tpot_p50_s": self._tpot_h.percentile(50),
+            "tpot_p99_s": self._tpot_h.percentile(99),
             "plan_lookups": lookups,
             "plans_per_second": lookups / elapsed if elapsed > 0 else None,
             "plan_cache": plans,
             "plan_cache_hit_rate": hit_rate,
             "caches": caches,
-            "dropped_mean": (sum(self.dropped) / len(self.dropped)
-                             if self.dropped else 0.0),
-            "dropped_max": max(self.dropped) if self.dropped else 0.0,
+            "dropped_mean": (dropped.mean() if dropped.count else 0.0),
+            "dropped_max": (dropped.vmax if dropped.count else 0.0),
         }

@@ -99,13 +99,15 @@ class SparseOps:
 def _route_segment(router, xf, cfg: ModelConfig) -> Dict:
     """Router math for one bucket — :func:`route_tokens` minus the static
     ints (those come from ``route_meta`` on the host side)."""
-    r = moe_mod.route_tokens(router, xf, cfg)
-    return {k: v for k, v in r.items() if k not in ("cap", "G", "ng")}
+    with jax.named_scope("serve.route"):
+        r = moe_mod.route_tokens(router, xf, cfg)
+        return {k: v for k, v in r.items() if k not in ("cap", "G", "ng")}
 
 
 @functools.partial(jax.jit, static_argnums=2)
 def _expert_segment(p: Dict, xe, cfg: ModelConfig):
-    return moe_mod.expert_ffn(p, xe, cfg)
+    with jax.named_scope("serve.expert_ffn"):
+        return moe_mod.expert_ffn(p, xe, cfg)
 
 
 @functools.partial(jax.jit, static_argnums=3)

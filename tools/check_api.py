@@ -93,6 +93,47 @@ XLA_FLAG_DIRS = ("src/repro", "examples", "benchmarks", "tools", "tests")
 XLA_FLAG_ALLOW = ("src/repro/runtime/platform.py",)
 
 
+# Raw-perf_counter timing ban: jax dispatch is asynchronous, so a
+# perf_counter pair around a jax call times the *dispatch*, not the work
+# (the timing smear PR 6 fixed in launch/serve.py).  Any function that
+# reads perf_counter twice or more must reference one of the sanctioned
+# blocking helpers (``block_until_ready`` directly, or ``sync_elapsed`` /
+# ``timed`` from ``repro.obs``) in the same scope.  ``repro/obs`` and the
+# thin re-export in ``serving/metrics.py`` are the helpers' home.
+PERF_COUNTER_DIRS = ("src/repro", "examples", "benchmarks", "tools")
+PERF_COUNTER_ALLOW = ("src/repro/obs", "src/repro/serving/metrics.py")
+PERF_COUNTER_BLOCKERS = ("block_until_ready", "sync_elapsed", "timed")
+
+
+def _perf_counter_hits(tree: ast.AST) -> List:
+    """Functions timing with >= 2 raw perf_counter reads and no blocking
+    discipline (no block_until_ready/sync_elapsed/timed reference)."""
+    hits = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        n_pc = 0
+        blocked = False
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                f = sub.func
+                name = f.attr if isinstance(f, ast.Attribute) else \
+                    f.id if isinstance(f, ast.Name) else None
+                if name == "perf_counter":
+                    n_pc += 1
+            ref = sub.attr if isinstance(sub, ast.Attribute) else \
+                sub.id if isinstance(sub, ast.Name) else None
+            if ref in PERF_COUNTER_BLOCKERS:
+                blocked = True
+        if n_pc >= 2 and not blocked:
+            hits.append(
+                (node.lineno,
+                 f"function {node.name!r} times with raw perf_counter "
+                 "pairs and never blocks (use obs.sync_elapsed / "
+                 "obs.timed / block_until_ready)"))
+    return hits
+
+
 def _is_xla_key(node) -> bool:
     return isinstance(node, ast.Constant) and node.value == "XLA_FLAGS"
 
@@ -168,6 +209,19 @@ def violations(root: Optional[str] = None) -> List[str]:
                 continue
             tree = ast.parse(path.read_text(), filename=str(path))
             for lineno, desc in _xla_flag_hits(tree):
+                out.append(f"{rel}:{lineno}: {desc}")
+    for sub in PERF_COUNTER_DIRS:
+        base = root_path / sub
+        if not base.is_dir():
+            continue
+        for path in sorted(base.glob("**/*.py")):
+            rel = path.relative_to(root_path)
+            rp = rel.as_posix()
+            if any(rp == pre or rp.startswith(pre + "/")
+                   for pre in PERF_COUNTER_ALLOW):
+                continue
+            tree = ast.parse(path.read_text(), filename=str(path))
+            for lineno, desc in _perf_counter_hits(tree):
                 out.append(f"{rel}:{lineno}: {desc}")
     return sorted(set(out))
 

@@ -237,6 +237,46 @@ def collect_records(payload: Dict) -> List[Dict]:
         + _wire_records(payload)
 
 
+def _records_from_drift(raw: List[Dict]) -> List[Dict]:
+    """Convert obs drift records ({"algorithm", "cm", "measured_s"}) to
+    fit records.  Drift records carry the executed plan's cost-model dict
+    verbatim, so no geometry reconstruction is needed; records for
+    unregistered algorithms or with structure-dependent cost functions
+    (steal3d — see _g1_records) are skipped."""
+    from repro.core import api
+
+    out = []
+    for rec in raw:
+        name = rec.get("algorithm")
+        cm = rec.get("cm")
+        if cm is None or name not in api.REGISTRY:
+            continue
+        alg = api.REGISTRY.get(name)
+        if alg.cost_fn is not None:
+            continue
+        out.append({"cm": cm, "alg": alg,
+                    "source": f"drift/{name}/{rec.get('wire', '?')}",
+                    "measured": rec["measured_s"],
+                    "predicted": rec.get("predicted_s")})
+    return out
+
+
+def fit_from_registry(base=None) -> Tuple[object, Dict]:
+    """Re-fit (net_bw, hop_latency) from the live obs drift series.
+
+    The observed-step-time loop: any process that executed plans under
+    ``obs.enable()`` has per-multiply measurements (with their cost-model
+    dicts) sitting in ``obs.drift_records()`` — this fits a Machine from
+    them directly, no bench JSON round-trip.  Raises ValueError with
+    fewer than two usable records, like :func:`fit`.
+    """
+    from repro import obs
+    from repro.core import roofline
+
+    base = base or roofline.TPU_V5E
+    return fit(_records_from_drift(obs.drift_records()), base)
+
+
 def fit_overlap_eff(payload: Dict) -> Tuple[Optional[float], Dict]:
     """Fit ``Machine.overlap_eff`` from the overlap A/B section.
 
@@ -282,16 +322,26 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--write", nargs="?", const="MACHINE_calibrated.json",
                    default=None, metavar="PATH",
                    help="save the calibrated preset as JSON")
+    p.add_argument("--drift", default=None, metavar="PATH",
+                   help="fit from an obs.export_drift JSON (live-registry "
+                        "records) instead of bench sections")
     args = p.parse_args(argv)
 
     from repro.core import roofline
     base = {"tpu-v5e": roofline.TPU_V5E, "summit-v100": roofline.SUMMIT_V100,
             "dgx2-v100": roofline.DGX2_V100}[args.machine]
-    with open(args.bench_json) as f:
-        payload = json.load(f)
-    records = collect_records(payload)
+    if args.drift:
+        with open(args.drift) as f:
+            records = _records_from_drift(json.load(f).get("records", []))
+        payload = {}
+        source = args.drift
+    else:
+        with open(args.bench_json) as f:
+            payload = json.load(f)
+        records = collect_records(payload)
+        source = args.bench_json
     if not records:
-        print(f"no predicted-vs-measured records in {args.bench_json}")
+        print(f"no predicted-vs-measured records in {source}")
         return 1
     fitted, diag = fit(records, base)
     eff, ov_diag = fit_overlap_eff(payload)

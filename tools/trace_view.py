@@ -1,0 +1,92 @@
+#!/usr/bin/env python
+"""Textual summarizer for repro.obs Chrome-trace JSON files.
+
+``obs.export_trace(path)`` writes a Perfetto-loadable trace; this tool
+answers the quick questions without leaving the terminal: where did the
+time go, per span name, and what did the slowest spans look like.
+
+Usage:
+  python tools/trace_view.py TRACE.json [--top 20] [--slowest 5]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional
+
+
+def summarize(events: List[Dict]) -> List[Dict]:
+    """Aggregate Chrome-trace events per span name.
+
+    Returns rows sorted by total duration (descending), each with
+    ``name`` / ``count`` / ``total_ms`` / ``mean_ms`` / ``max_ms``.
+    """
+    agg: Dict[str, Dict] = {}
+    for ev in events:
+        if ev.get("ph") != "X":
+            continue
+        name = ev.get("name", "?")
+        dur_ms = float(ev.get("dur", 0.0)) / 1e3
+        row = agg.setdefault(
+            name, {"name": name, "count": 0, "total_ms": 0.0, "max_ms": 0.0})
+        row["count"] += 1
+        row["total_ms"] += dur_ms
+        row["max_ms"] = max(row["max_ms"], dur_ms)
+    rows = sorted(agg.values(), key=lambda r: -r["total_ms"])
+    for r in rows:
+        r["mean_ms"] = r["total_ms"] / r["count"]
+    return rows
+
+
+def slowest(events: List[Dict], n: int = 5) -> List[Dict]:
+    """The n longest individual spans, longest first."""
+    evs = [e for e in events if e.get("ph") == "X"]
+    return sorted(evs, key=lambda e: -float(e.get("dur", 0.0)))[:n]
+
+
+def render(trace: Dict, top: int = 20, n_slowest: int = 5) -> str:
+    events = trace.get("traceEvents", [])
+    rows = summarize(events)
+    lines = [f"{len(events)} events, {len(rows)} span names"]
+    dropped = trace.get("otherData", {}).get("dropped_events", 0)
+    if dropped:
+        lines.append(f"WARNING: {dropped} events dropped (buffer cap)")
+    lines.append("")
+    hdr = f"{'name':<36} {'count':>7} {'total_ms':>12} " \
+          f"{'mean_ms':>10} {'max_ms':>10}"
+    lines += [hdr, "-" * len(hdr)]
+    for r in rows[:top]:
+        lines.append(f"{r['name']:<36} {r['count']:>7} "
+                     f"{r['total_ms']:>12.3f} {r['mean_ms']:>10.3f} "
+                     f"{r['max_ms']:>10.3f}")
+    if n_slowest and events:
+        lines += ["", f"slowest {n_slowest} spans:"]
+        for ev in slowest(events, n_slowest):
+            args = ev.get("args", {})
+            attrs = ",".join(f"{k}={v}" for k, v in sorted(args.items())
+                             if k != "depth")
+            lines.append(f"  {float(ev.get('dur', 0.0)) / 1e3:>10.3f} ms  "
+                         f"{ev.get('name', '?')}"
+                         + (f"  [{attrs}]" if attrs else ""))
+    lines.append("")
+    lines.append("open in https://ui.perfetto.dev for the full timeline")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("trace", help="Chrome-trace JSON from obs.export_trace")
+    p.add_argument("--top", type=int, default=20,
+                   help="span names to show (by total time)")
+    p.add_argument("--slowest", type=int, default=5,
+                   help="individual slowest spans to list")
+    args = p.parse_args(argv)
+    with open(args.trace) as f:
+        trace = json.load(f)
+    print(render(trace, top=args.top, n_slowest=args.slowest))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
