@@ -124,6 +124,7 @@ def _write_json(smoke: bool) -> None:
             ("benchmarks.steal_bench", "steal_rmat_4x4", 16),
             ("benchmarks.wire_bench", "wire_rmat_4x4", 16),
             ("benchmarks.overlap_bench", "overlap_rmat_4x4", 16),
+            ("benchmarks.analysis_bench", "analysis", 16),
             ("benchmarks.serve_bench", "serve_trace", 1)):
         raw = _run_subprocess(module, devices, *extra, quiet=True)
         try:
@@ -185,6 +186,9 @@ def main() -> None:
         from benchmarks import kernels_bench
         kernels_bench.main(smoke=True)
         ok = True
+        # analysis_bench asserts the static verifier finds nothing on
+        # healthy plans and validate="fast" stays under the 5% cached
+        # plan-build overhead budget;
         # wire_bench additionally *asserts* packed wire bytes <= padded and
         # packed results allclose to padded; overlap_bench asserts the
         # overlap A-B contract (double-buffered results allclose to bulk,
@@ -196,6 +200,7 @@ def main() -> None:
                                 ("benchmarks.steal_bench", 16),
                                 ("benchmarks.wire_bench", 16),
                                 ("benchmarks.overlap_bench", 16),
+                                ("benchmarks.analysis_bench", 16),
                                 ("benchmarks.serve_bench", 1)):
             raw = _run_subprocess(module, devices, "--smoke", quiet=True)
             name = module.rsplit(".", 1)[1]

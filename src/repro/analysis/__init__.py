@@ -1,0 +1,40 @@
+"""Static analysis: prove communication plans correct before they run.
+
+Three passes (see DESIGN.md "Static analysis"):
+
+* :mod:`repro.analysis.schedule_check` — host-side verification over
+  plan metadata (ppermute bijections, steal3d exactly-once +
+  conservation, packed-wire consume-map contracts, sparse pair lists,
+  balance perms).
+* :mod:`repro.analysis.jaxpr_lint` — structural rules over the plan's
+  traced executable (sort/scatter-free scan steps, collective count ==
+  cost-model messages, overlap-carry happens-before), plus the shared
+  jaxpr-walk primitives the test suite builds on.
+* :mod:`repro.analysis.source_rules` — the AST-level source hygiene
+  registry behind ``tools/check_api.py``.
+
+Entry points: ``check_plan`` / ``lint_plan`` return ``List[Finding]``
+(empty == proven clean); ``plan_matmul(validate="fast"|"full")`` runs
+them at plan-build time and raises :class:`PlanValidationError` on any
+finding.
+"""
+from .findings import Finding, PlanValidationError
+from .jaxpr_lint import (iter_eqns, lint_plan, scan_body_primitives,
+                         scan_eqns, subjaxprs, trace_plan)
+from .schedule_check import check_plan
+
+from . import jaxpr_lint, schedule_check, source_rules
+
+
+def all_rules():
+    """(rule id, description) for every registered rule, all passes."""
+    return (tuple(schedule_check.RULES) + tuple(jaxpr_lint.RULES)
+            + tuple((r.id, r.description) for r in source_rules.RULES))
+
+
+__all__ = [
+    "Finding", "PlanValidationError", "check_plan", "lint_plan",
+    "trace_plan", "subjaxprs", "iter_eqns", "scan_eqns",
+    "scan_body_primitives", "all_rules", "jaxpr_lint", "schedule_check",
+    "source_rules",
+]

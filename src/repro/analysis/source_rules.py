@@ -1,0 +1,318 @@
+"""Source rules: the repo's AST-level hygiene pass as a rule registry.
+
+This is ``tools/check_api.py`` refactored into pluggable rules (that
+script is now a thin shim over this module so the CLI contract and the
+tier-1 wiring are unchanged).  Three rule families, byte-compatible with
+the legacy guard:
+
+* ``source.import.<module>`` — deprecated/internal module imports
+  (``repro.core.spmm`` shims, the Pallas kernel module, the symbolic /
+  steal3d / wire planners, ``repro.serving.engine``) outside their
+  allowed homes; first-party code goes through ``repro.core.api``.
+* ``source.xla-flags-write`` — direct ``XLA_FLAGS`` environment writes
+  anywhere but ``repro/runtime/platform.py`` (XLA reads the variable
+  once, at first backend init; scattered writes are silently dead).
+* ``source.perf-counter-discipline`` — functions timing with raw
+  ``perf_counter`` pairs and no blocking discipline (jax dispatch is
+  async; use ``obs.sync_elapsed`` / ``obs.timed`` /
+  ``block_until_ready``).
+
+Waivers: a violation is suppressed when the flagged line carries the
+pragma ``# analysis: allow(<rule-id>)``, e.g.::
+
+    from repro.core import steal3d  # analysis: allow(source.import.repro.core.steal3d)
+
+Waivers are per-line and per-rule — there is deliberately no file-level
+or wildcard form.
+
+Deliberately stdlib-only (no jax import) so the ``tools/`` shim works in
+any interpreter.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import pathlib
+import sys
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# legacy configuration (byte-compatible with the pre-registry check_api)
+# ---------------------------------------------------------------------------
+# module -> scan config:
+#   parent/leaf  : detect `from parent import leaf`
+#   dirs         : repo-relative directories to scan
+#   allow        : path prefixes (relative, posix) where the import is fine
+FORBIDDEN_MODULES = {
+    "repro.core.spmm": {
+        "parent": "repro.core", "leaf": "spmm",
+        "dirs": ("examples", "benchmarks"), "allow": (),
+    },
+    "repro.kernels.bsr_spmm": {
+        "parent": "repro.kernels", "leaf": "bsr_spmm",
+        "dirs": ("examples", "benchmarks"), "allow": (),
+    },
+    "repro.core.symbolic": {
+        "parent": "repro.core", "leaf": "symbolic",
+        "dirs": ("examples", "benchmarks", "tools", "tests", "src/repro"),
+        "allow": ("src/repro/core",),
+    },
+    # The steal3d planner couples LPT assignments to executables the same
+    # way the symbolic phase couples pair lists: plans own that coupling,
+    # so the builder is internal to repro/core (use
+    # plan_matmul(algorithm="steal3d")).
+    "repro.core.steal3d": {
+        "parent": "repro.core", "leaf": "steal3d",
+        "dirs": ("examples", "benchmarks", "tools", "tests", "src/repro"),
+        "allow": ("src/repro/core",),
+    },
+    # The packed wire layer couples consume maps / remapped pair lists to
+    # executables exactly like the symbolic phase; its public surface is
+    # plan_matmul(wire="packed") plus the repro.core.api re-exports
+    # (PackedOperand / wire_capacity / DistBSR.packed_operand).  The
+    # static analyzer needs the tile-schedule tables to re-derive the
+    # consume-map contract, so it is a second allowed home.
+    "repro.core.wire": {
+        "parent": "repro.core", "leaf": "wire",
+        "dirs": ("examples", "benchmarks", "tools", "tests", "src/repro"),
+        "allow": ("src/repro/core", "src/repro/analysis"),
+    },
+    # The serving engine's slot/cache-splicing internals are not API:
+    # import ServeEngine from repro.serving (the package __init__), which
+    # owns the admission/batching/metrics surface.
+    "repro.serving.engine": {
+        "parent": "repro.serving", "leaf": "engine",
+        "dirs": ("examples", "benchmarks", "tools", "tests", "src/repro"),
+        "allow": ("src/repro/serving",),
+    },
+}
+
+
+# XLA_FLAGS write ban: scanned dirs and the single allowed writer.
+XLA_FLAG_DIRS = ("src/repro", "examples", "benchmarks", "tools", "tests")
+XLA_FLAG_ALLOW = ("src/repro/runtime/platform.py",)
+
+
+# Raw-perf_counter timing ban: jax dispatch is asynchronous, so a
+# perf_counter pair around a jax call times the *dispatch*, not the work
+# (the timing smear PR 6 fixed in launch/serve.py).  Any function that
+# reads perf_counter twice or more must reference one of the sanctioned
+# blocking helpers (``block_until_ready`` directly, or ``sync_elapsed`` /
+# ``timed`` from ``repro.obs``) in the same scope.  ``repro/obs`` and the
+# thin re-export in ``serving/metrics.py`` are the helpers' home.
+PERF_COUNTER_DIRS = ("src/repro", "examples", "benchmarks", "tools")
+PERF_COUNTER_ALLOW = ("src/repro/obs", "src/repro/serving/metrics.py")
+PERF_COUNTER_BLOCKERS = ("block_until_ready", "sync_elapsed", "timed")
+
+
+# ---------------------------------------------------------------------------
+# per-file hit functions (unchanged behavior)
+# ---------------------------------------------------------------------------
+def _perf_counter_hits(tree: ast.AST) -> List:
+    """Functions timing with >= 2 raw perf_counter reads and no blocking
+    discipline (no block_until_ready/sync_elapsed/timed reference)."""
+    hits = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        n_pc = 0
+        blocked = False
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                f = sub.func
+                name = f.attr if isinstance(f, ast.Attribute) else \
+                    f.id if isinstance(f, ast.Name) else None
+                if name == "perf_counter":
+                    n_pc += 1
+            ref = sub.attr if isinstance(sub, ast.Attribute) else \
+                sub.id if isinstance(sub, ast.Name) else None
+            if ref in PERF_COUNTER_BLOCKERS:
+                blocked = True
+        if n_pc >= 2 and not blocked:
+            hits.append(
+                (node.lineno,
+                 f"function {node.name!r} times with raw perf_counter "
+                 "pairs and never blocks (use obs.sync_elapsed / "
+                 "obs.timed / block_until_ready)"))
+    return hits
+
+
+def _is_xla_key(node) -> bool:
+    return isinstance(node, ast.Constant) and node.value == "XLA_FLAGS"
+
+
+def _xla_flag_hits(tree: ast.AST) -> List:
+    """Direct XLA_FLAGS writes: ``env["XLA_FLAGS"] = ...`` (any mapping)
+    and ``.setdefault("XLA_FLAGS", ...)``."""
+    hits = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                if isinstance(t, ast.Subscript) and _is_xla_key(t.slice):
+                    hits.append(
+                        (node.lineno, 'sets ["XLA_FLAGS"] directly '
+                         "(use repro.runtime.platform)"))
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if (isinstance(f, ast.Attribute) and f.attr == "setdefault"
+                    and node.args and _is_xla_key(node.args[0])):
+                hits.append(
+                    (node.lineno, 'setdefault("XLA_FLAGS", ...) '
+                     "(use repro.runtime.platform)"))
+    return hits
+
+
+def _module_hits(tree: ast.AST, mod: str, parent: str, leaf: str) -> List:
+    hits = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                name = alias.name
+                if name == mod or name.startswith(mod + "."):
+                    hits.append((node.lineno, f"import {name}"))
+        elif isinstance(node, ast.ImportFrom):
+            src = node.module or ""
+            if src == mod or src.startswith(mod + "."):
+                hits.append((node.lineno, f"from {src} import ..."))
+            elif src == parent:
+                for alias in node.names:
+                    if alias.name == leaf:
+                        hits.append((node.lineno,
+                                     f"from {parent} import {leaf}"))
+    return hits
+
+
+# ---------------------------------------------------------------------------
+# rule registry
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class SourceRule:
+    """One AST-level hygiene rule.
+
+    ``scan(tree)`` returns ``[(lineno, description), ...]`` hits for one
+    parsed file; ``dirs``/``allow`` bound where the rule applies.
+    """
+
+    id: str
+    description: str
+    dirs: Tuple[str, ...]
+    allow: Tuple[str, ...]
+    scan: Callable[[ast.AST], List[Tuple[int, str]]]
+
+
+def _make_rules() -> Tuple[SourceRule, ...]:
+    rules = []
+    for mod, cfg in FORBIDDEN_MODULES.items():
+        rules.append(SourceRule(
+            id=f"source.import.{mod}",
+            description=f"no imports of internal/deprecated module {mod} "
+                        "(go through repro.core.api / the package "
+                        "__init__)",
+            dirs=tuple(cfg["dirs"]),
+            allow=tuple(cfg["allow"]),
+            scan=(lambda tree, m=mod, c=cfg:
+                  _module_hits(tree, m, c["parent"], c["leaf"])),
+        ))
+    rules.append(SourceRule(
+        id="source.xla-flags-write",
+        description="XLA_FLAGS is written only by repro/runtime/"
+                    "platform.py (XLA reads it once at backend init)",
+        dirs=XLA_FLAG_DIRS,
+        allow=XLA_FLAG_ALLOW,
+        scan=_xla_flag_hits,
+    ))
+    rules.append(SourceRule(
+        id="source.perf-counter-discipline",
+        description="no raw perf_counter timing pairs without a blocking "
+                    "helper (obs.sync_elapsed / obs.timed / "
+                    "block_until_ready)",
+        dirs=PERF_COUNTER_DIRS,
+        allow=PERF_COUNTER_ALLOW,
+        scan=_perf_counter_hits,
+    ))
+    return tuple(rules)
+
+
+RULES: Tuple[SourceRule, ...] = _make_rules()
+
+
+def iter_rules() -> Tuple[SourceRule, ...]:
+    return RULES
+
+
+def _allowed(rel_posix: str, allow: Sequence[str]) -> bool:
+    return any(rel_posix == pre or rel_posix.startswith(pre + "/")
+               for pre in allow)
+
+
+def _waived(lines: List[str], lineno: int, rule_id: str) -> bool:
+    if not 1 <= lineno <= len(lines):
+        return False
+    return f"# analysis: allow({rule_id})" in lines[lineno - 1]
+
+
+def _scan(root: Optional[str] = None) -> List[dict]:
+    """All hits as dicts {file, line, rule, desc}, waivers applied."""
+    root_path = pathlib.Path(root) if root else \
+        pathlib.Path(__file__).resolve().parents[3]
+    cache: Dict[pathlib.Path, Tuple[ast.AST, List[str]]] = {}
+    out = []
+    for rule in RULES:
+        for sub in rule.dirs:
+            base = root_path / sub
+            if not base.is_dir():
+                continue
+            for path in sorted(base.glob("**/*.py")):
+                rel = path.relative_to(root_path).as_posix()
+                if _allowed(rel, rule.allow):
+                    continue
+                if path not in cache:
+                    text = path.read_text()
+                    cache[path] = (ast.parse(text, filename=str(path)),
+                                   text.splitlines())
+                tree, lines = cache[path]
+                for lineno, desc in rule.scan(tree):
+                    if _waived(lines, lineno, rule.id):
+                        continue
+                    out.append({"file": rel, "line": lineno,
+                                "rule": rule.id, "desc": desc})
+    return out
+
+
+def violations(root: Optional[str] = None) -> List[str]:
+    """Legacy string form: sorted unique ``file:line: desc`` lines."""
+    return sorted({f"{h['file']}:{h['line']}: {h['desc']}"
+                   for h in _scan(root)})
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    as_json = "--json" in argv
+    list_rules = "--list-rules" in argv
+    args = [a for a in argv if a not in ("--json", "--list-rules")]
+    if list_rules:
+        if as_json:
+            print(json.dumps([{"rule": r.id, "description": r.description}
+                              for r in RULES], indent=2))
+        else:
+            for r in RULES:
+                print(f"{r.id}: {r.description}")
+        return 0
+    root = args[0] if args else None
+    if as_json:
+        hits = _scan(root)
+        print(json.dumps({"ok": not hits, "violations": hits}, indent=2))
+        return 1 if hits else 0
+    found = violations(root)
+    if found:
+        print("deprecated/internal module usage (use repro.core.api):")
+        for v in found:
+            print(f"  {v}")
+        return 1
+    scanned = sorted({d for cfg in FORBIDDEN_MODULES.values()
+                      for d in cfg["dirs"]})
+    print(f"check_api: OK ({', '.join(scanned)} are plan-API clean)")
+    return 0

@@ -1963,6 +1963,9 @@ class MatmulPlan:
         self._wire_caps = wire_caps
         self._wire_fps = wire_fps or {}
         self.traces = 0
+        # static-verification memo: modes this plan already passed
+        # ("fast"/"full") — revalidating a cached plan is a set lookup
+        self._validated: set = set()
         specs = (_specs_for_keys(_tree_keys(a_key), geom.axr, geom.axc),
                  _specs_for_keys(_tree_keys(b_key), geom.axr, geom.axc))
 
@@ -2132,9 +2135,15 @@ class MatmulPlan:
             machine=machine.name)
         return out
 
-    def _execute(self, a, b):
-        a_h, b_h = _coerce_pair(a, b, g=self.geom.g,
-                                allow_pad=self._allow_pad)
+    def _operands(self, a_h: DistMatrix, b_h: DistMatrix) -> tuple:
+        """Guard-check coerced handles and build the executable's operand
+        tuple — exactly the arguments ``self._exec`` is called with.
+
+        Shared by ``_execute`` and the static analyzer
+        (``repro.analysis.jaxpr_lint.trace_plan``), so the linted trace is
+        the executed trace: packed wire trees, steal3d aux and sparse
+        pair lists included.
+        """
         if (a_h.abstract_key(), b_h.abstract_key()) != (self._a_key,
                                                         self._b_key):
             raise ValueError(
@@ -2157,10 +2166,8 @@ class MatmulPlan:
                         self.algorithm.a_placement)["blocks"]}
             else:
                 a_tree = a_h.placed(self.algorithm.a_placement)
-            c = self._exec(a_tree,
-                           b_h.placed(self.algorithm.b_placement),
-                           self._aux)
-            return self._epilogue(c, a_h, b_h)
+            return (a_tree, b_h.placed(self.algorithm.b_placement),
+                    self._aux)
         packed = self.wire == "packed"
         if self.symbolic is not None:
             sym = self.symbolic
@@ -2176,8 +2183,7 @@ class MatmulPlan:
                 else {"blocks": a_h.placed(pl_a)["blocks"]}
             b_tree = b_h.packed_wire(pl_b) if packed \
                 else {"blocks": b_h.placed(pl_b)["blocks"]}
-            c_blocks = self._exec(a_tree, b_tree, self._pairs)
-            return self._epilogue_sparse(c_blocks, a_h, b_h)
+            return (a_tree, b_tree, self._pairs)
         if packed:
             for who, h in (("a", a_h), ("b", b_h)):
                 if who in self._packs \
@@ -2193,10 +2199,16 @@ class MatmulPlan:
             b_tree = b_h.packed_wire(self.algorithm.b_placement) \
                 if "b" in self._packs \
                 else b_h.placed(self.algorithm.b_placement)
-            c = self._exec(a_tree, b_tree, self._aux)
-            return self._epilogue(c, a_h, b_h)
-        c = self._exec(a_h.placed(self.algorithm.a_placement),
-                       b_h.placed(self.algorithm.b_placement))
+            return (a_tree, b_tree, self._aux)
+        return (a_h.placed(self.algorithm.a_placement),
+                b_h.placed(self.algorithm.b_placement))
+
+    def _execute(self, a, b):
+        a_h, b_h = _coerce_pair(a, b, g=self.geom.g,
+                                allow_pad=self._allow_pad)
+        c = self._exec(*self._operands(a_h, b_h))
+        if self.symbolic is not None:
+            return self._epilogue_sparse(c, a_h, b_h)
         return self._epilogue(c, a_h, b_h)
 
     def _epilogue_sparse(self, c_blocks: jnp.ndarray, a_h: DistBSR,
@@ -2249,6 +2261,42 @@ class MatmulPlan:
         return c[:a_h.logical_shape[0], :b_h.logical_shape[1]]
 
     # ------------------------------------------------------------- analysis
+    def validate(self, mode: str = "fast", a=None, b=None) -> None:
+        """Statically verify this plan (see DESIGN.md "Static analysis").
+
+        ``mode="fast"`` runs the host-side schedule checker over the
+        plan's metadata (ppermute bijections, steal3d exactly-once +
+        conservation, packed-wire consume-map contracts, sparse pair
+        lists, balance perms).  ``mode="full"`` additionally traces the
+        executable and runs the jaxpr lint (sort/scatter-free scan
+        steps, collective count vs the cost model, overlap-carry
+        happens-before).  Raises
+        :class:`repro.analysis.PlanValidationError` on any finding.
+
+        Results are memoized per plan and mode, so validating a cached
+        plan is a set lookup — ``plan_matmul(validate="fast")`` on a
+        warm cache costs nothing.
+        """
+        if mode == "off":
+            return
+        if mode not in ("fast", "full"):
+            raise ValueError(
+                f"unknown validate mode {mode!r} "
+                "(expected 'off', 'fast' or 'full')")
+        if mode in self._validated:
+            return
+        from repro import analysis as _analysis
+        with _obs.span("plan_build.validate", mode=mode,
+                       algorithm=self.algorithm.name):
+            findings = _analysis.check_plan(self, a, b)
+            if mode == "full" and not findings:
+                findings = _analysis.lint_plan(self, a, b)
+            if findings:
+                raise _analysis.PlanValidationError(findings)
+        self._validated.add(mode)
+        if mode == "full":
+            self._validated.add("fast")   # full subsumes fast
+
     def cost_model(self, a: Optional[DistBSR] = None) -> Dict[str, float]:
         """Per-step volume / flops of one plan execution (per device).
 
@@ -2633,7 +2681,8 @@ def _plan_matmul_impl(a, b, *, algorithm: str = "ring_c", mesh=None,
                 machine: Optional["_roofline.Machine"] = None,
                 output: str = "dense",
                 sparse_threshold: Optional[float] = None,
-                wire: str = "auto", overlap: str = "auto") -> MatmulPlan:
+                wire: str = "auto", overlap: str = "auto",
+                validate: str = "off") -> MatmulPlan:
     """Build (or fetch from the shared cache) a plan for ``a @ b``.
 
     ``a`` / ``b`` may be :class:`DistMatrix` handles (preferred — placement
@@ -2680,7 +2729,19 @@ def _plan_matmul_impl(a, b, *, algorithm: str = "ring_c", mesh=None,
     explicit ``"on"`` splits it.  The mode also feeds auto-selection's
     comm-hiding credit (see :func:`auto_select`) and joins the cache
     key.
+
+    ``validate`` statically verifies the plan before handing it back
+    (see DESIGN.md "Static analysis"): ``"off"`` (default) skips,
+    ``"fast"`` runs the host-side schedule checker (ppermute bijections,
+    steal3d exactly-once, packed consume-map contracts, sparse pair
+    lists, balance perms), ``"full"`` additionally traces the executable
+    and runs the jaxpr lint.  Verification is memoized per plan, so a
+    cache hit revalidates for free; any finding raises
+    :class:`repro.analysis.PlanValidationError` with named rule ids.
     """
+    if validate not in ("off", "fast", "full"):
+        raise ValueError(f"unknown validate {validate!r}; one of "
+                         "('off', 'fast', 'full')")
     a_h, b_h = _coerce_pair(a, b, g=g, allow_pad=allow_pad)
     overlap = _resolve_overlap(overlap)
     if output not in ("dense", "sparse", "auto"):
@@ -2762,6 +2823,7 @@ def _plan_matmul_impl(a, b, *, algorithm: str = "ring_c", mesh=None,
         if plan is not None:
             if auto_scores is not None and plan.auto_scores is None:
                 plan.auto_scores = auto_scores   # record for introspection
+            plan.validate(validate, a_h, b_h)
             return plan
     # Scanned schedules double-buffer on "auto" (the split is a pure
     # scan reordering — free).  steal3d's own/stolen segment split costs
@@ -2803,6 +2865,7 @@ def _plan_matmul_impl(a, b, *, algorithm: str = "ring_c", mesh=None,
                           steal=steal, wire=wire, packs=packs,
                           wire_aux=wire_aux, wire_caps=wire_caps,
                           wire_fps=wire_fps, overlap=overlap)
+    plan.validate(validate, a_h, b_h)
     if cache:
         _PLAN_CACHE[key] = plan
     return plan

@@ -46,7 +46,86 @@ from .grid import bucket_capacity
 from .schedule import Assignment3D, assign_3d_lpt
 from .symbolic import extract_structure
 
-__all__ = ["StealPlan", "build_steal_plan"]
+__all__ = ["StealPlan", "build_steal_plan", "validate_assignment"]
+
+
+def validate_assignment(asg: Assignment3D, g: int,
+                        cost_ik: Optional[np.ndarray] = None
+                        ) -> Assignment3D:
+    """Fail fast on an :class:`Assignment3D` that cannot compile.
+
+    The steal3d builder turns the assignment into gather indices and pair
+    lists with no further checks, so a hand-built (or elastically
+    rebuilt) assignment that breaks the invariants used to surface as
+    silently wrong results or shape errors deep in the move-round
+    construction.  Checked here, with actionable errors:
+
+    * **shape/range** — ``dev`` is an int grid of shape ``(g, g, g)``
+      with every entry a valid device id in ``[0, g*g)``;
+    * **exactly-once + locality** — every (i, k, j) item is assigned to
+      exactly one device (the dense ``dev`` grid guarantees this by
+      construction) that lies in the item's grid row i or grid column j
+      (the 3D locality constraint: anything else has no pool panel to
+      steal from);
+    * **makespan <= owner-computes** — the assignment is no worse than
+      not stealing at all, both on the recorded ``makespan`` /
+      ``owner_makespan`` fields and, when ``cost_ik`` (real block
+      products per (i, k) panel tile, j-independent) is given,
+      recomputed from the actual item costs.
+
+    Returns ``asg`` so it can be used inline.  Raises ``ValueError``.
+    """
+    dev = np.asarray(asg.dev)
+    if dev.shape != (g, g, g):
+        raise ValueError(
+            f"Assignment3D.dev has shape {dev.shape}, expected "
+            f"({g}, {g}, {g}) — one device id per (i, k, j) work item")
+    if not np.issubdtype(dev.dtype, np.integer):
+        raise ValueError(
+            f"Assignment3D.dev must hold integer device ids, got dtype "
+            f"{dev.dtype}")
+    if dev.min() < 0 or dev.max() >= g * g:
+        raise ValueError(
+            f"Assignment3D.dev holds device ids outside [0, {g * g}) "
+            f"(min {int(dev.min())}, max {int(dev.max())}) for a "
+            f"{g}x{g} mesh")
+    r, c = dev // g, dev % g
+    ii = np.arange(g)[:, None, None]
+    jj = np.arange(g)[None, None, :]
+    bad = np.argwhere((r != ii) & (c != jj))
+    if len(bad):
+        i, k, j = (int(x) for x in bad[0])
+        d = int(dev[i, k, j])
+        raise ValueError(
+            f"assignment violates the 3D locality constraint: item "
+            f"({i},{k},{j}) is assigned to device ({d // g},{d % g}), "
+            f"which is in neither grid row {i} nor grid column {j} — it "
+            "has no A/B pool panel to execute from; assign items only to "
+            "devices in their row or column ("
+            f"{len(bad)} violating item(s) total)")
+    if asg.makespan > asg.owner_makespan * (1.0 + 1e-9):
+        raise ValueError(
+            f"assignment records makespan {asg.makespan:.6g} > "
+            f"owner-computes makespan {asg.owner_makespan:.6g} — stealing "
+            "must never lose to not stealing; fall back to the owner "
+            "assignment for these items")
+    if cost_ik is not None:
+        flops = np.broadcast_to(
+            np.asarray(cost_ik, dtype=np.float64)[:, :, None], (g, g, g))
+        loads = np.zeros(g * g)
+        np.add.at(loads, dev.ravel(), flops.ravel())
+        owner = (ii * g + jj) * np.ones((g, g, g), dtype=np.int64)
+        owner_loads = np.zeros(g * g)
+        np.add.at(owner_loads, owner.ravel(), flops.ravel())
+        if float(loads.max()) > float(owner_loads.max()) * (1.0 + 1e-9):
+            raise ValueError(
+                f"assignment's realized makespan {float(loads.max()):.6g} "
+                "(recomputed from the operands' per-item costs) exceeds "
+                f"the owner-computes makespan {float(owner_loads.max()):.6g}"
+                " — this assignment makes the multiply slower than not "
+                "stealing; rebuild it with assign_3d_lpt against the "
+                "current cost grid")
+    return asg
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,7 +185,9 @@ def _item_cost_grid(a_h, g: int) -> Tuple[np.ndarray, Optional[object]]:
 def build_steal_plan(a_h, b_h, geom, *, locality: str = "locality",
                      comm_penalty: float = 1.0,
                      wire: str = "padded",
-                     overlap: bool = False) -> StealPlan:
+                     overlap: bool = False,
+                     assignment: Optional[Assignment3D] = None
+                     ) -> StealPlan:
     """Compile the stealing equilibrium for ``a_h @ b_h`` into a StealPlan.
 
     ``geom`` is the plan's :class:`repro.core.api._Geom`; handles are
@@ -130,6 +211,13 @@ def build_steal_plan(a_h, b_h, geom, *, locality: str = "locality",
     segment 0's pair indices address the *panel-only* pool (zero block
     appended directly after the g panel tiles).  The assignment, cost
     dict and combined pair lists are identical to the non-overlap build.
+
+    ``assignment`` injects a pre-built :class:`Assignment3D` (elastic
+    replanning, experiments) instead of running the LPT; it is validated
+    fail-fast by :func:`validate_assignment` — locality, exactly-once,
+    makespan <= owner-computes against this operand's actual item costs —
+    so a broken hand-built assignment raises an actionable ``ValueError``
+    here rather than silently misbehaving downstream.
     """
     g = geom.g
     n_dev = g * g
@@ -144,9 +232,14 @@ def build_steal_plan(a_h, b_h, geom, *, locality: str = "locality",
     n_real_tile = sa.real.sum(axis=2).astype(np.int64) if sparse_a else None
     wc = _wire.wire_capacity(int(n_real_tile.max()),
                              a_h.tiled.store_capacity) if packed else 0
-    asg = assign_3d_lpt(
-        np.broadcast_to(cost_ik[:, :, None], (g, g, g)).copy(), g,
-        locality=locality, comm_penalty=comm_penalty)
+    if assignment is not None:
+        asg = validate_assignment(assignment, g, cost_ik=cost_ik)
+    else:
+        asg = validate_assignment(
+            assign_3d_lpt(
+                np.broadcast_to(cost_ik[:, :, None], (g, g, g)).copy(), g,
+                locality=locality, comm_penalty=comm_penalty),
+            g, cost_ik=cost_ik)
     dev = asg.dev
 
     # ---- per-device item sets and the tiles they need moved --------------

@@ -26,7 +26,7 @@ def _parse():
     p.add_argument("--check", default="all",
                    choices=["all", "spmm", "spgemm", "spgemm_sparse",
                             "dense", "api", "balance", "steal3d", "wire",
-                            "moe", "train_parallel", "obs"])
+                            "moe", "train_parallel", "obs", "analysis"])
     p.add_argument("--seed", type=int, default=0)
     return p.parse_args()
 
@@ -46,7 +46,7 @@ def main() -> int:
 
     needs_grid = args.check in ("all", "dense", "spmm", "spgemm",
                                 "spgemm_sparse", "api", "balance",
-                                "steal3d", "wire")
+                                "steal3d", "wire", "analysis")
     g = int(np.sqrt(args.devices))
     mesh = None
     if needs_grid:
@@ -262,6 +262,84 @@ def main() -> int:
                    bool((np.asarray(got_new) == np.asarray(got_old)).all()))
         check_flag(f"api/shared_plan_cache (size={api.plan_cache_size()})",
                    api.plan_cache_size() == 1)
+
+    if args.check in ("all", "analysis"):
+        print(f"== static plan verification on {g}x{g} mesh ==")
+        import dataclasses as _dc
+
+        from repro import analysis
+        from repro.core.bsr import rmat_matrix
+        a_d = rmat_matrix(scale=6, edgefactor=8, seed=args.seed)  # skewed
+        b = rng.standard_normal((64, 8)).astype(np.float32)
+        b_sp = random_sparse(64, 64, 0.1, seed=args.seed + 7)
+        a_h = DistBSR.from_dense(a_d, g=g, block_size=4)
+        b_h = DistDense.for_rhs(jnp.asarray(b), a_h)
+        b_sph = DistBSR.from_dense(b_sp, g=g, block_size=4)
+        # healthy plans across the dispatch matrix prove clean — the
+        # collective-count rule only has teeth at g >= 2, so this is the
+        # multi-device leg of the coverage tests
+        combos = []
+        for alg in api.algorithms():
+            for wirem in ("padded", "packed"):
+                for ov in ("off", "on"):
+                    combos.append((alg, b_h, "dense", wirem, ov))
+            combos.append((alg, b_sph, "dense", "padded", "off"))
+        for alg in api.sparse_algorithms():
+            combos.append((alg, b_sph, "sparse", "packed", "off"))
+        n_findings = 0
+        for alg, rhs, out, wirem, ov in combos:
+            plan = api.plan_matmul(a_h, rhs, mesh=mesh, algorithm=alg,
+                                   impl="ref", output=out, wire=wirem,
+                                   overlap=ov)
+            fs = analysis.check_plan(plan, a_h, rhs) \
+                + analysis.lint_plan(plan, a_h, rhs)
+            for f in fs:
+                print(f"    finding [{alg}/{out}/{wirem}/ov={ov}]: {f}")
+            n_findings += len(fs)
+        check_flag(f"analysis/healthy_matrix_clean ({len(combos)} plans)",
+                   n_findings == 0)
+        # validate= plumbing: full verification passes and is memoized
+        plan = api.plan_matmul(a_h, b_h, mesh=mesh, algorithm="ring_c",
+                               impl="ref", validate="full")
+        check_flag("analysis/validate_full_passes",
+                   "full" in plan._validated and "fast" in plan._validated)
+        # n_msgs drift: a schedule charging the wrong message count must
+        # be caught by jaxpr.collective-count (needs g >= 2: at g == 1
+        # the ring perms degenerate and message groups alias)
+        bad = _dc.replace(api.REGISTRY.get("ring_c"), name="bad_msgs",
+                          msgs_per_step=7)
+        api.REGISTRY.register(bad)
+        try:
+            plan = api.plan_matmul(a_h, b_h, mesh=mesh,
+                                   algorithm="bad_msgs", impl="ref",
+                                   cache=False)
+            fs = analysis.lint_plan(plan, a_h, b_h)
+            check_flag("analysis/collective_count_drift_caught",
+                       any(f.rule == "jaxpr.collective-count"
+                           for f in fs))
+            raised = False
+            try:
+                api.plan_matmul(a_h, b_h, mesh=mesh, algorithm="bad_msgs",
+                                impl="ref", cache=False, validate="full")
+            except analysis.PlanValidationError as e:
+                raised = any(f.rule == "jaxpr.collective-count"
+                             for f in e.findings)
+            check_flag("analysis/validate_full_raises_on_drift", raised)
+        finally:
+            api.REGISTRY.unregister("bad_msgs")
+        # corrupted ring permutation at real grid size
+        plan = api.plan_matmul(a_h, b_h, mesh=mesh, algorithm="ring_c",
+                               impl="ref", cache=False)
+        orig_perm = api._ring_perm
+        api._ring_perm = lambda gg, sign=1: tuple(
+            ((d + sign) % gg, 0) for d in range(gg))   # all -> device 0
+        try:
+            fs = analysis.check_plan(plan, a_h, b_h)
+        finally:
+            api._ring_perm = orig_perm
+        check_flag("analysis/corrupt_perm_caught",
+                   any(f.rule == "schedule.ppermute-bijection"
+                       for f in fs))
 
     if args.check in ("all", "moe"):
         print("== MoE dispatch/combine vs dense ==")

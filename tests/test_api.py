@@ -525,39 +525,15 @@ def test_predicted_cost_positive(operands):
 # ---------------------------------------------------------------------------
 # Hot-loop hygiene: no coverage sort / B densification inside the scan
 # ---------------------------------------------------------------------------
-def _subjaxprs(v):
-    from jax import core as jcore
-    if isinstance(v, jcore.ClosedJaxpr):
-        yield v.jaxpr
-    elif isinstance(v, jcore.Jaxpr):
-        yield v
-    elif isinstance(v, (list, tuple)):
-        for x in v:
-            yield from _subjaxprs(x)
-
-
-def _iter_eqns(jaxpr):
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            for sub in _subjaxprs(v):
-                yield from _iter_eqns(sub)
-
-
+# The jaxpr-walk primitives live in repro.analysis.jaxpr_lint (shared
+# with test_wire / test_overlap and the lint rules themselves).
 def _scan_body_primitives(plan, a_h, b_h):
-    import jax
-    pa = a_h.placed(plan.algorithm.a_placement)
-    pb = b_h.placed(plan.algorithm.b_placement)
-    jaxpr = jax.make_jaxpr(lambda a, b: plan._exec(a, b))(pa, pb).jaxpr
-    prims = set()
-    seen_scan = False
-    for eqn in _iter_eqns(jaxpr):
-        if eqn.primitive.name == "scan":
-            seen_scan = True
-            for sub in _iter_eqns(eqn.params["jaxpr"].jaxpr):
-                prims.add(sub.primitive.name)
-    assert seen_scan, "expected a scanned ring loop in the plan executable"
-    return prims
+    from repro.analysis.jaxpr_lint import (scan_body_primitives, scan_eqns,
+                                           trace_plan)
+    jaxpr = trace_plan(plan, a_h, b_h)
+    assert scan_eqns(jaxpr), \
+        "expected a scanned ring loop in the plan executable"
+    return scan_body_primitives(jaxpr)
 
 
 @pytest.mark.parametrize("alg", ["ring_c", "ring_a", "ring_c_bidir"])

@@ -75,30 +75,14 @@ def test_overlap_on_matches_off_across_dispatch_matrix(operands, alg, kind):
 # ---------------------------------------------------------------------------
 # jaxpr structure of the double-buffered bodies
 # ---------------------------------------------------------------------------
-def _subjaxprs(v):
-    from jax import core as jcore
-    if isinstance(v, jcore.ClosedJaxpr):
-        yield v.jaxpr
-    elif isinstance(v, jcore.Jaxpr):
-        yield v
-    elif isinstance(v, (list, tuple)):
-        for x in v:
-            yield from _subjaxprs(x)
-
-
-def _iter_eqns(jaxpr):
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            for sub in _subjaxprs(v):
-                yield from _iter_eqns(sub)
+# walk primitives shared via repro.analysis.jaxpr_lint (single copy for
+# the lint rules and every jaxpr-structure test)
+from repro.analysis.jaxpr_lint import iter_eqns as _iter_eqns  # noqa: E402
+from repro.analysis.jaxpr_lint import scan_eqns, trace_plan  # noqa: E402
 
 
 def _scan_eqns(plan, a_h, rhs_h):
-    pa = a_h.placed(plan.algorithm.a_placement)
-    pb = rhs_h.placed(plan.algorithm.b_placement)
-    jaxpr = jax.make_jaxpr(lambda a, b: plan._exec(a, b))(pa, pb).jaxpr
-    return [e for e in _iter_eqns(jaxpr) if e.primitive.name == "scan"]
+    return scan_eqns(trace_plan(plan, a_h, rhs_h))
 
 
 @pytest.mark.parametrize("kind", ["spmm", "spgemm"])

@@ -356,32 +356,14 @@ def test_steal_cache_lru_bound(operands):
 # ---------------------------------------------------------------------------
 # Hot-loop hygiene: packed scanned steps are gather-only
 # ---------------------------------------------------------------------------
-def _subjaxprs(v):
-    from jax import core as jcore
-    if isinstance(v, jcore.ClosedJaxpr):
-        yield v.jaxpr
-    elif isinstance(v, jcore.Jaxpr):
-        yield v
-    elif isinstance(v, (list, tuple)):
-        for x in v:
-            yield from _subjaxprs(x)
-
-
-def _iter_eqns(jaxpr):
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            for sub in _subjaxprs(v):
-                yield from _iter_eqns(sub)
-
-
 @pytest.mark.parametrize("alg", ["ring_c", "ring_a", "ring_c_bidir"])
 @pytest.mark.parametrize("kind", ["spmm", "spgemm"])
 def test_packed_scan_step_stays_gather_only(operands, alg, kind):
     """The packed ring steps replace coverage sort / B-densify scatter
     with plan-time static gathers; the scanned jaxpr must stay
     sort/scatter-free like the padded invariant in test_api."""
-    import jax
+    from repro.analysis.jaxpr_lint import (scan_body_primitives, scan_eqns,
+                                           trace_plan)
     _, _, _, a_h, b_h, _ = operands
     # hypersparse B so the B-pack win check keeps ring_a on the packed path
     b_hyp = DistBSR.from_dense(random_sparse(16, 16, 0.05, seed=2), g=G,
@@ -391,19 +373,10 @@ def test_packed_scan_step_stays_gather_only(operands, alg, kind):
                        wire="packed")
     if plan.wire != "packed":
         pytest.skip("no packable traffic on this operand combination")
-    pa = a_h.packed_wire(plan.algorithm.a_placement) if "a" in plan._packs \
-        else a_h.placed(plan.algorithm.a_placement)
-    pb = rhs.packed_wire(plan.algorithm.b_placement) if "b" in plan._packs \
-        else rhs.placed(plan.algorithm.b_placement)
-    jaxpr = jax.make_jaxpr(
-        lambda a, b, x: plan._exec(a, b, x))(pa, pb, plan._aux).jaxpr
-    prims, seen_scan = set(), False
-    for eqn in _iter_eqns(jaxpr):
-        if eqn.primitive.name == "scan":
-            seen_scan = True
-            for sub in _iter_eqns(eqn.params["jaxpr"].jaxpr):
-                prims.add(sub.primitive.name)
-    assert seen_scan, "expected a scanned ring loop in the packed plan"
+    jaxpr = trace_plan(plan, a_h, rhs)
+    prims = scan_body_primitives(jaxpr)
+    assert scan_eqns(jaxpr), \
+        "expected a scanned ring loop in the packed plan"
     offenders = {p for p in prims if "sort" in p or "scatter" in p}
     assert not offenders, (
         f"hot-loop bloat in packed {alg}/{kind} scan step: "

@@ -1,244 +1,27 @@
 #!/usr/bin/env python
 """API-hygiene guard: keep first-party code on the plan-based API.
 
-Three classes of violation:
+This is a thin CLI shim over :mod:`repro.analysis.source_rules`, the
+pluggable rule registry the guard grew into (see DESIGN.md "Static
+analysis").  The rules and output are byte-compatible with the original
+standalone script; the registry adds ``--list-rules``, ``--json`` and
+per-line ``# analysis: allow(<rule-id>)`` waiver pragmas.
 
-* The free functions in ``repro.core.spmm`` (``spmm`` / ``spgemm`` /
-  ``dense_matmul``) are deprecated shims kept only for downstream
-  compatibility; first-party code must go through ``repro.core.api``
-  (``matmul`` / ``plan_matmul`` / ``DistBSR`` / ``DistDense``).
-* The Pallas kernel module ``repro.kernels.bsr_spmm`` is an internal
-  implementation detail behind ``repro.kernels.ops`` and the planner;
-  importing it directly bypasses impl dispatch, the coverage contract and
-  the plan cache.
-* The SpGEMM symbolic phase ``repro.core.symbolic`` and the steal3d
-  planner ``repro.core.steal3d`` are internal to ``repro/core``: their
-  public surfaces are re-exported by / reachable through
-  ``repro.core.api`` (``symbolic_spgemm`` / ``SymbolicProduct`` /
-  ``plan_matmul(algorithm="steal3d")``), and plans own the
-  pair-list -> executable coupling.  Importing them anywhere outside
-  ``src/repro/core`` bypasses the structure-keyed plan cache.
-
-One more hygiene rule rides along: ``XLA_FLAGS`` is read by XLA exactly
-once, at first backend init, so scattered ``os.environ`` writes are
-silently dead or clobber each other.  ``repro/runtime/platform.py`` is
-the repo's single allowed write site (merge semantics + init guard);
-every other file must go through its ``set_platform`` /
-``set_host_device_count`` / ``subprocess_env`` helpers, and this script
-flags any direct ``...["XLA_FLAGS"] = ...`` / ``.setdefault("XLA_FLAGS",
-...)`` elsewhere.
-
-This script AST-scans each module's watched directories for imports and
-exits non-zero on any hit outside the allowed prefixes.  It is also run by
-``tests/test_api.py`` so the guard rides tier-1.
-
-Usage:  python tools/check_api.py  [repo_root]
+Usage:  python tools/check_api.py  [repo_root]  [--json] [--list-rules]
 """
 from __future__ import annotations
 
-import ast
 import pathlib
 import sys
-from typing import List, Optional
 
-# module -> scan config:
-#   parent/leaf  : detect `from parent import leaf`
-#   dirs         : repo-relative directories to scan
-#   allow        : path prefixes (relative, posix) where the import is fine
-FORBIDDEN_MODULES = {
-    "repro.core.spmm": {
-        "parent": "repro.core", "leaf": "spmm",
-        "dirs": ("examples", "benchmarks"), "allow": (),
-    },
-    "repro.kernels.bsr_spmm": {
-        "parent": "repro.kernels", "leaf": "bsr_spmm",
-        "dirs": ("examples", "benchmarks"), "allow": (),
-    },
-    "repro.core.symbolic": {
-        "parent": "repro.core", "leaf": "symbolic",
-        "dirs": ("examples", "benchmarks", "tools", "tests", "src/repro"),
-        "allow": ("src/repro/core",),
-    },
-    # The steal3d planner couples LPT assignments to executables the same
-    # way the symbolic phase couples pair lists: plans own that coupling,
-    # so the builder is internal to repro/core (use
-    # plan_matmul(algorithm="steal3d")).
-    "repro.core.steal3d": {
-        "parent": "repro.core", "leaf": "steal3d",
-        "dirs": ("examples", "benchmarks", "tools", "tests", "src/repro"),
-        "allow": ("src/repro/core",),
-    },
-    # The packed wire layer couples consume maps / remapped pair lists to
-    # executables exactly like the symbolic phase; its public surface is
-    # plan_matmul(wire="packed") plus the repro.core.api re-exports
-    # (PackedOperand / wire_capacity / DistBSR.packed_operand).
-    "repro.core.wire": {
-        "parent": "repro.core", "leaf": "wire",
-        "dirs": ("examples", "benchmarks", "tools", "tests", "src/repro"),
-        "allow": ("src/repro/core",),
-    },
-    # The serving engine's slot/cache-splicing internals are not API:
-    # import ServeEngine from repro.serving (the package __init__), which
-    # owns the admission/batching/metrics surface.
-    "repro.serving.engine": {
-        "parent": "repro.serving", "leaf": "engine",
-        "dirs": ("examples", "benchmarks", "tools", "tests", "src/repro"),
-        "allow": ("src/repro/serving",),
-    },
-}
+sys.path.insert(
+    0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-
-# XLA_FLAGS write ban: scanned dirs and the single allowed writer.
-XLA_FLAG_DIRS = ("src/repro", "examples", "benchmarks", "tools", "tests")
-XLA_FLAG_ALLOW = ("src/repro/runtime/platform.py",)
-
-
-# Raw-perf_counter timing ban: jax dispatch is asynchronous, so a
-# perf_counter pair around a jax call times the *dispatch*, not the work
-# (the timing smear PR 6 fixed in launch/serve.py).  Any function that
-# reads perf_counter twice or more must reference one of the sanctioned
-# blocking helpers (``block_until_ready`` directly, or ``sync_elapsed`` /
-# ``timed`` from ``repro.obs``) in the same scope.  ``repro/obs`` and the
-# thin re-export in ``serving/metrics.py`` are the helpers' home.
-PERF_COUNTER_DIRS = ("src/repro", "examples", "benchmarks", "tools")
-PERF_COUNTER_ALLOW = ("src/repro/obs", "src/repro/serving/metrics.py")
-PERF_COUNTER_BLOCKERS = ("block_until_ready", "sync_elapsed", "timed")
-
-
-def _perf_counter_hits(tree: ast.AST) -> List:
-    """Functions timing with >= 2 raw perf_counter reads and no blocking
-    discipline (no block_until_ready/sync_elapsed/timed reference)."""
-    hits = []
-    for node in ast.walk(tree):
-        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
-            continue
-        n_pc = 0
-        blocked = False
-        for sub in ast.walk(node):
-            if isinstance(sub, ast.Call):
-                f = sub.func
-                name = f.attr if isinstance(f, ast.Attribute) else \
-                    f.id if isinstance(f, ast.Name) else None
-                if name == "perf_counter":
-                    n_pc += 1
-            ref = sub.attr if isinstance(sub, ast.Attribute) else \
-                sub.id if isinstance(sub, ast.Name) else None
-            if ref in PERF_COUNTER_BLOCKERS:
-                blocked = True
-        if n_pc >= 2 and not blocked:
-            hits.append(
-                (node.lineno,
-                 f"function {node.name!r} times with raw perf_counter "
-                 "pairs and never blocks (use obs.sync_elapsed / "
-                 "obs.timed / block_until_ready)"))
-    return hits
-
-
-def _is_xla_key(node) -> bool:
-    return isinstance(node, ast.Constant) and node.value == "XLA_FLAGS"
-
-
-def _xla_flag_hits(tree: ast.AST) -> List:
-    """Direct XLA_FLAGS writes: ``env["XLA_FLAGS"] = ...`` (any mapping)
-    and ``.setdefault("XLA_FLAGS", ...)``."""
-    hits = []
-    for node in ast.walk(tree):
-        if isinstance(node, (ast.Assign, ast.AugAssign)):
-            targets = node.targets if isinstance(node, ast.Assign) \
-                else [node.target]
-            for t in targets:
-                if isinstance(t, ast.Subscript) and _is_xla_key(t.slice):
-                    hits.append(
-                        (node.lineno, 'sets ["XLA_FLAGS"] directly '
-                         "(use repro.runtime.platform)"))
-        elif isinstance(node, ast.Call):
-            f = node.func
-            if (isinstance(f, ast.Attribute) and f.attr == "setdefault"
-                    and node.args and _is_xla_key(node.args[0])):
-                hits.append(
-                    (node.lineno, 'setdefault("XLA_FLAGS", ...) '
-                     "(use repro.runtime.platform)"))
-    return hits
-
-
-def _module_hits(tree: ast.AST, mod: str, parent: str, leaf: str) -> List:
-    hits = []
-    for node in ast.walk(tree):
-        if isinstance(node, ast.Import):
-            for alias in node.names:
-                name = alias.name
-                if name == mod or name.startswith(mod + "."):
-                    hits.append((node.lineno, f"import {name}"))
-        elif isinstance(node, ast.ImportFrom):
-            src = node.module or ""
-            if src == mod or src.startswith(mod + "."):
-                hits.append((node.lineno, f"from {src} import ..."))
-            elif src == parent:
-                for alias in node.names:
-                    if alias.name == leaf:
-                        hits.append((node.lineno,
-                                     f"from {parent} import {leaf}"))
-    return hits
-
-
-def violations(root: Optional[str] = None) -> List[str]:
-    root_path = pathlib.Path(root) if root else \
-        pathlib.Path(__file__).resolve().parents[1]
-    out: List[str] = []
-    for mod, cfg in FORBIDDEN_MODULES.items():
-        for sub in cfg["dirs"]:
-            base = root_path / sub
-            if not base.is_dir():
-                continue
-            for path in sorted(base.glob("**/*.py")):
-                rel = path.relative_to(root_path)
-                if any(rel.as_posix().startswith(pre + "/") or
-                       rel.as_posix() == pre for pre in cfg["allow"]):
-                    continue
-                tree = ast.parse(path.read_text(), filename=str(path))
-                for lineno, desc in _module_hits(tree, mod, cfg["parent"],
-                                                 cfg["leaf"]):
-                    out.append(f"{rel}:{lineno}: {desc}")
-    for sub in XLA_FLAG_DIRS:
-        base = root_path / sub
-        if not base.is_dir():
-            continue
-        for path in sorted(base.glob("**/*.py")):
-            rel = path.relative_to(root_path)
-            if rel.as_posix() in XLA_FLAG_ALLOW:
-                continue
-            tree = ast.parse(path.read_text(), filename=str(path))
-            for lineno, desc in _xla_flag_hits(tree):
-                out.append(f"{rel}:{lineno}: {desc}")
-    for sub in PERF_COUNTER_DIRS:
-        base = root_path / sub
-        if not base.is_dir():
-            continue
-        for path in sorted(base.glob("**/*.py")):
-            rel = path.relative_to(root_path)
-            rp = rel.as_posix()
-            if any(rp == pre or rp.startswith(pre + "/")
-                   for pre in PERF_COUNTER_ALLOW):
-                continue
-            tree = ast.parse(path.read_text(), filename=str(path))
-            for lineno, desc in _perf_counter_hits(tree):
-                out.append(f"{rel}:{lineno}: {desc}")
-    return sorted(set(out))
-
-
-def main(argv: Optional[List[str]] = None) -> int:
-    argv = sys.argv[1:] if argv is None else argv
-    found = violations(argv[0] if argv else None)
-    if found:
-        print("deprecated/internal module usage (use repro.core.api):")
-        for v in found:
-            print(f"  {v}")
-        return 1
-    scanned = sorted({d for cfg in FORBIDDEN_MODULES.values()
-                      for d in cfg["dirs"]})
-    print(f"check_api: OK ({', '.join(scanned)} are plan-API clean)")
-    return 0
-
+from repro.analysis.source_rules import (  # noqa: E402,F401
+    FORBIDDEN_MODULES, PERF_COUNTER_ALLOW, PERF_COUNTER_BLOCKERS,
+    PERF_COUNTER_DIRS, RULES, XLA_FLAG_ALLOW, XLA_FLAG_DIRS, SourceRule,
+    _module_hits, _perf_counter_hits, _xla_flag_hits, iter_rules, main,
+    violations)
 
 if __name__ == "__main__":
     sys.exit(main())
