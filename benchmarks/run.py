@@ -17,7 +17,9 @@ root: plan build time, per-multiply time, padded-flop waste, output
 footprint, ``wire_bytes_padded`` vs ``wire_bytes_packed``,
 per-schedule ``comm_exposed`` with overlap on vs off, and
 predicted-vs-measured cost per algorithm — the perf-trajectory
-baseline for future PRs.  It also
+baseline for future PRs.  The ``elastic`` section (``elastic_bench``,
+9-device subprocess) records time-to-recover from a 5-of-9 device loss
+against a cold rebuild, plus post-recovery per-multiply time.  It also
 captures a ``serve_trace`` section (``serve_bench``: Poisson arrivals
 through the sparse ``ServeEngine``) with p50/p99 TTFT/TPOT,
 plans-per-second and the plan-cache hit rate.  Each
@@ -125,6 +127,7 @@ def _write_json(smoke: bool) -> None:
             ("benchmarks.wire_bench", "wire_rmat_4x4", 16),
             ("benchmarks.overlap_bench", "overlap_rmat_4x4", 16),
             ("benchmarks.analysis_bench", "analysis", 16),
+            ("benchmarks.elastic_bench", "elastic", 9),
             ("benchmarks.serve_bench", "serve_trace", 1)):
         raw = _run_subprocess(module, devices, *extra, quiet=True)
         try:
@@ -192,8 +195,11 @@ def main() -> None:
         # wire_bench additionally *asserts* packed wire bytes <= padded and
         # packed results allclose to padded; overlap_bench asserts the
         # overlap A-B contract (double-buffered results allclose to bulk,
-        # exposed comm no worse beyond measurement tolerance); serve_bench
-        # asserts the serving contract (dense-reference match, plan hits >
+        # exposed comm no worse beyond measurement tolerance);
+        # elastic_bench asserts the device-loss recovery contract
+        # (recovered product allclose, time-to-recover within slack of a
+        # cold rebuild, replan counters recorded); serve_bench asserts
+        # the serving contract (dense-reference match, plan hits >
         # misses, zero dropped tokens) — all exit non-zero on violation
         for module, devices in (("benchmarks.balance_bench", 16),
                                 ("benchmarks.spgemm_bench", 16),
@@ -201,6 +207,7 @@ def main() -> None:
                                 ("benchmarks.wire_bench", 16),
                                 ("benchmarks.overlap_bench", 16),
                                 ("benchmarks.analysis_bench", 16),
+                                ("benchmarks.elastic_bench", 9),
                                 ("benchmarks.serve_bench", 1)):
             raw = _run_subprocess(module, devices, "--smoke", quiet=True)
             name = module.rsplit(".", 1)[1]

@@ -21,7 +21,7 @@ finding.
 from .findings import Finding, PlanValidationError
 from .jaxpr_lint import (iter_eqns, lint_plan, scan_body_primitives,
                          scan_eqns, subjaxprs, trace_plan)
-from .schedule_check import check_plan
+from .schedule_check import check_plan, check_survivor_coverage
 
 from . import jaxpr_lint, schedule_check, source_rules
 
@@ -33,7 +33,8 @@ def all_rules():
 
 
 __all__ = [
-    "Finding", "PlanValidationError", "check_plan", "lint_plan",
+    "Finding", "PlanValidationError", "check_plan",
+    "check_survivor_coverage", "lint_plan",
     "trace_plan", "subjaxprs", "iter_eqns", "scan_eqns",
     "scan_body_primitives", "all_rules", "jaxpr_lint", "schedule_check",
     "source_rules",

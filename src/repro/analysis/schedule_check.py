@@ -887,6 +887,61 @@ def check_steal(plan, a_h) -> List[Finding]:
     return findings
 
 
+def check_survivor_coverage(assignment, g: int,
+                            survivors=None) -> List[Finding]:
+    """``schedule.survivor-coverage``: a rebuilt assignment matches the
+    surviving mesh.
+
+    The elastic-recovery gate (``repro.runtime.replan``): after device
+    loss, the steal3d :class:`~repro.core.schedule.Assignment3D` is
+    rebuilt for a shrunken ``g x g`` grid.  This rule proves the rebuilt
+    assignment covers *exactly* that grid's work: the work grid has the
+    new shape, every (i, k, j) item is assigned (no ``-1`` holes), every
+    referenced device id is a live position of the new mesh (``[0,
+    g^2)``), and — when the surviving device collection is given — the
+    new grid actually fits on it.  Locality/makespan invariants stay with
+    ``validate_assignment``; this is purely the coverage contract.
+    """
+    rule = "schedule.survivor-coverage"
+    findings: List[Finding] = []
+    dev = np.asarray(assignment.dev if hasattr(assignment, "dev")
+                     else assignment)
+    if dev.shape != (g, g, g):
+        return [Finding(rule,
+                        f"assignment work grid has shape {dev.shape}, "
+                        f"expected {(g, g, g)} for the surviving "
+                        f"{g}x{g} mesh", subject="steal3d")]
+    if not np.issubdtype(dev.dtype, np.integer):
+        return [Finding(rule,
+                        f"assignment device ids must be integers, got "
+                        f"dtype {dev.dtype}", subject="steal3d")]
+    if survivors is not None:
+        n_surv = survivors if isinstance(survivors, int) \
+            else len(tuple(survivors))
+        if g * g > n_surv:
+            findings.append(Finding(
+                rule,
+                f"a {g}x{g} grid needs {g * g} devices but only "
+                f"{n_surv} survive", subject="steal3d"))
+    unassigned = int((dev < 0).sum())
+    if unassigned:
+        holes = np.argwhere(dev < 0)[:3].tolist()
+        findings.append(Finding(
+            rule,
+            f"{unassigned} work item(s) unassigned (dev < 0), e.g. "
+            f"{holes} — recovery would silently drop their block "
+            "products", subject="steal3d"))
+    dead = int((dev >= g * g).sum())
+    if dead:
+        ids = sorted(set(int(d) for d in dev[dev >= g * g].ravel()))[:4]
+        findings.append(Finding(
+            rule,
+            f"{dead} work item(s) assigned to device ids {ids} outside "
+            f"the surviving mesh's [0, {g * g}) — those positions no "
+            "longer exist", subject="steal3d"))
+    return findings
+
+
 # ---------------------------------------------------------------------------
 # entry point
 # ---------------------------------------------------------------------------
@@ -908,6 +963,10 @@ RULES = (
      "exactly once, slot-sorted with full coverage"),
     ("schedule.balance-identity",
      "balance permutations compose to identity through the epilogue"),
+    ("schedule.survivor-coverage",
+     "a rebuilt steal3d assignment covers exactly the surviving mesh's "
+     "work items: every (i,k,j) assigned, only surviving devices "
+     "referenced, grid fits the survivor count"),
 )
 
 

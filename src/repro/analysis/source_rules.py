@@ -94,6 +94,20 @@ XLA_FLAG_DIRS = ("src/repro", "examples", "benchmarks", "tools", "tests")
 XLA_FLAG_ALLOW = ("src/repro/runtime/platform.py",)
 
 
+# Direct Assignment3D construction ban: a hand-rolled 3D assignment
+# bypasses validate_assignment's fail-fast invariant checks (locality,
+# exactly-once, makespan <= owner-computes), so every rebuilt assignment
+# must flow through core/steal3d.py (the planner) or runtime/replan.py
+# (elastic recovery) — both gate on validate_assignment before the
+# assignment reaches an executable.  core/schedule.py defines the class
+# and its one sanctioned constructor (assign_3d_lpt).
+ASSIGNMENT3D_DIRS = ("src/repro", "examples", "benchmarks", "tools",
+                     "tests")
+ASSIGNMENT3D_ALLOW = ("src/repro/core/schedule.py",
+                      "src/repro/core/steal3d.py",
+                      "src/repro/runtime/replan.py")
+
+
 # Raw-perf_counter timing ban: jax dispatch is asynchronous, so a
 # perf_counter pair around a jax call times the *dispatch*, not the work
 # (the timing smear PR 6 fixed in launch/serve.py).  Any function that
@@ -165,6 +179,24 @@ def _xla_flag_hits(tree: ast.AST) -> List:
     return hits
 
 
+def _assignment3d_hits(tree: ast.AST) -> List:
+    """Direct ``Assignment3D(...)`` calls (by name or attribute)."""
+    hits = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        name = f.attr if isinstance(f, ast.Attribute) else \
+            f.id if isinstance(f, ast.Name) else None
+        if name == "Assignment3D":
+            hits.append(
+                (node.lineno,
+                 "constructs Assignment3D directly (build it with "
+                 "assign_3d_lpt or inject via plan_matmul(assignment=...) "
+                 "so validate_assignment gates it)"))
+    return hits
+
+
 def _module_hits(tree: ast.AST, mod: str, parent: str, leaf: str) -> List:
     hits = []
     for node in ast.walk(tree):
@@ -223,6 +255,16 @@ def _make_rules() -> Tuple[SourceRule, ...]:
         dirs=XLA_FLAG_DIRS,
         allow=XLA_FLAG_ALLOW,
         scan=_xla_flag_hits,
+    ))
+    rules.append(SourceRule(
+        id="source.assignment3d-construction",
+        description="Assignment3D is constructed only by core/schedule.py "
+                    "(assign_3d_lpt), core/steal3d.py and runtime/"
+                    "replan.py, so every assignment passes "
+                    "validate_assignment",
+        dirs=ASSIGNMENT3D_DIRS,
+        allow=ASSIGNMENT3D_ALLOW,
+        scan=_assignment3d_hits,
     ))
     rules.append(SourceRule(
         id="source.perf-counter-discipline",

@@ -5,12 +5,13 @@
 # Public surface: the plan-based distributed-matmul API (see DESIGN.md).
 from .api import (REGISTRY, AlgorithmRegistry, DistBSR, DistDense,
                   DistMatrix, MatmulPlan, SymbolicProduct, algorithms,
-                  clear_plan_cache, matmul, plan_matmul, register_algorithm,
-                  sparse_algorithms, symbolic_spgemm)
+                  clear_plan_cache, invalidate_plans, matmul, plan_matmul,
+                  register_algorithm, reshard, sparse_algorithms,
+                  symbolic_spgemm)
 
 __all__ = [
     "REGISTRY", "AlgorithmRegistry", "DistBSR", "DistDense", "DistMatrix",
     "MatmulPlan", "SymbolicProduct", "algorithms", "clear_plan_cache",
-    "matmul", "plan_matmul", "register_algorithm", "sparse_algorithms",
-    "symbolic_spgemm",
+    "invalidate_plans", "matmul", "plan_matmul", "register_algorithm",
+    "reshard", "sparse_algorithms", "symbolic_spgemm",
 ]

@@ -96,7 +96,7 @@ from . import wire as _wire
 from .bsr import TiledBSR
 from .dist import (make_grid_mesh, place_b_for_stationary_a, skew_bsr,
                    skew_dense, unskew_c_rows)
-from .grid import ProcessGrid, pad_to_multiple
+from .grid import ProcessGrid, bucket_capacity, ceil_div, pad_to_multiple
 from .symbolic import (SymbolicProduct, predicted_density,  # re-export
                        symbolic_spgemm)                     # (public)
 from .wire import PackedOperand, wire_capacity              # re-export
@@ -111,6 +111,7 @@ __all__ = [
     "PackedOperand", "wire_capacity",
     "add_trace_hook", "remove_trace_hook",
     "clear_plan_cache", "plan_cache_size", "cache_stats",
+    "invalidate_plans", "reshard",
     "validate_mesh",
 ]
 
@@ -327,9 +328,71 @@ def set_drift_machine(machine) -> None:
     _DRIFT_MACHINE = machine
 
 
-def _evict_plans_for_algorithm(name: str) -> None:
-    for key in [k for k in _PLAN_CACHE if k[0] == name]:
+def _key_g(abstract_key) -> Optional[int]:
+    """Grid size of a handle abstract key (None for unrecognized keys)."""
+    if not isinstance(abstract_key, tuple) or not abstract_key:
+        return None
+    if abstract_key[0] == "bsr":
+        return int(abstract_key[2][0])
+    if abstract_key[0] == "dense":
+        return int(abstract_key[2])
+    return None
+
+
+def invalidate_plans(*, algorithm: Optional[str] = None,
+                     structure: Optional[str] = None,
+                     g: Optional[int] = None) -> int:
+    """Keyed plan-cache invalidation: evict only the entries matching every
+    given filter (AND semantics; at least one filter is required).
+
+    * ``algorithm`` — a registry name: entries whose schedule it is.
+    * ``structure`` — a structure fingerprint (``DistBSR.structure_key()``):
+      entries planned against that sparsity structure, including the
+      symbolic/density/steal side caches keyed on fingerprints.
+    * ``g`` — a grid size: entries planned for a g x g mesh (the filter a
+      mesh-shrink recovery uses to drop every plan of the lost grid).
+
+    This is the elastic replanner's eviction primitive: a drift-triggered
+    re-fit drops only the algorithm whose cost model moved, a device-loss
+    recovery drops only the dead grid's plans, and everything else stays
+    hot.  Returns the number of entries evicted across all caches.
+    """
+    if algorithm is None and structure is None and g is None:
+        raise ValueError(
+            "invalidate_plans requires at least one of algorithm=, "
+            "structure=, g= (use clear_plan_cache() to drop everything)")
+
+    def plan_key_matches(k) -> bool:
+        if algorithm is not None and k[0] != algorithm:
+            return False
+        if g is not None and _key_g(k[7]) != g and _key_g(k[8]) != g:
+            return False
+        if structure is not None and structure not in k[9:]:
+            return False
+        return True
+
+    evicted = 0
+    for key in [k for k in _PLAN_CACHE if plan_key_matches(k)]:
         del _PLAN_CACHE[key]
+        evicted += 1
+    # Side caches are keyed on fingerprints/abstract shapes, not algorithm:
+    # sweep them only for structure / grid filters.
+    if structure is not None or g is not None:
+        for key in [k for k in _STEAL_CACHE
+                    if (structure is None or structure == k[2])
+                    and (g is None or _key_g(k[0]) == g)]:
+            del _STEAL_CACHE[key]
+            evicted += 1
+        if algorithm is None and structure is not None:
+            for cache in (_SYMBOLIC_CACHE, _DENSITY_CACHE):
+                for key in [k for k in cache if structure in k]:
+                    del cache[key]
+                    evicted += 1
+    return evicted
+
+
+def _evict_plans_for_algorithm(name: str) -> None:
+    invalidate_plans(algorithm=name)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -1150,16 +1213,26 @@ def _body_ring_c_bidir(a, b, geom: _Geom):
 # steal3d: static 3D work-grid dispatch from the stealing equilibrium
 # ---------------------------------------------------------------------------
 def _steal_plan_for(a_h: "DistMatrix", b_h: "DistMatrix", geom: _Geom,
-                    wire: str = "padded") -> "_steal3d.StealPlan":
+                    wire: str = "padded",
+                    assignment=None) -> "_steal3d.StealPlan":
     """Memoized steal3d planner (LPT assignment + pair lists + rounds).
 
     auto_select scoring shares this cache with plan construction: the one
     full build per operand structure (and wire mode) also serves the cost
     entry, and is reused outright if steal3d wins the race.
+
+    An injected ``assignment`` (elastic recovery) bypasses the memo both
+    ways: the plan is built fresh against it (``build_steal_plan`` runs
+    its fail-fast invariant checks) and never enters the shared cache.
     """
     skey = a_h.structure_key() if isinstance(a_h, DistBSR) else None
     if not (wire == "packed" and isinstance(a_h, DistBSR)):
         wire = "padded"      # dense A has no packable steal3d traffic
+    if assignment is not None:
+        with _obs.span("plan_build.steal", wire=wire, injected=True):
+            return _steal3d.build_steal_plan(a_h, b_h, geom, wire=wire,
+                                             overlap=geom.overlap,
+                                             assignment=assignment)
     key = (a_h.abstract_key(), b_h.abstract_key(), skey, wire, geom.overlap)
     sp = _STEAL_CACHE.get(key)
     if sp is None:
@@ -1679,6 +1752,118 @@ class DistDense(DistMatrix):
     def abstract_key(self) -> tuple:
         return ("dense", self.data.shape, self._g,
                 jnp.dtype(self.data.dtype).name)
+
+
+def _reshard_bsr(h: DistBSR, g: int, capacity) -> DistBSR:
+    t = h.tiled
+    if t.row_block_perm is not None or t.col_block_perm is not None:
+        raise ValueError(
+            "reshard does not support balanced handles (the balance "
+            "permutation is tied to the old grid); rebuild with "
+            "DistBSR.from_dense(balance=...) on the new grid")
+    bs = t.block_size
+    g_old = h.g
+    s = h.grid_structure()          # host-side rows/cols/real (cached)
+    nbr_old, nbc_old = s.tile_nbr, s.tile_nbc
+    m, n = h.logical_shape
+    tm = pad_to_multiple(ceil_div(m, g), bs)
+    tn = pad_to_multiple(ceil_div(n, g), bs)
+    nbr, nbc = tm // bs, tn // bs
+    rows_h = np.asarray(s.rows)
+    cols_h = np.asarray(s.cols)
+    real_h = np.asarray(s.real)
+    store_old = rows_h.shape[2]
+    # Bucket every real stored block by its *new* tile, in (row, col)
+    # order — the order TiledBSR.from_dense's nonzero scan would produce.
+    per_tile: Dict[Tuple[int, int], List[Tuple[int, int, int]]] = {}
+    for i in range(g_old):
+        for j in range(g_old):
+            for slot in np.nonzero(real_h[i, j])[0]:
+                gbr = i * nbr_old + int(rows_h[i, j, slot])
+                gbc = j * nbc_old + int(cols_h[i, j, slot])
+                src = (i * g_old + j) * store_old + int(slot)
+                key = (gbr // nbr, gbc // nbc)
+                per_tile.setdefault(key, []).append(
+                    (gbr % nbr, gbc % nbc, src))
+    max_nnzb = max((len(v) for v in per_tile.values()), default=0)
+    if capacity == "bucket":
+        cap = bucket_capacity(max_nnzb)
+    elif capacity is None:
+        cap = max_nnzb
+    else:
+        cap = int(capacity)
+        if cap < max_nnzb:
+            raise ValueError(f"capacity {cap} < max tile nnzb {max_nnzb}")
+    store = cap + nbr
+    rows_new = np.zeros((g, g, store), dtype=np.int32)
+    cols_new = np.zeros((g, g, store), dtype=np.int32)
+    src_new = np.full((g, g, store), -1, dtype=np.int64)
+    counts_new = np.zeros((g, g), dtype=np.int32)
+    cov = np.arange(nbr, dtype=np.int32)
+    for i in range(g):
+        for j in range(g):
+            ent = sorted(per_tile.get((i, j), []))
+            counts_new[i, j] = len(ent)
+            r = np.array([e[0] for e in ent], dtype=np.int32)
+            c = np.array([e[1] for e in ent], dtype=np.int32)
+            src = np.array([e[2] for e in ent], dtype=np.int64)
+            # pad to uniform capacity the way BSR.with_capacity does
+            # (repeat the last coordinate, zero block), then merge the
+            # coverage blocks in sorted order like _augment_tile
+            pad = cap - len(ent)
+            last_r = r[-1] if len(ent) else np.int32(0)
+            last_c = c[-1] if len(ent) else np.int32(0)
+            r = np.concatenate([r, np.full(pad, last_r, np.int32), cov])
+            c = np.concatenate([c, np.full(pad, last_c, np.int32),
+                                np.zeros(nbr, np.int32)])
+            src = np.concatenate([src, np.full(pad + nbr, -1, np.int64)])
+            order = np.argsort(r, kind="stable")
+            rows_new[i, j] = r[order]
+            cols_new[i, j] = c[order]
+            src_new[i, j] = src[order]
+    # One device gather moves every block value to its new tile slot: no
+    # host round-trip of block data, no dense materialization.
+    old_flat = t.blocks.reshape(-1, bs, bs)
+    pool = jnp.concatenate(
+        [old_flat, jnp.zeros((1, bs, bs), t.blocks.dtype)])
+    idx = np.where(src_new < 0, old_flat.shape[0], src_new)
+    blocks_new = pool[jnp.asarray(idx.reshape(-1))].reshape(
+        g, g, store, bs, bs)
+    return DistBSR(TiledBSR(
+        blocks=blocks_new, rows=jnp.asarray(rows_new),
+        cols=jnp.asarray(cols_new), counts=jnp.asarray(counts_new),
+        shape=(tm * g, tn * g), block_size=bs, grid_shape=(g, g),
+        capacity=cap, logical_shape=(m, n)))
+
+
+def reshard(h: DistMatrix, g: int, *, capacity="bucket") -> DistMatrix:
+    """Re-tile a handle onto a ``g x g`` grid without a host round-trip.
+
+    The elastic-recovery path: after device loss the surviving mesh gets a
+    smaller grid (``runtime.elastic.choose_grid_shape``) and the live
+    operands must move onto it.  Dense handles re-pad the logical region;
+    BSR handles re-bucket their stored blocks by new-tile coordinates on
+    the host's cached *structure* view (integer index arithmetic only)
+    and move the block *values* with a single device gather — the data
+    plane never leaves the devices and nothing is re-densified.
+
+    ``capacity`` is the rebuilt uniform tile capacity (``"bucket"`` |
+    ``None`` | int, as in :meth:`DistBSR.from_dense`).  Balanced BSR
+    handles are rejected: their permutation is tied to the old grid.
+    Returns a new handle (``h`` itself when ``g`` already matches).
+    """
+    if g < 1:
+        raise ValueError(f"grid size must be >= 1, got {g}")
+    if isinstance(h, DistBSR):
+        if g == h.g:
+            return h
+        return _reshard_bsr(h, g, capacity)
+    if isinstance(h, DistDense):
+        if g == h.g:
+            return h
+        m, n = h.logical_shape
+        return DistDense.from_global(h.data[:m, :n], g)
+    raise TypeError(f"cannot reshard {type(h).__name__}")
 
 
 # ---------------------------------------------------------------------------
@@ -2682,7 +2867,7 @@ def _plan_matmul_impl(a, b, *, algorithm: str = "ring_c", mesh=None,
                 output: str = "dense",
                 sparse_threshold: Optional[float] = None,
                 wire: str = "auto", overlap: str = "auto",
-                validate: str = "off") -> MatmulPlan:
+                validate: str = "off", assignment=None) -> MatmulPlan:
     """Build (or fetch from the shared cache) a plan for ``a @ b``.
 
     ``a`` / ``b`` may be :class:`DistMatrix` handles (preferred — placement
@@ -2738,10 +2923,26 @@ def _plan_matmul_impl(a, b, *, algorithm: str = "ring_c", mesh=None,
     and runs the jaxpr lint.  Verification is memoized per plan, so a
     cache hit revalidates for free; any finding raises
     :class:`repro.analysis.PlanValidationError` with named rule ids.
+
+    ``assignment`` injects a prebuilt :class:`repro.core.schedule.Assignment3D`
+    into a static-planner schedule (steal3d) in place of the plan-time LPT
+    — the elastic-recovery path, where the assignment was rebuilt for a
+    surviving mesh.  It requires an explicit static-planner ``algorithm``
+    (not ``"auto"``), runs ``validate_assignment``'s fail-fast invariant
+    checks inside ``build_steal_plan``, and bypasses the plan cache in
+    both directions (an injected plan is never shared).
     """
     if validate not in ("off", "fast", "full"):
         raise ValueError(f"unknown validate {validate!r}; one of "
                          "('off', 'fast', 'full')")
+    if assignment is not None:
+        if algorithm == "auto" \
+                or REGISTRY.get(algorithm).static_planner is None:
+            raise ValueError(
+                "assignment= requires an explicit algorithm with a static "
+                "planner (steal3d); "
+                f"got algorithm={algorithm!r}")
+        cache = False
     a_h, b_h = _coerce_pair(a, b, g=g, allow_pad=allow_pad)
     overlap = _resolve_overlap(overlap)
     if output not in ("dense", "sparse", "auto"):
@@ -2836,7 +3037,8 @@ def _plan_matmul_impl(a, b, *, algorithm: str = "ring_c", mesh=None,
                      axis_col=axis_col,
                      c_store=sym.store_capacity if sym else 0,
                      overlap=body_overlap)
-    steal = alg.static_planner(a_h, b_h, geom, wire=wire) \
+    steal = alg.static_planner(a_h, b_h, geom, wire=wire,
+                               assignment=assignment) \
         if alg.static_planner is not None else None
     wire_aux = wire_caps = wire_fps = None
     if wire == "packed" and steal is None:

@@ -26,7 +26,8 @@ def _parse():
     p.add_argument("--check", default="all",
                    choices=["all", "spmm", "spgemm", "spgemm_sparse",
                             "dense", "api", "balance", "steal3d", "wire",
-                            "moe", "train_parallel", "obs", "analysis"])
+                            "moe", "train_parallel", "obs", "analysis",
+                            "elastic"])
     p.add_argument("--seed", type=int, default=0)
     return p.parse_args()
 
@@ -390,6 +391,85 @@ def main() -> int:
                    any(d["n"] >= 3 for d in drift.values()))
         check_flag("obs/disabled_is_noop",
                    obs.span("x") is obs.span("y"))
+
+    if args.check == "elastic" or (args.check == "all" and args.devices >= 9):
+        # needs 9 devices: builds its own 3x3 (pre-loss) and 2x2 meshes,
+        # so it is deliberately outside the needs_grid square assertion
+        print("== elastic replanning: drift re-selection + mesh shrink ==")
+        assert args.devices >= 9, "elastic check needs >= 9 devices"
+        import dataclasses as _dc
+
+        from repro import obs
+        from repro.core import roofline
+        from repro.core.bsr import rmat_matrix
+        from repro.runtime.faultinject import (DeviceLoss,
+                                               record_straggler_drift)
+        from repro.runtime.replan import ElasticReplanner, ReplanConfig
+
+        # -- part 1: straggler drift trips a re-fit that flips auto_select
+        a = DistDense.from_global(
+            rng.standard_normal((64, 64)).astype(np.float32), 2)
+        b = DistDense.from_global(
+            rng.standard_normal((64, 32)).astype(np.float32), 2)
+        mesh2 = make_grid_mesh(2)
+        # nominal machine: optimistically fast interconnect -> a
+        # bandwidth-hungry schedule wins at plan time
+        base = _dc.replace(roofline.TPU_V5E, name="v5e-fastnet",
+                           net_bw=roofline.TPU_V5E.net_bw * 100,
+                           hop_latency=1e-9)
+        obs.reset_all()
+        obs.enable(clear=True)
+        api.set_drift_machine(base)
+        try:
+            p0 = api.plan_matmul(a, b, algorithm="auto", machine=base,
+                                 mesh=mesh2)
+            ref = np.asarray(a.data) @ np.asarray(b.data)
+            check("elastic/nominal_result", p0(a, b), ref)
+            # straggling network: measured steps 8x the prediction, on two
+            # algorithm series so the machine re-fit is well conditioned
+            p_alt = api.plan_matmul(a, b, algorithm="summa_bcast",
+                                    mesh=mesh2)
+            record_straggler_drift(p0, factor=8.0, n=4, machine=base)
+            record_straggler_drift(p_alt, factor=8.0, n=4, machine=base)
+            rp = ElasticReplanner(machine=base,
+                                  config=ReplanConfig(drift_ratio=2.0))
+            trips = rp.should_replan()
+            check_flag(f"elastic/drift_trips ({sorted(trips)})",
+                       bool(trips))
+            res = rp.replan(a, b, mesh=mesh2)
+            check_flag(
+                f"elastic/reselect_flips ({p0.algorithm.name} -> "
+                f"{res.algorithm}, evicted={res.evicted})",
+                res.algorithm != p0.algorithm.name and res.evicted > 0)
+            check("elastic/replanned_result", res.plan(a, b), ref)
+
+            # -- part 2: device loss -> grid shrink -> rebuilt steal plan
+            a_d = rmat_matrix(scale=6, edgefactor=8, seed=args.seed)
+            bx = rng.standard_normal((64, 48)).astype(np.float32)
+            a3 = DistBSR.from_dense(a_d, g=3, block_size=4)
+            b3 = DistDense.for_rhs(jnp.asarray(bx), a3)
+            mesh3 = make_grid_mesh(3)
+            p3 = api.plan_matmul(a3, b3, algorithm="steal3d", mesh=mesh3,
+                                 validate="fast")
+            want = a_d @ bx
+            check("elastic/preloss_result", p3(a3, b3), want)
+            loss = DeviceLoss(9, 5, seed=args.seed)
+            rec = rp.recover_from_loss(a3, b3, loss.survivors(),
+                                       mesh=mesh2)
+            check_flag(
+                f"elastic/shrink_3x3_to_2x2 (survivors="
+                f"{loss.survivors()}, g={rec.g}, evicted={rec.evicted})",
+                rec.g == 2 and rec.evicted > 0)
+            check("elastic/recovered_result", rec.plan(rec.a, rec.b), want)
+            snap = obs.registry().snapshot()
+            wanted_metrics = ("replan.triggered", "replan.refits",
+                              "replan.plans_evicted", "replan.recoveries")
+            missing = [k for k in wanted_metrics if k not in snap]
+            check_flag(f"elastic/metrics_recorded (missing={missing})",
+                       not missing)
+        finally:
+            api.set_drift_machine(None)
+            obs.disable()
 
     if args.check in ("all", "train_parallel"):
         print("== data/tensor-parallel train step equivalence ==")

@@ -1,4 +1,7 @@
 from .fault import StragglerDetector, RestartableLoop, PreemptionSignal  # noqa: F401
-from .elastic import choose_mesh_shape  # noqa: F401
+from .elastic import choose_mesh_shape, choose_grid_shape  # noqa: F401
+from .faultinject import (  # noqa: F401
+    StragglerInjector, TransientFailure, DeviceLoss, record_straggler_drift,
+)
 from . import platform  # noqa: F401
 from .platform import set_platform, set_host_device_count  # noqa: F401

@@ -7,9 +7,9 @@ checkpoint manager re-shards state onto the new mesh (see ckpt/checkpoint).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Iterable, Optional, Tuple, Union
 
-__all__ = ["choose_mesh_shape"]
+__all__ = ["choose_mesh_shape", "choose_grid_shape"]
 
 
 def choose_mesh_shape(n_chips: int, *, model_divisors: Tuple[int, ...] = (),
@@ -26,19 +26,45 @@ def choose_mesh_shape(n_chips: int, *, model_divisors: Tuple[int, ...] = (),
             return False
         return all(d % m == 0 for d in model_divisors if d)
 
-    best = None
-    # allow shaving chips (failed nodes) down to 87.5% utilization
+    best = None  # (model, use)
+    # allow shaving chips (failed nodes) down to 87.5% utilization; scan
+    # the whole shave range — a slightly smaller chip count often admits
+    # a much larger model axis (e.g. 250 chips force model<=2, 248 allow 8)
     for use in range(n_chips, max(1, int(n_chips * 0.875)) - 1, -1):
         cands = [m for m in range(1, use + 1) if use % m == 0 and ok_model(m)]
         if not cands:
             continue
         if prefer_model and prefer_model in cands:
-            m = prefer_model
-        else:
-            m = max(cands)
-        best = (use // m, m)
-        break
+            return (use // prefer_model, prefer_model)
+        m = max(cands)
+        if best is None or m > best[0]:
+            best = (m, use)
     if best is None:
         raise ValueError(f"no usable mesh for {n_chips} chips "
                          f"with divisors {model_divisors}")
-    return best
+    m, use = best
+    return (use // m, m)
+
+
+def choose_grid_shape(survivors: Union[int, Iterable[int]], *,
+                      max_g: Optional[int] = None) -> int:
+    """Largest ``g`` such that a g x g matmul grid fits on the survivors.
+
+    The sparse engine's schedules (SUMMA / rings / steal3d) all run on a
+    square ``g x g`` mesh, so after device loss the recovery grid is the
+    largest square that fits the surviving device count.  ``survivors``
+    is either a count or the surviving device-id collection (what
+    :class:`repro.runtime.faultinject.DeviceLoss` yields); ``max_g``
+    optionally caps the result (e.g. at the pre-loss grid size).
+    """
+    n = survivors if isinstance(survivors, int) else len(tuple(survivors))
+    if n < 1:
+        raise ValueError(f"need at least one surviving device, got {n}")
+    g = int(n ** 0.5)
+    while (g + 1) * (g + 1) <= n:   # int(sqrt) can round down under fp error
+        g += 1
+    while g * g > n:
+        g -= 1
+    if max_g is not None:
+        g = min(g, max_g)
+    return max(g, 1)

@@ -51,23 +51,66 @@ class StragglerDetector:
 
 
 class PreemptionSignal:
-    """SIGTERM -> graceful stop flag checked between steps."""
+    """SIGTERM -> graceful stop flag checked between steps.
+
+    Chains the previously installed SIGTERM handler rather than clobbering
+    it, and restores it on `uninstall()` (also the context-manager exit), so
+    two coexisting instances — e.g. the training loop's and the serving
+    engine's — both see the signal and tear down cleanly.
+    """
 
     def __init__(self, install: bool = True):
         self.requested = False
+        self._prev = None
+        self._installed = False
         if install:
-            try:
-                signal.signal(signal.SIGTERM, self._handler)
-            except ValueError:
-                pass  # non-main thread (tests)
+            self.install()
+
+    def install(self) -> bool:
+        """Install the handler; returns False outside the main thread."""
+        if self._installed:
+            return True
+        try:
+            self._prev = signal.signal(signal.SIGTERM, self._handler)
+        except ValueError:
+            return False  # non-main thread (tests)
+        self._installed = True
+        return True
+
+    def uninstall(self) -> None:
+        """Restore whatever SIGTERM handler was active before `install()`."""
+        if not self._installed:
+            return
+        prev = signal.SIG_DFL if self._prev is None else self._prev
+        try:
+            signal.signal(signal.SIGTERM, prev)
+        except ValueError:
+            pass
+        self._installed = False
+        self._prev = None
+
+    def __enter__(self) -> "PreemptionSignal":
+        self.install()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.uninstall()
 
     def _handler(self, signum, frame):
         self.requested = True
+        if callable(self._prev):
+            self._prev(signum, frame)
 
 
 class RestartableLoop:
     """Run `body(step) -> None` for steps [start, total); on exception,
-    call `recover() -> restart_step` and continue.  Bounded retries."""
+    call `recover() -> restart_step` and continue.  Bounded retries.
+
+    `max_restarts` bounds *consecutive* failures: a successful step resets
+    the counter, so transient faults spread across a long job don't
+    accumulate into a spurious kill.  `total_restarts` keeps the lifetime
+    count for reporting.
+    """
 
     def __init__(self, total_steps: int, recover: Callable[[], int],
                  max_restarts: int = 3,
@@ -76,7 +119,8 @@ class RestartableLoop:
         self.recover = recover
         self.max_restarts = max_restarts
         self.on_restart = on_restart
-        self.restarts = 0
+        self.restarts = 0        # consecutive failures since last progress
+        self.total_restarts = 0  # lifetime failure count
 
     def run(self, body: Callable[[int], None], start_step: int = 0):
         step = start_step
@@ -84,10 +128,12 @@ class RestartableLoop:
             try:
                 body(step)
                 step += 1
+                self.restarts = 0
             except (KeyboardInterrupt, SystemExit):
                 raise
             except Exception as e:  # noqa: BLE001 — any node failure
                 self.restarts += 1
+                self.total_restarts += 1
                 if self.restarts > self.max_restarts:
                     raise
                 if self.on_restart:

@@ -58,13 +58,19 @@ class ServeEngine:
                  seed: int = 0, max_batch: int = 4, max_len: int = 64,
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  sparse: bool = False, block_size: int = 8, mesh=None,
-                 cache_dtype=jnp.float32):
+                 cache_dtype=jnp.float32, replanner=None,
+                 replan_budget_s: float = float("inf")):
         if cfg.is_encoder:
             raise ValueError("encoder models have no decode path")
         self.cfg = cfg
         self.max_batch = max_batch
         self.max_len = max_len
         self.sparse = sparse
+        # optional ElasticReplanner (duck-typed: should_replan/refit) —
+        # checked at batch boundaries; see _maybe_replan
+        self.replanner = replanner
+        self.replan_budget_s = replan_budget_s
+        self.replans = 0
         self.params = params if params is not None else \
             tf.init_params(cfg, jax.random.PRNGKey(seed))
         self.batcher = RequestBatcher(cfg, max_len, buckets)
@@ -204,6 +210,40 @@ class ServeEngine:
             self.active[slot].out.append(int(tok_np[slot]))
             self._maybe_finish(slot)
 
+    # ----------------------------------------------------------- replanning
+    def _maybe_replan(self) -> bool:
+        """Drain-and-refit at a batch boundary when the replanner trips.
+
+        In-flight requests decode to completion first so no request ever
+        straddles a plan swap; then the replanner re-fits the machine and
+        evicts the stale plans (they rebuild lazily on the next cache
+        miss).  The drain + refit together are expected to fit in
+        ``replan_budget_s`` — overruns are surfaced as a counter, never
+        an exception, so serving always makes progress.
+        """
+        rp = self.replanner
+        if rp is None:
+            return False
+        trips = rp.should_replan()
+        if not trips:
+            return False
+        t0 = time.perf_counter()
+        with _obs.span("serve.replan", trips=",".join(sorted(trips))) as sp:
+            drained = 0
+            while self.active:
+                self._decode_step()
+                drained += 1
+            rp.refit(trips)
+            dt = sync_elapsed(t0, (self.tokens, self.caches))
+            sp.note(drained_steps=drained, replan_s=dt)
+        reg = _obs.registry()
+        reg.counter("serve.replans").inc()
+        reg.histogram("serve.replan_s").observe(dt)
+        if dt > self.replan_budget_s:
+            reg.counter("serve.replan_budget_exceeded").inc()
+        self.replans += 1
+        return True
+
     # ------------------------------------------------------------------- run
     def run(self) -> Dict[int, np.ndarray]:
         """Serve every queued request to completion; returns rid -> tokens.
@@ -218,6 +258,7 @@ class ServeEngine:
         for req in list(self.batcher._queue):
             m.submitted(req.rid, t0 + req.arrival, req.prompt_len)
         while len(self.batcher) or self.active:
+            self._maybe_replan()
             now = time.perf_counter() - t0
             while len(self.active) < self.max_batch:
                 req = self.batcher.pop(now)

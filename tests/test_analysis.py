@@ -408,11 +408,12 @@ def test_build_steal_plan_assignment_injection(operands):
 def test_source_rule_registry_covers_legacy_families():
     ids = [r.id for r in source_rules.iter_rules()]
     assert len(ids) == len(set(ids))
-    assert len(ids) == len(source_rules.FORBIDDEN_MODULES) + 2
+    assert len(ids) == len(source_rules.FORBIDDEN_MODULES) + 3
     for mod in source_rules.FORBIDDEN_MODULES:
         assert f"source.import.{mod}" in ids
     assert "source.xla-flags-write" in ids
     assert "source.perf-counter-discipline" in ids
+    assert "source.assignment3d-construction" in ids
 
 
 def test_source_rules_list_rules_flag(capsys):

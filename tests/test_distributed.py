@@ -50,3 +50,13 @@ def test_selftest_moe():
 def test_selftest_train_parallel():
     out = _run_selftest(8, "train_parallel")
     assert "SELFTEST PASSED" in out
+
+
+def test_selftest_elastic():
+    """End-to-end recovery: drift-triggered re-selection flips the
+    schedule, and a 3x3 -> 2x2 device-loss shrink rebuilds a validated
+    steal3d plan whose product matches the dense reference."""
+    out = _run_selftest(9, "elastic")
+    assert "SELFTEST PASSED" in out
+    assert "elastic/reselect_flips" in out
+    assert "elastic/shrink_3x3_to_2x2" in out

@@ -135,6 +135,49 @@ def test_dense_engine_matches_reference():
     assert eng.summary()["completed"] == 3
 
 
+def test_engine_replan_drains_without_corrupting_streams():
+    """A replanner tripping mid-run drains in-flight requests, refits
+    once, and every decoded stream still matches the reference — serving
+    degrades gracefully instead of swapping plans under a request."""
+    from repro import obs
+
+    class StubReplanner:
+        def __init__(self):
+            self.checks = 0
+            self.refits = 0
+
+        def should_replan(self):
+            self.checks += 1
+            return ({"ring_c/padded/False": "ratio=4.00"}
+                    if self.checks == 3 else {})
+
+        def refit(self, trips):
+            self.refits += 1
+            return None, {}, 0
+
+    cfg, params = _params("llama3-8b")
+    prompts = _prompts(cfg, (12, 9, 8))
+    rp = StubReplanner()
+    obs.reset_all()
+    obs.enable(clear=True)
+    try:
+        eng = ServeEngine(cfg, params=params, max_batch=2, max_len=MAX_LEN,
+                          replanner=rp)
+        for toks in prompts:
+            eng.submit(toks, max_new_tokens=4)
+        results = eng.run()
+        snap = obs.registry().snapshot()
+    finally:
+        obs.disable()
+    assert rp.refits == 1 and eng.replans == 1
+    assert snap["serve.replans"] == 1.0
+    assert snap["serve.replan_s"]["count"] == 1
+    for rid, toks in enumerate(prompts):
+        np.testing.assert_array_equal(
+            results[rid], _reference(params, cfg, toks, 4),
+            err_msg=f"request {rid}")
+
+
 def test_dense_engine_no_padding_family():
     """Recurrent models serve at exact lengths (padding unsound) and still
     match the reference."""

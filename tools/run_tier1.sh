@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 gate: the pytest line from ROADMAP.md, the API-hygiene guard
-# (source-rule registry), the static plan verifier at 4 devices, and a
-# smoke-level benchmark pass (kernel oracle rows + a scale-8 balanced-
-# tiling run on 16 fake devices).  Extra args are forwarded to pytest.
+# (source-rule registry), the static plan verifier at 4 devices, the
+# elastic replanning/recovery check at 9 devices, and a smoke-level
+# benchmark pass (kernel oracle rows + a scale-8 balanced-tiling run on
+# 16 fake devices).  Extra args are forwarded to pytest.
 #
 #   tools/run_tier1.sh            # full gate
 #   tools/run_tier1.sh -k api     # forward a pytest filter
@@ -13,5 +14,7 @@ PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python tools/check_api.py
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.selftest \
     --devices 4 --check analysis
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m repro.launch.selftest \
+    --devices 9 --check elastic
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.run --smoke
 echo "tier1: OK"
